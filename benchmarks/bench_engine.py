@@ -1,0 +1,61 @@
+"""Microbenchmarks: decode-engine step latency, buffer ops, proxy overhead
+(name, us_per_call, derived)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import REGISTRY
+from repro.core.sample_buffer import SampleBuffer
+from repro.core.types import Sample
+from repro.models import get_api
+from repro.rollout.engine import DecodeEngine
+
+
+def _timeit(fn, n=50, warmup=3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def run() -> None:
+    cfg = dataclasses.replace(
+        REGISTRY["qwen3-4b"].smoke(), num_layers=2, d_model=128, num_heads=4,
+        head_dim=32, num_kv_heads=2, d_ff=256, vocab_size=64)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+
+    for slots in (4, 16, 64):
+        eng = DecodeEngine(api, params, num_slots=slots, max_total_len=64,
+                           eos_id=9999)
+        for i in range(slots):
+            eng.add_request(i, np.asarray([1, 2, 3], np.int32), 60)
+        us = _timeit(eng.step, n=30)
+        emit(f"engine.decode_step.slots{slots}", us,
+             f"us_per_token={us / slots:.1f}")
+
+    buf = SampleBuffer(batch_size=64, alpha=4)
+
+    def put_get():
+        for _ in range(64):
+            buf.try_begin_generation()
+            buf.put(Sample(sample_id=0, prompt_id=0, replica_idx=0,
+                           prompt_tokens=np.zeros(4, np.int32),
+                           response_tokens=np.zeros(4, np.int32),
+                           logprobs=np.zeros(4, np.float32),
+                           version_started=buf.version))
+        buf.get_batch(64)
+        buf.advance_version()
+
+    emit("buffer.put_get_batch64", _timeit(put_get, n=20), "")
+
+
+if __name__ == "__main__":
+    run()

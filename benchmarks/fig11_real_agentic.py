@@ -1,0 +1,54 @@
+"""Fig 11 analogue: REAL pipeline (not simulator) — env-level async +
+redundant environment rollout measured on the actual EnvManagerPool /
+LLMProxy / DecodeEngine stack with latency-injected environments.
+
+The paper measures end-to-end hours on SWE/ALFWorld; here we measure
+wall-clock rollout-step time on CPU with scaled-down latencies, comparing
+exact-capacity env pools against redundant pools under fail-slow injection
+(paper: redundant rollout gives an extra 7-16%).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import emit
+from repro.configs import REGISTRY
+from repro.envs.sim_envs import LatencyEnv
+from repro.launch.pipeline import PipelineSettings, build_agentic_pipeline
+
+
+def model_cfg():
+    return dataclasses.replace(
+        REGISTRY["qwen3-4b"].smoke(), num_layers=2, d_model=64, num_heads=4,
+        head_dim=16, num_kv_heads=2, d_ff=128, vocab_size=64)
+
+
+def run_pool(num_env_groups: int, group_size: int, steps: int = 2):
+    s = PipelineSettings(async_generation_ratio=1, pg_variant="tis",
+                         rollout_batch_size=8, num_slots=8, max_new_tokens=3,
+                         max_seq_len=48, learning_rate=1e-3)
+
+    def make_env(eid):
+        return LatencyEnv(eid, mu=0.03, sigma=0.02, max_steps=3,
+                          p_fail_slow=0.25, fail_slow_factor=6.0)
+
+    pipe = build_agentic_pipeline(model_cfg(), s, make_env=make_env,
+                                  num_env_groups=num_env_groups,
+                                  group_size=group_size, max_env_steps=3)
+    t0 = time.time()
+    stats = pipe.run(num_steps=steps, timeout=300)
+    wall = (time.time() - t0) / max(len(stats), 1)
+    return wall
+
+
+def run() -> None:
+    t_exact = run_pool(4, 2)        # 8 envs == batch 8 (no redundancy)
+    t_red = run_pool(6, 2)          # 12 envs > batch 8 (redundant)
+    emit("fig11.real.exact_capacity.s_per_step", t_exact, "8 envs, batch 8")
+    emit("fig11.real.redundant.s_per_step", t_red,
+         f"12 envs, batch 8; speedup={t_exact / t_red:.2f}")
+
+
+if __name__ == "__main__":
+    run()

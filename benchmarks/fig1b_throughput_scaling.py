@@ -1,0 +1,45 @@
+"""Fig 1b: throughput scaling with GPU count — Async vs Sync-ROLL vs
+Sync-Naive, on Base (~2k mean) and Think (~11k mean) response lengths.
+
+Paper claims: Think — async reaches ~7.6x with 8x GPUs, ~2.1x over
+sync-naive at 128; Base — sync plateaus, async keeps scaling (2.24x at 128).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BASE_LengthS, THINK_LENGTHS, emit, pipeline_base
+from repro.core import simulator as S
+
+GPUS = (16, 32, 64, 128)
+STEPS = 12
+
+
+def run() -> None:
+    for model, sampler in (("base", BASE_LengthS), ("think", THINK_LENGTHS)):
+        ref_throughput = None
+        for g in GPUS:
+            naive = S.simulate_pipeline(
+                np.random.default_rng(0),
+                pipeline_base(gpus=g, mode="sync_naive"), STEPS, sampler)
+            roll = S.simulate_pipeline(
+                np.random.default_rng(0),
+                pipeline_base(gpus=g, mode="sync_queue"), STEPS, sampler)
+            asy = S.simulate_pipeline(
+                np.random.default_rng(0),
+                pipeline_base(gpus=g, mode="async", train_gpus=g // 2,
+                              infer_gpus=g // 2, alpha=2), STEPS, sampler)
+            if ref_throughput is None:
+                ref_throughput = naive.throughput
+            emit(f"fig1b.{model}.g{g}.sync_naive", naive.throughput,
+                 f"rel={naive.throughput / ref_throughput:.2f}")
+            emit(f"fig1b.{model}.g{g}.sync_roll", roll.throughput,
+                 f"rel={roll.throughput / ref_throughput:.2f}")
+            emit(f"fig1b.{model}.g{g}.async", asy.throughput,
+                 f"rel={asy.throughput / ref_throughput:.2f};"
+                 f"x_naive={asy.throughput / naive.throughput:.2f};"
+                 f"util={asy.gen_utilization:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Fig 3a: train/infer GPU allocation sweep at fixed budget (40 GPUs);
+Fig 3b: step time vs rollout batch size, Sync-ROLL vs Async.
+
+Paper claims: 24Infer/16Train is optimal (~2x over sync); step time scales
+~linearly with rollout size with a constant offset; async wins everywhere.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import THINK_LENGTHS, emit, pipeline_base
+from repro.core import simulator as S
+
+STEPS = 10
+
+
+def run() -> None:
+    # --- Fig 3a: allocation sweep, 40 GPUs total
+    total = 40
+    sync = S.simulate_pipeline(np.random.default_rng(0),
+                               pipeline_base(gpus=total, mode="sync_queue"),
+                               STEPS, THINK_LENGTHS)
+    emit("fig3a.sync_roll.step_time", sync.mean_step_time, "40 GPUs shared")
+    best = (None, np.inf)
+    for infer in (8, 16, 24, 32):
+        train = total - infer
+        if train <= 0:
+            continue
+        asy = S.simulate_pipeline(
+            np.random.default_rng(0),
+            pipeline_base(gpus=total, mode="async", train_gpus=train,
+                          infer_gpus=infer, alpha=2), STEPS, THINK_LENGTHS)
+        emit(f"fig3a.async.{infer}infer_{train}train.step_time",
+             asy.mean_step_time,
+             f"speedup_vs_sync={sync.mean_step_time / asy.mean_step_time:.2f}")
+        if asy.mean_step_time < best[1]:
+            best = (infer, asy.mean_step_time)
+    emit("fig3a.best_infer_allocation", best[0],
+         f"step_time={best[1]:.1f}s")
+
+    # --- Fig 3b: rollout batch size sweep
+    for n in (32, 64, 128, 256, 512):
+        sync = S.simulate_pipeline(
+            np.random.default_rng(1),
+            pipeline_base(rollout_batch_size=n, gpus=40, mode="sync_queue"),
+            STEPS, THINK_LENGTHS)
+        asy = S.simulate_pipeline(
+            np.random.default_rng(1),
+            pipeline_base(rollout_batch_size=n, gpus=40, mode="async",
+                          train_gpus=16, infer_gpus=24, alpha=2),
+            STEPS, THINK_LENGTHS)
+        emit(f"fig3b.n{n}.sync_roll.step_time", sync.mean_step_time, "")
+        emit(f"fig3b.n{n}.async.step_time", asy.mean_step_time,
+             f"speedup={sync.mean_step_time / asy.mean_step_time:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,196 @@
+"""Roofline analysis (deliverable g): per (arch x shape x mesh) —
+
+  compute    = FLOPs / (chips x 197 TFLOP/s bf16)
+  memory     = bytes  / (chips x 819 GB/s HBM)
+  collective = collective bytes / (50 GB/s ICI per chip)
+
+Numerators come from two sources, both reported:
+  * HLO: compiled.cost_analysis() from the dry-run JSONs (per-device —
+    NOTE: XLA's cost analysis does not multiply `while` trip counts, so
+    scan-over-layers bodies are counted once; the analytic model corrects
+    for this and the HLO/analytic ratio is reported per row).
+  * analytic: 6*N_active*D (+ attention quadratic terms) and a first-
+    principles HBM-traffic model (params + optimizer + KV-cache streams).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import REGISTRY, SHAPES
+from repro.models import get_api
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+_COLL_KEYS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+# analytic workload model
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg) -> Dict[str, float]:
+    api = get_api(cfg)
+    shapes = jax.eval_shape(api.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = active = embed = 0.0
+    moe_scale = (cfg.num_experts_per_tok / cfg.num_experts) if cfg.is_moe else 1.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        total += n
+        if "embed" in name:
+            embed += n
+            continue
+        if "/moe/w_" in name or name.endswith("moe/w_gate") \
+                or "moe/w_up" in name or "moe/w_down" in name:
+            active += n * moe_scale
+        else:
+            active += n
+    return {"total": total, "active_nonembed": active, "embed": embed}
+
+
+def _attn_layers(cfg):
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        per = sum(1 for k in cfg.block_pattern if k == "attn")
+        groups = cfg.num_layers // len(cfg.block_pattern)
+        return per * groups + sum(
+            1 for k in cfg.block_pattern[: cfg.num_layers
+                                         - groups * len(cfg.block_pattern)]
+            if k == "attn")
+    return cfg.num_layers
+
+
+def analytic_flops(cfg, shape) -> float:
+    """Global model FLOPs per step (MODEL_FLOPS in the deliverable)."""
+    counts = param_counts(cfg)
+    n_act = counts["active_nonembed"]
+    b, s = shape.global_batch, shape.seq_len
+    hq, hd = cfg.num_heads, cfg.resolved_head_dim
+    la = _attn_layers(cfg)
+
+    if shape.kind == "train":
+        tokens = b * s
+        core = 6.0 * n_act * tokens
+        eff_s = min(s, cfg.sliding_window or s)
+        attn = 3.0 * (4.0 * b * s * eff_s * 0.5 * hq * hd) * la
+        return core + attn
+    if shape.kind == "prefill":
+        tokens = b * s
+        eff_s = min(s, cfg.sliding_window or s)
+        return 2.0 * n_act * tokens + 4.0 * b * s * eff_s * 0.5 * hq * hd * la
+    # decode: one token per sequence
+    eff_s = min(s, cfg.sliding_window or s)
+    return 2.0 * n_act * b + 4.0 * b * eff_s * hq * hd * la
+
+
+def analytic_bytes(cfg, shape, cache_bytes: float) -> float:
+    """Global HBM traffic per step (bytes): parameter/optimizer streams +
+    cache streams.  Activation traffic assumed fused/secondary."""
+    counts = param_counts(cfg)
+    n = counts["total"]
+    if shape.kind == "train":
+        # params bf16 r + grads bf16 w + master/m/v fp32 r+w + new params w
+        return 2 * n + 2 * n + 3 * (4 + 4) * n + 2 * n
+    if shape.kind == "prefill":
+        return 2 * n + cache_bytes  # write the cache once
+    # decode: stream weights (active experts only for MoE) + read cache
+    moe_scale = (cfg.num_experts_per_tok / cfg.num_experts) if cfg.is_moe else 1.0
+    # per decoded token every *active* weight is read once
+    w = 2 * (counts["active_nonembed"] + counts["embed"] * 0.01)
+    return w * 1.0 + cache_bytes  # cache read per step
+
+
+def cache_nbytes(cfg, shape) -> float:
+    api = get_api(cfg)
+    tree = jax.eval_shape(lambda: api.init_cache(shape.global_batch, shape.seq_len))
+    total = 0.0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+def _advice(dominant: str, shape_kind: str, arch: str) -> str:
+    if dominant == "collective":
+        return "reduce resharding: align layouts across sharded ops / overlap collectives with compute"
+    if dominant == "memory":
+        if shape_kind == "decode":
+            return "decode is HBM-bound (the paper's premise): shrink KV via GQA/window/quantization or batch more requests per weight read"
+        return "increase arithmetic intensity: larger per-chip batch or fused optimizer"
+    return "compute-bound: good; next lever is MXU utilization (tile alignment) and causal-block skipping"
+
+
+def run() -> None:
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        emit("roofline.error", 0, "no dry-run records; run repro.launch.dryrun")
+        return
+    rows = []
+    for path in files:
+        rec = json.load(open(path))
+        if rec.get("status") != "ok" or "shape" not in rec:
+            continue  # skipped combos / pools-mode records
+        arch, shape_name, mesh = rec["arch"], rec["shape"], rec["mesh"]
+        cfg = REGISTRY[arch]
+        shape = SHAPES[shape_name]
+        chips = rec["devices"]
+
+        model_flops = analytic_flops(cfg, shape)
+        cbytes = cache_nbytes(cfg, shape)
+        model_bytes = analytic_bytes(cfg, shape, cbytes)
+        hlo_flops_dev = rec["flops"]
+        hlo_bytes_dev = rec["bytes_accessed"]
+        coll_dev = sum(rec["collectives"].get(k, 0.0) for k in _COLL_KEYS)
+
+        t_compute = model_flops / (chips * PEAK_FLOPS)
+        t_memory = model_bytes / (chips * HBM_BW)
+        t_coll = coll_dev / ICI_BW
+        terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        ratio = model_flops / max(hlo_flops_dev * chips, 1.0)
+
+        rows.append(dict(arch=arch, shape=shape_name, mesh=mesh, chips=chips,
+                         t_compute=t_compute, t_memory=t_memory, t_coll=t_coll,
+                         dominant=dominant, model_flops=model_flops,
+                         hlo_flops_dev=hlo_flops_dev,
+                         hlo_bytes_dev=hlo_bytes_dev,
+                         flops_ratio=ratio,
+                         peak_gib=rec["memory"]["peak_bytes"] / 2**30,
+                         advice=_advice(dominant, shape.kind, arch)))
+        emit(f"roofline.{arch}.{shape_name}.{mesh}.compute_s", t_compute, "")
+        emit(f"roofline.{arch}.{shape_name}.{mesh}.memory_s", t_memory, "")
+        emit(f"roofline.{arch}.{shape_name}.{mesh}.collective_s", t_coll,
+             f"dominant={dominant};model/hlo_flops={ratio:.2f};"
+             f"peakGiB={rows[-1]['peak_gib']:.1f}")
+
+    out = os.path.join(DRYRUN_DIR, "..", "roofline_table.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    emit("roofline.rows", len(rows), f"table at {os.path.normpath(out)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Table 1: smallest async ratio achieving ~max throughput, swept over
+model size (mu_train), sequence length (length distribution), rollout size.
+
+Paper claims: optimal alpha insensitive to model size (2), increases with
+seq length (1 -> 2), decreases with rollout size (4 -> 2); alpha=2 suffices.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, pipeline_base
+from repro.core import simulator as S
+
+STEPS = 10
+ALPHAS = (0.0, 1.0, 2.0, 4.0, 8.0)
+
+
+def optimal_alpha(make_cfg, sampler, tol=0.05):
+    """Smallest alpha whose throughput is within tol of the best."""
+    tps = {}
+    for a in ALPHAS:
+        cfg = make_cfg(a)
+        res = S.simulate_pipeline(np.random.default_rng(0), cfg, STEPS, sampler)
+        tps[a] = res.throughput
+    best = max(tps.values())
+    for a in ALPHAS:
+        if tps[a] >= (1 - tol) * best:
+            return a, tps
+    return ALPHAS[-1], tps
+
+
+def run() -> None:
+    # model size ~ per-sample train cost (0.6B..8B)
+    for name, mu_t in (("0p6b", 0.08), ("1p7b", 0.2), ("4b", 0.4), ("8b", 0.6)):
+        a, tps = optimal_alpha(
+            lambda al: pipeline_base(mode="async", gpus=40, train_gpus=24,
+                                     infer_gpus=16, alpha=al,
+                                     mu_train_per_sample=mu_t),
+            S.lognormal_lengths(11_000, 0.9))
+        emit(f"table1.model_{name}.opt_alpha", a,
+             f"tp@a={tps[a]:.2f};tp@8={tps[8.0]:.2f}")
+
+    # sequence length (mean response length 4k..32k ~ max len proxy)
+    for name, mean_len in (("4k", 1_000), ("8k", 2_500), ("16k", 5_500),
+                           ("32k", 11_000)):
+        a, tps = optimal_alpha(
+            lambda al: pipeline_base(mode="async", gpus=40, train_gpus=24,
+                                     infer_gpus=16, alpha=al),
+            S.lognormal_lengths(mean_len, 0.9, max_tokens=32_768))
+        emit(f"table1.len_{name}.opt_alpha", a, "")
+
+    # rollout batch size
+    for n in (32, 64, 128, 256):
+        a, tps = optimal_alpha(
+            lambda al: pipeline_base(mode="async", gpus=40, train_gpus=24,
+                                     infer_gpus=16, alpha=al,
+                                     rollout_batch_size=n),
+            S.lognormal_lengths(11_000, 0.9))
+        emit(f"table1.rollout_{n}.opt_alpha", a, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,4 @@
+from repro.algos.advantages import (  # noqa: F401
+    gae, group_normalized_advantage, reward_normalize, sequence_to_token_advantage)
+from repro.algos.off_policy import LossConfig, VARIANTS, policy_loss, kl_k3  # noqa: F401
+from repro.algos.grpo import rl_loss, token_logprobs  # noqa: F401

@@ -1,0 +1,56 @@
+"""Advantage estimation: GAE (PPO) and group-normalized rewards (GRPO, eq. 2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gae(rewards, values, mask, *, gamma: float = 1.0, lam: float = 1.0):
+    """Generalized Advantage Estimation.
+
+    rewards/values/mask: (B, S).  values[:, t] = V(s_t); bootstrap value 0 at
+    episode end (token-level MDP with terminal at last response token).
+    Returns (advantages, returns), both (B, S).
+    """
+    b, s = rewards.shape
+    next_values = jnp.concatenate([values[:, 1:], jnp.zeros((b, 1), values.dtype)], axis=1)
+    deltas = (rewards + gamma * next_values * mask - values) * mask
+
+    def step(carry, xs):
+        delta_t, mask_t = xs
+        adv = delta_t + gamma * lam * mask_t * carry
+        return adv, adv
+
+    _, advs = jax.lax.scan(step, jnp.zeros((b,), rewards.dtype),
+                           (deltas.T, mask.T), reverse=True)
+    advantages = advs.T * mask
+    return advantages, advantages + values
+
+
+def group_normalized_advantage(rewards, group_size: int, *, eps: float = 1e-6):
+    """GRPO (eq. 2): A_i = (r_i - mean_group) / std_group.
+
+    rewards: (N,) with N = num_prompts * group_size, grouped contiguously.
+    Returns per-sequence advantages (N,).
+    """
+    n = rewards.shape[0]
+    assert n % group_size == 0, (n, group_size)
+    g = rewards.reshape(n // group_size, group_size)
+    mean = g.mean(axis=1, keepdims=True)
+    std = g.std(axis=1, keepdims=True)
+    return ((g - mean) / (std + eps)).reshape(n)
+
+
+def sequence_to_token_advantage(seq_adv, mask):
+    """Broadcast per-sequence advantage over response tokens. mask: (B,S)."""
+    return seq_adv[:, None] * mask
+
+
+def reward_normalize(rewards, mode: str = "group", group_size: int = 1):
+    if mode == "none":
+        return rewards
+    if mode == "group":
+        return group_normalized_advantage(rewards, group_size)
+    if mode == "batch":
+        return (rewards - rewards.mean()) / (rewards.std() + 1e-6)
+    raise ValueError(mode)

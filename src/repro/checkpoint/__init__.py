@@ -1,0 +1,2 @@
+from repro.checkpoint.store import (  # noqa: F401
+    latest_checkpoint, load_tree, save_checkpoint, save_tree)

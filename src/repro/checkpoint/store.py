@@ -1,0 +1,69 @@
+"""Checkpointing: msgpack-serialized param/optimizer pytrees.
+
+Layout: <dir>/step_<n>/{tree.msgpack, meta.json}.  Arrays are stored as
+(dtype, shape, raw bytes); bfloat16 round-trips via uint16 views.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(x)
+    if arr.dtype == jnp.bfloat16:
+        return {"dtype": "bfloat16", "shape": list(arr.shape),
+                "data": arr.view(np.uint16).tobytes()}
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _unpack_leaf(d: dict):
+    if d["dtype"] == "bfloat16":
+        arr = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return jnp.asarray(arr.view(jnp.bfloat16))
+    arr = np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"])
+    return jnp.asarray(arr)
+
+
+def save_tree(path: str, tree: Any, *, meta: Optional[dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = [_pack_leaf(l) for l in leaves]
+    with open(os.path.join(path, "tree.msgpack"), "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"treedef": str(treedef), **(meta or {})}, f)
+
+
+def load_tree(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shape/dtype validated)."""
+    with open(os.path.join(path, "tree.msgpack"), "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    assert len(payload) == len(leaves_like), "checkpoint/tree mismatch"
+    leaves = []
+    for d, ref in zip(payload, leaves_like):
+        arr = _unpack_leaf(d)
+        assert tuple(arr.shape) == tuple(ref.shape), (arr.shape, ref.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Any, **meta) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    save_tree(path, state, meta={"step": step, **meta})
+    return path
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    return os.path.join(ckpt_dir, steps[-1]) if steps else None

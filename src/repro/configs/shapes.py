@@ -1,0 +1,95 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+`input_specs` never allocates: everything is jax.ShapeDtypeStruct (weak-type
+correct, shardable), following the shannon/kernels dry-run pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def model_inputs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """Forward-pass inputs (tokens + modality-stub embeddings)."""
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        text = seq - cfg.num_image_tokens
+        assert text > 0
+        out["tokens"] = _sds((batch, text), jnp.int32)
+        out["patches"] = _sds((batch, cfg.num_image_tokens, cfg.d_model), cfg.dtype)
+    elif cfg.family == "audio":
+        out["tokens"] = _sds((batch, seq), jnp.int32)
+        out["frames"] = _sds((batch, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+    else:
+        out["tokens"] = _sds((batch, seq), jnp.int32)
+    return out
+
+
+def train_inputs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """RL train_step inputs: rollout tokens + per-token RL fields."""
+    out = model_inputs(cfg, batch, seq)
+    tok_seq = out["tokens"].shape[1]
+    f32 = jnp.float32
+    out.update(
+        mask=_sds((batch, tok_seq), f32),           # response-token mask
+        advantages=_sds((batch, tok_seq), f32),
+        old_logprobs=_sds((batch, tok_seq), f32),   # behaviour policy (rollout engine)
+        prox_logprobs=_sds((batch, tok_seq), f32),  # proximal policy (decoupled PPO)
+        ref_logprobs=_sds((batch, tok_seq), f32),   # reference policy (KL term)
+        is_positive=_sds((batch,), f32),            # TOPR T+/T- split
+    )
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    return {
+        "token": _sds((batch,), jnp.int32),
+        "pos": _sds((batch,), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """All host-provided step inputs for (arch, shape) — ShapeDtypeStructs only.
+
+    The decode cache itself is produced via `jax.eval_shape` in the launcher
+    (it is carried state, not a host input).
+    """
+    if shape.kind == "train":
+        return train_inputs(cfg, shape.global_batch, shape.seq_len)
+    if shape.kind == "prefill":
+        return model_inputs(cfg, shape.global_batch, shape.seq_len)
+    if shape.kind == "decode":
+        return decode_inputs(cfg, shape.global_batch)
+    raise ValueError(shape.kind)
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (see DESIGN.md skip notes)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: long_500k decode skipped (DESIGN.md §long_500k)"
+    return True, ""

@@ -1,0 +1,14 @@
+"""ROLL Flash core: the paper's contribution.
+
+Fine-grained parallelism (LLMProxy, queue scheduling, prompt replication,
+EnvManager pools, redundant env rollout) + rollout-train decoupling
+(SampleBuffer with per-sample asynchronous-ratio freshness, AsyncController
+3-phase weight sync), plus the theoretical model (Propositions 1 & 2) and
+the discrete-event simulator behind the paper-figure benchmarks.
+"""
+from repro.core.sample_buffer import SampleBuffer, StaleSampleError  # noqa: F401
+from repro.core.llm_proxy import LLMProxy, InferenceEngine  # noqa: F401
+from repro.core.async_controller import AsyncController, StepStats  # noqa: F401
+from repro.core.types import (  # noqa: F401
+    GenerationRequest, GenerationResult, RolloutTask, Sample, Trajectory, Turn)
+from repro.core import simulator, theory  # noqa: F401

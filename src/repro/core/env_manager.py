@@ -1,0 +1,163 @@
+"""EnvManager: per-environment event loop for agentic rollouts (§4.2, §5.2).
+
+Each EnvManager mediates between its BaseEnv and the shared LLMProxy:
+reset -> (action <- LLM) -> step -> ... -> reward -> SampleBuffer.  Running
+many EnvManagers concurrently against one proxy realizes *environment-level
+asynchronous rollout*: while one trajectory waits on its environment, the
+decode slots serve other trajectories.
+
+``EnvManagerPool`` implements *redundant environment rollout*:
+``num_env_groups x group_size`` managers run concurrently, the pool stops
+at ``target_trajectories``, and stragglers/failed envs are abandoned —
+fail-slow and fail-stop environments never gate the step.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core.llm_proxy import LLMProxy
+from repro.core.sample_buffer import SampleBuffer
+from repro.core.types import (GenerationResult, RolloutTask, Trajectory, Turn,
+                              next_uid)
+from repro.envs.base import BaseEnv
+
+
+class EnvManager(threading.Thread):
+    """One environment's rollout loop."""
+
+    def __init__(self, env: BaseEnv, proxy: LLMProxy, pool: "EnvManagerPool",
+                 *, env_id: int, group_id: int, max_steps: int,
+                 max_new_tokens: int):
+        super().__init__(name=f"env_manager_{env_id}", daemon=True)
+        self.env = env
+        self.proxy = proxy
+        self.pool = pool
+        self.env_id = env_id
+        self.group_id = group_id
+        self.max_steps = max_steps
+        self.max_new_tokens = max_new_tokens
+        self._result: Optional[GenerationResult] = None
+        self._result_ready = threading.Event()
+
+    # LLM call: submit to the shared proxy, park this manager (NOT the GPU —
+    # other managers' requests keep the decode slots busy meanwhile).
+    def _llm(self, obs_tokens: np.ndarray, version: int) -> Optional[GenerationResult]:
+        self._result_ready.clear()
+        task = RolloutTask(task_id=next_uid(), prompt_id=self.env_id,
+                           replica_idx=0, prompt_tokens=obs_tokens,
+                           max_new_tokens=self.max_new_tokens,
+                           group_id=self.group_id)
+
+        def cb(res: GenerationResult) -> None:
+            self._result = res
+            self._result_ready.set()
+
+        self.proxy.generate(task, version, cb)
+        while not self._result_ready.wait(timeout=0.1):
+            if self.pool.stopped:
+                self.proxy.abort(task.task_id)
+                return None
+        return self._result
+
+    def run(self) -> None:
+        while not self.pool.stopped:
+            version = self.pool.buffer.begin_generation(timeout=0.1)
+            if version is None:
+                if self.pool.buffer.closed:
+                    return
+                continue
+            traj = Trajectory(traj_id=next_uid(), env_id=self.env_id,
+                              group_id=self.group_id, version_started=version)
+            try:
+                obs = self.env.reset()
+            except Exception:
+                traj.failed = True
+                self.pool.buffer.reclaim(1)
+                continue
+            aborted = False
+            for _ in range(self.max_steps):
+                res = self._llm(np.asarray(obs, np.int32), version)
+                if res is None or res.aborted:
+                    aborted = True
+                    break
+                action = np.asarray(res.tokens, np.int32)
+                try:
+                    obs, reward, done, info = self.env.step(action)
+                except Exception:
+                    traj.failed = True
+                    break
+                traj.turns.append(Turn(observation_tokens=np.asarray(obs, np.int32),
+                                       action_tokens=action,
+                                       logprobs=np.asarray(res.logprobs, np.float32)))
+                if done:
+                    traj.done = True
+                    traj.reward = float(reward)
+                    break
+            if aborted or traj.failed or not traj.done:
+                self.pool.buffer.reclaim(1)
+                continue
+            sample = traj.to_sample()
+            try:
+                self.pool.buffer.put(sample)
+            except Exception:
+                self.pool.buffer.reclaim(1)
+                continue
+            self.pool.on_trajectory(traj)
+
+
+class EnvManagerPool:
+    def __init__(self, make_env: Callable[[int], BaseEnv], proxy: LLMProxy,
+                 buffer: SampleBuffer, *, num_env_groups: int, group_size: int,
+                 max_steps: int, max_new_tokens: int,
+                 target_trajectories: Optional[int] = None):
+        self.buffer = buffer
+        self.proxy = proxy
+        self.num_env_groups = num_env_groups
+        self.group_size = group_size
+        self.target = target_trajectories
+        self._stop = threading.Event()
+        self._count = 0
+        self._count_lock = threading.Lock()
+        self.managers: List[EnvManager] = []
+        eid = 0
+        for g in range(num_env_groups):
+            for _ in range(group_size):
+                env = make_env(eid)
+                self.managers.append(EnvManager(
+                    env, proxy, self, env_id=eid, group_id=g,
+                    max_steps=max_steps, max_new_tokens=max_new_tokens))
+                eid += 1
+
+    @property
+    def total_envs(self) -> int:
+        return self.num_env_groups * self.group_size
+
+    @property
+    def stopped(self) -> bool:
+        return self._stop.is_set()
+
+    @property
+    def trajectories_collected(self) -> int:
+        with self._count_lock:
+            return self._count
+
+    def on_trajectory(self, traj: Trajectory) -> None:
+        with self._count_lock:
+            self._count += 1
+            # redundant env rollout: stop at the target, abandon stragglers
+            if self.target is not None and self._count >= self.target:
+                self._stop.set()
+
+    def start(self) -> "EnvManagerPool":
+        for m in self.managers:
+            m.start()
+        return self
+
+    def stop(self, join: bool = True) -> None:
+        self._stop.set()
+        if join:
+            for m in self.managers:
+                m.join(timeout=10)

@@ -1,0 +1,180 @@
+"""LLMProxy: command-driven event loop orchestrating an inference engine.
+
+Mirrors the paper's §4.2 LLMProxy exactly:
+
+* **Step-wise inference** — each loop iteration advances the engine by a
+  single decode step over the whole active batch (continuous batching).
+* **Post-processing** — completed requests immediately trigger the
+  registered callback with the result.
+* **Process commands** — ADD enqueues new requests; ABORT interrupts
+  running requests and returns partials for reclamation into the
+  SampleBuffer (recompute/resume under a newer policy version).
+
+The proxy owns the engine thread-exclusively: all cross-thread interaction
+goes through the command queue.  ``suspend``/``resume``/``update_weights``
+implement the AsyncController's 3-phase weight synchronization.
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Protocol
+
+from repro.core.types import GenerationRequest, GenerationResult, RolloutTask
+
+
+class InferenceEngine(Protocol):
+    """Slot-based continuous-batching engine (see rollout/engine.py)."""
+
+    @property
+    def num_free_slots(self) -> int: ...
+
+    def add_request(self, request_id: int, prompt_tokens, max_new_tokens: int) -> None: ...
+
+    def abort(self, request_id: int) -> GenerationResult | Any: ...
+
+    def step(self) -> List[Any]:
+        """One decode step; returns finished (request_id, tokens, logprobs)."""
+        ...
+
+    def update_weights(self, params) -> None: ...
+
+
+class LLMProxy:
+    def __init__(self, engine: InferenceEngine, *, name: str = "llm_proxy"):
+        self.engine = engine
+        self.name = name
+        self._commands: "queue.Queue[tuple]" = queue.Queue()
+        self._pending: collections.deque[GenerationRequest] = collections.deque()
+        self._active: Dict[int, GenerationRequest] = {}
+        self._suspended = threading.Event()
+        self._resumed = threading.Event()
+        self._resumed.set()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._idle_sleep = 0.0005
+        self.steps_executed = 0
+        self.requests_completed = 0
+        self.requests_aborted = 0
+
+    # ------------------------------------------------------------- commands
+    def generate(self, task: RolloutTask, version: int,
+                 callback: Callable[[GenerationResult], None]) -> int:
+        req = GenerationRequest(request_id=task.task_id, task=task,
+                                version_started=version, callback=callback)
+        self._commands.put(("ADD", req))
+        return req.request_id
+
+    def abort(self, request_id: int) -> None:
+        self._commands.put(("ABORT", request_id))
+
+    def abort_stale(self, min_version: int) -> None:
+        """ABORT every in-flight request initiated before min_version."""
+        self._commands.put(("ABORT_STALE", min_version))
+
+    def suspend(self) -> None:
+        """Pause the loop after the current engine step (weight-sync phase 1)."""
+        self._resumed.clear()
+        self._suspended.wait()
+
+    def update_weights(self, params) -> None:
+        """Weight-sync phase 2 (call between suspend and resume)."""
+        assert self._suspended.is_set(), "update_weights requires suspend()"
+        self.engine.update_weights(params)
+
+    def resume(self) -> None:
+        """Weight-sync phase 3."""
+        self._suspended.clear()
+        self._resumed.set()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._resumed.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+
+    # ------------------------------------------------------------ the loop
+    def start(self) -> "LLMProxy":
+        self._thread = threading.Thread(target=self.run_loop, name=self.name,
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def run_loop(self) -> None:
+        while not self._stop.is_set():
+            if not self._resumed.is_set():
+                # suspend handshake: acknowledge, park until resume()
+                self._suspended.set()
+                self._resumed.wait()
+                self._suspended.clear()
+            if self._stop.is_set():
+                break
+            self._process_commands()
+            self._admit_pending()
+            if not self._active:
+                time.sleep(self._idle_sleep)
+                continue
+            finished = self.engine.step()
+            self.steps_executed += 1
+            for rid, tokens, logprobs in finished:
+                req = self._active.pop(rid, None)
+                if req is None:
+                    continue
+                self.requests_completed += 1
+                req.callback(GenerationResult(
+                    request_id=rid, task=req.task, tokens=tokens,
+                    logprobs=logprobs, version_started=req.version_started))
+
+    def _process_commands(self) -> None:
+        while True:
+            try:
+                op, arg = self._commands.get_nowait()
+            except queue.Empty:
+                return
+            if op == "ADD":
+                self._pending.append(arg)
+            elif op == "ABORT":
+                self._do_abort(arg)
+            elif op == "ABORT_STALE":
+                stale = [rid for rid, r in self._active.items()
+                         if r.version_started < arg]
+                for rid in stale:
+                    self._do_abort(rid)
+                # pending (not yet started) requests simply re-tag: they will
+                # start under the current weights.
+                for r in self._pending:
+                    r.version_started = max(r.version_started, arg)
+
+    def _do_abort(self, request_id: int) -> None:
+        req = self._active.pop(request_id, None)
+        if req is not None:
+            partial = self.engine.abort(request_id)
+            self.requests_aborted += 1
+            req.callback(GenerationResult(
+                request_id=request_id, task=req.task,
+                tokens=getattr(partial, "tokens", None),
+                logprobs=getattr(partial, "logprobs", None),
+                version_started=req.version_started,
+                aborted=True, partial=True))
+        else:
+            # not yet admitted: drop from pending
+            self._pending = collections.deque(
+                r for r in self._pending if r.request_id != request_id)
+
+    def _admit_pending(self) -> None:
+        while self._pending and self.engine.num_free_slots > 0:
+            req = self._pending.popleft()
+            self.engine.add_request(req.request_id, req.task.prompt_tokens,
+                                    req.task.max_new_tokens)
+            self._active[req.request_id] = req
+
+    # ------------------------------------------------------------- metrics
+    @property
+    def num_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._pending)

@@ -1,0 +1,233 @@
+"""Queue scheduling + prompt replication + dynamic filtering (§5.1).
+
+Two entry points:
+
+* ``collect_rollout`` — one synchronous rollout step under queue scheduling:
+  stream group completions, reward immediately, filter, top up redundant
+  prompts, ABORT leftovers once the batch qualifies.  (Sync-ROLL mode.)
+* ``RolloutProducer`` — the continuous producer thread for the asynchronous
+  architecture: keeps the SampleBuffer saturated subject to the freshness
+  capacity (1+alpha)B, assembling GRPO groups before publishing.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable, Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.llm_proxy import LLMProxy
+from repro.core.sample_buffer import SampleBuffer
+from repro.core.types import GenerationResult, RolloutTask, Sample, next_uid
+
+
+def expand_tasks(prompt_id: int, prompt_tokens, group_size: int,
+                 max_new_tokens: int, *, replicate: bool) -> List[RolloutTask]:
+    """Prompt replication (`num_return_sequences_expand`): one prompt with G
+    candidates becomes G independently schedulable tasks; without it the
+    whole group is a single task (one engine request decoding G sequences)."""
+    gid = next_uid()
+    if replicate:
+        return [RolloutTask(task_id=next_uid(), prompt_id=prompt_id,
+                            replica_idx=i, prompt_tokens=prompt_tokens,
+                            max_new_tokens=max_new_tokens, group_id=gid)
+                for i in range(group_size)]
+    return [RolloutTask(task_id=next_uid(), prompt_id=prompt_id, replica_idx=0,
+                        prompt_tokens=prompt_tokens,
+                        max_new_tokens=max_new_tokens, group_id=gid,
+                        meta={"num_return_sequences": group_size})]
+
+
+class _GroupCollector:
+    """Assemble per-prompt groups, reward on completion, apply the filter."""
+
+    def __init__(self, group_size: int, reward_fn: Callable,
+                 filter_fn: Optional[Callable] = None):
+        self.group_size = group_size
+        self.reward_fn = reward_fn
+        self.filter_fn = filter_fn
+        self._partial: Dict[int, List[Sample]] = collections.defaultdict(list)
+        self.done_groups: "collections.deque[List[Sample]]" = collections.deque()
+        self.filtered_groups = 0
+        self.lock = threading.Lock()
+        self.event = threading.Event()
+
+    def add(self, result: GenerationResult, version: int) -> None:
+        if result.aborted:
+            return
+        task = result.task
+        sample = Sample(
+            sample_id=next_uid(), prompt_id=task.prompt_id,
+            replica_idx=task.replica_idx, prompt_tokens=task.prompt_tokens,
+            response_tokens=np.asarray(result.tokens),
+            logprobs=np.asarray(result.logprobs),
+            version_started=result.version_started, group_id=task.group_id,
+            meta=dict(task.meta),
+        )
+        # reward immediately on completion (overlaps with ongoing generation)
+        sample.reward = float(self.reward_fn(sample))
+        sample.is_positive = sample.reward > 0
+        with self.lock:
+            group = self._partial[task.group_id]
+            group.append(sample)
+            if len(group) == self.group_size:
+                del self._partial[task.group_id]
+                if self.filter_fn is not None and not self.filter_fn(group):
+                    self.filtered_groups += 1
+                else:
+                    self.done_groups.append(group)
+        self.event.set()
+
+
+def variance_filter(group: List[Sample]) -> bool:
+    """Dynamic-filtering default: drop zero intra-group reward variance."""
+    rewards = [s.reward for s in group]
+    return float(np.var(rewards)) > 0.0
+
+
+def collect_rollout(
+    proxy: LLMProxy,
+    prompts: Iterator[tuple[int, np.ndarray]],
+    *,
+    num_groups: int,
+    group_size: int,
+    max_new_tokens: int,
+    reward_fn: Callable[[Sample], float],
+    replicate: bool = True,
+    filter_fn: Optional[Callable] = None,
+    max_additional_running_prompts: int = 0,
+    version: int = 0,
+    timeout: float = 300.0,
+) -> List[Sample]:
+    """One rollout step (queue scheduling): returns num_groups qualifying
+    groups, flattened. Extra in-flight generations are ABORTed on return."""
+    collector = _GroupCollector(group_size, reward_fn, filter_fn)
+    submitted: List[int] = []
+
+    def submit_one_prompt():
+        pid, toks = next(prompts)
+        for task in expand_tasks(pid, toks, group_size, max_new_tokens,
+                                 replicate=replicate):
+            submitted.append(task.task_id)
+            proxy.generate(task, version, lambda r: collector.add(r, version))
+
+    for _ in range(num_groups + max_additional_running_prompts):
+        submit_one_prompt()
+
+    out: List[Sample] = []
+    import time as _time
+    deadline = _time.monotonic() + timeout
+    while len(out) < num_groups * group_size:
+        collector.event.wait(timeout=0.05)
+        collector.event.clear()
+        while collector.done_groups and len(out) < num_groups * group_size:
+            out.extend(collector.done_groups.popleft())
+        # top up for filtered-out groups so the step always completes
+        with collector.lock:
+            need_more = collector.filtered_groups
+            collector.filtered_groups = 0
+        for _ in range(need_more):
+            submit_one_prompt()
+        if _time.monotonic() > deadline:
+            raise TimeoutError("collect_rollout timed out")
+    # ABORT everything still running — the step has what it needs
+    for tid in submitted:
+        proxy.abort(tid)
+    return out
+
+
+class RolloutProducer(threading.Thread):
+    """Continuous RLVR producer for the async architecture.
+
+    Each candidate generation claims a freshness slot from the buffer before
+    starting (begin_generation), guaranteeing occupancy <= (1+alpha)B.
+    Completed groups are rewarded and published sample-by-sample.
+    """
+
+    def __init__(self, proxy: LLMProxy, buffer: SampleBuffer,
+                 prompts: Iterator[tuple[int, np.ndarray]], *,
+                 group_size: int, max_new_tokens: int,
+                 reward_fn: Callable[[Sample], float],
+                 replicate: bool = True, name: str = "rollout_producer"):
+        super().__init__(name=name, daemon=True)
+        self.proxy = proxy
+        self.buffer = buffer
+        self.prompts = prompts
+        self.group_size = group_size
+        self.max_new_tokens = max_new_tokens
+        self.reward_fn = reward_fn
+        self.replicate = replicate
+        self._stop = threading.Event()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def _on_result(self, result: GenerationResult) -> None:
+        task = result.task
+        if result.aborted:
+            if self.buffer.closed or self._stop.is_set():
+                self.buffer.reclaim(1)
+                return
+            # ABORT -> resume: the partial response is NOT wasted.  The
+            # decoded prefix becomes part of the prompt of a resumed task
+            # (KV recomputed under the new weights at prefill); its original
+            # behaviour-policy logprobs are kept — exactly what IS-based
+            # correctors need — and the sample is re-initiated at the
+            # current version, keeping the already-claimed freshness slot.
+            partial = np.asarray(result.tokens) if result.tokens is not None \
+                else np.zeros((0,), np.int32)
+            done = task.meta.get("resumed_tokens", np.zeros((0,), np.int32))
+            lps = task.meta.get("resumed_logprobs", np.zeros((0,), np.float32))
+            plp = np.asarray(result.logprobs) if result.logprobs is not None \
+                else np.zeros((0,), np.float32)
+            resumed = RolloutTask(
+                task_id=next_uid(), prompt_id=task.prompt_id,
+                replica_idx=task.replica_idx,
+                prompt_tokens=np.concatenate(
+                    [np.asarray(task.prompt_tokens, np.int32),
+                     partial.astype(np.int32)]),
+                max_new_tokens=max(1, task.max_new_tokens - len(partial)),
+                group_id=task.group_id,
+                meta={
+                    **{k: v for k, v in task.meta.items()
+                       if not k.startswith("resumed_")},
+                    "orig_prompt_len": task.meta.get(
+                        "orig_prompt_len", len(np.asarray(task.prompt_tokens))),
+                    "resumed_tokens": np.concatenate([done, partial]),
+                    "resumed_logprobs": np.concatenate([lps, plp]),
+                })
+            self.proxy.generate(resumed, self.buffer.version, self._on_result)
+            return
+        prefix_t = task.meta.get("resumed_tokens", np.zeros((0,), np.int32))
+        prefix_l = task.meta.get("resumed_logprobs", np.zeros((0,), np.float32))
+        opl = task.meta.get("orig_prompt_len",
+                            len(np.asarray(task.prompt_tokens)))
+        sample = Sample(
+            sample_id=next_uid(), prompt_id=task.prompt_id,
+            replica_idx=task.replica_idx,
+            prompt_tokens=np.asarray(task.prompt_tokens, np.int32)[:opl],
+            response_tokens=np.concatenate(
+                [prefix_t.astype(np.int32), np.asarray(result.tokens, np.int32)]),
+            logprobs=np.concatenate(
+                [prefix_l.astype(np.float32), np.asarray(result.logprobs, np.float32)]),
+            version_started=result.version_started, group_id=task.group_id)
+        sample.reward = float(self.reward_fn(sample))
+        sample.is_positive = sample.reward > 0
+        self.buffer.put(sample)
+
+    def run(self) -> None:
+        while not self._stop.is_set() and not self.buffer.closed:
+            version = self.buffer.begin_generation(timeout=0.1)
+            if version is None:
+                continue
+            try:
+                pid, toks = next(self.prompts)
+            except StopIteration:
+                self.buffer.reclaim(1)
+                return
+            task = RolloutTask(task_id=next_uid(), prompt_id=pid,
+                               replica_idx=0, prompt_tokens=toks,
+                               max_new_tokens=self.max_new_tokens,
+                               group_id=pid)
+            self.proxy.generate(task, version, self._on_result)

@@ -1,0 +1,105 @@
+"""Shared dataclasses for the ROLL Flash pipeline."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, List, Optional
+
+import numpy as np
+
+_uid = itertools.count()
+
+
+def next_uid() -> int:
+    return next(_uid)
+
+
+@dataclasses.dataclass
+class RolloutTask:
+    """One schedulable unit of generation (after prompt replication, one
+    task == one candidate response; without it, one task == a whole group)."""
+    task_id: int
+    prompt_id: int
+    replica_idx: int                 # which of the G candidates
+    prompt_tokens: Any               # np.ndarray int32
+    max_new_tokens: int
+    group_id: int = -1
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Sample:
+    """A finished (prompt, response) pair flowing through the SampleBuffer."""
+    sample_id: int
+    prompt_id: int
+    replica_idx: int
+    prompt_tokens: Any               # np.ndarray int32 (P,)
+    response_tokens: Any             # np.ndarray int32 (R,)
+    logprobs: Any                    # np.ndarray f32 (R,) behaviour-policy logprobs
+    reward: Optional[float] = None
+    version_started: int = 0         # policy version that *initiated* generation
+    version_finished: int = 0
+    group_id: int = -1
+    is_positive: bool = False
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def response_len(self) -> int:
+        return int(np.asarray(self.response_tokens).shape[0])
+
+
+@dataclasses.dataclass
+class Turn:
+    observation_tokens: Any
+    action_tokens: Any
+    logprobs: Any
+    env_latency: float = 0.0
+
+
+@dataclasses.dataclass
+class Trajectory:
+    """Agentic rollout: multi-turn env interaction."""
+    traj_id: int
+    env_id: int
+    group_id: int
+    turns: List[Turn] = dataclasses.field(default_factory=list)
+    reward: Optional[float] = None
+    version_started: int = 0
+    version_finished: int = 0
+    done: bool = False
+    failed: bool = False
+
+    def to_sample(self) -> Sample:
+        prompt = np.concatenate([np.asarray(t.observation_tokens) for t in self.turns]) \
+            if self.turns else np.zeros((0,), np.int32)
+        resp = np.concatenate([np.asarray(t.action_tokens) for t in self.turns]) \
+            if self.turns else np.zeros((0,), np.int32)
+        lps = np.concatenate([np.asarray(t.logprobs) for t in self.turns]) \
+            if self.turns else np.zeros((0,), np.float32)
+        return Sample(
+            sample_id=next_uid(), prompt_id=self.env_id, replica_idx=0,
+            prompt_tokens=prompt, response_tokens=resp, logprobs=lps,
+            reward=self.reward, version_started=self.version_started,
+            version_finished=self.version_finished, group_id=self.group_id,
+            is_positive=bool(self.reward and self.reward > 0),
+        )
+
+
+@dataclasses.dataclass
+class GenerationRequest:
+    """In-flight request inside the LLMProxy / engine."""
+    request_id: int
+    task: RolloutTask
+    version_started: int
+    callback: Callable[["GenerationResult"], None]
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    request_id: int
+    task: RolloutTask
+    tokens: Any                      # np int32 (R,)
+    logprobs: Any                    # np f32 (R,)
+    version_started: int
+    aborted: bool = False
+    partial: bool = False

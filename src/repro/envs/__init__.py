@@ -1,0 +1,2 @@
+from repro.envs.base import BaseEnv  # noqa: F401
+from repro.envs.sim_envs import GridTargetEnv, LatencyEnv  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.eval.passk import EvalResult, evaluate_passk, pass_at_k_estimator  # noqa: F401

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the rollout/training hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling), validated
+in interpret mode against the pure-jnp oracle in ref.py; ops.py is the
+dispatching jit'd wrapper.
+"""
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.decode_attention import decode_attention  # noqa: F401
+from repro.kernels.rwkv6_scan import rwkv6_scan  # noqa: F401
+from repro.kernels.rglru_scan import rglru_scan  # noqa: F401

@@ -1,0 +1,103 @@
+"""Pallas TPU decode attention: one query token vs. a long KV cache.
+
+This is the rollout engine's inner loop — the memory-bandwidth-bound op that
+makes decoding unscalable (the paper's motivation for async).  The kernel
+streams the KV cache through VMEM in (block_k, d) tiles, online-softmax
+accumulating into a (G, d) scratch tile per kv-head (G = GQA group size,
+padded to the 8-row sublane minimum).
+
+Grid: (batch, kv_head, kv_blocks) — kv innermost for scratch carry.
+Length masking is positional (lengths ref in SMEM), so one compiled kernel
+serves every slot fill level of the continuous-batching engine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, block_k: int, num_kv_blocks: int, window):
+    bi = pl.program_id(0)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, d)
+    k = k_ref[0, 0].astype(jnp.float32)          # (block_k, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    d = q.shape[-1]
+    length = len_ref[bi]
+
+    logits = jax.lax.dot_general(q * (d ** -0.5), k,
+                                 (((1,), (1,)), ((), ())))  # (G, block_k)
+    pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    mask = pos < length
+    if window is not None:
+        mask &= pos >= (length - window)
+    logits = jnp.where(mask, logits, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p.astype(v.dtype), v)
+    m_scr[...] = m_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(q, k, v, lengths, *, window=None, block_k: int = 512,
+                     interpret: bool = False):
+    """q: (B, H, D); k/v: (B, S, KV, D); lengths: (B,) int32.
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    assert s % block_k == 0, (s, block_k)
+    nk = s // block_k
+    g_pad = max(8, g)  # sublane minimum
+
+    qg = q.reshape(b, kv, g, d)
+    if g_pad != g:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
+    # (B, S, KV, D) -> (B, KV, S, D) tile-friendly layout
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               num_kv_blocks=nk, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g_pad, d), lambda bb, hh, kj: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bb, hh, kj: (bb, hh, kj, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bb, hh, kj: (bb, hh, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g_pad, d), lambda bb, hh, kj: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, 1), jnp.float32),
+            pltpu.VMEM((g_pad, 1), jnp.float32),
+            pltpu.VMEM((g_pad, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kt, vt)
+    return out[:, :, :g, :].reshape(b, h, d)

@@ -1,0 +1,125 @@
+"""Pallas TPU flash attention (prefill): GQA + causal + sliding window.
+
+Grid: (batch, q_head, q_blocks, kv_blocks) with kv_blocks innermost so the
+online-softmax running state (m, l, acc) lives in VMEM scratch across the
+kv sweep for a fixed output tile.  Block shapes are MXU-aligned
+(block_q x head_dim and block_k x head_dim, multiples of 128 columns); the
+(S, S) score matrix is never materialised — VMEM holds one
+(block_q, block_k) tile of logits at a time.
+
+Causal/window masking is positional via broadcasted_iota on the global
+indices; fully-masked kv tiles still execute in the baseline (documented
+roofline overhead — see EXPERIMENTS.md §Perf for the pruned variant).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, causal: bool, window, softcap,
+                  num_kv_blocks: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level mask pruning: a fully-masked (qi, kj) tile contributes
+    # nothing — skip its two MXU dots entirely.  For causal attention this
+    # halves kernel FLOPs; with a sliding window it prunes to the band.
+    if causal or window is not None:
+        needed = jnp.asarray(True)
+        if causal:
+            needed = jnp.logical_and(
+                needed, kj * block_k <= qi * block_q + block_q - 1)
+        if window is not None:
+            needed = jnp.logical_and(
+                needed, (kj + 1) * block_k - 1 >= qi * block_q - window + 1)
+        guard = pl.when(needed)
+    else:
+        guard = lambda f: f()  # dense attention: every tile is needed
+
+    @guard
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)      # (block_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)      # (block_k, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        d = q.shape[-1]
+
+        logits = jax.lax.dot_general(q * (d ** -0.5), k,
+                                     (((1,), (1,)), ((), ())))  # (bq, bk)
+        if softcap is not None:
+            logits_c = softcap * jnp.tanh(logits / softcap)
+        else:
+            logits_c = logits
+
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+        k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        mask = jnp.ones_like(logits, dtype=jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        logits_m = jnp.where(mask, logits_c, _NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, logits_m.max(axis=-1, keepdims=True))
+        p = jnp.exp(logits_m - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p.astype(v.dtype), v)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    softcap=None, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, H, S, D); k/v: (B, KV, S, D). Returns (B, H, S, D)."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq, nk = s // block_q, s // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, softcap=softcap, num_kv_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bb, hh, qi, kj: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bb, hh, qi, kj, g=g: (bb, hh // g, kj, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bb, hh, qi, kj, g=g: (bb, hh // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, hh, qi, kj: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

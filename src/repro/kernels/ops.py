@@ -1,0 +1,58 @@
+"""Jit'd kernel entry points with backend dispatch.
+
+``use_pallas`` selects the Pallas TPU kernels (interpret=True on CPU —
+the kernel bodies execute in Python for correctness validation); the
+default XLA path is what pjit lowers in the dry-run (Pallas kernels do not
+lower on the CPU placeholder backend, and on a real TPU fleet you would
+flip the flag per-op after profiling).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.rglru_scan import rglru_scan as _rglru_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    use_pallas=False, block_q=128, block_k=128):
+    if use_pallas:
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             softcap=softcap, block_q=block_q, block_k=block_k,
+                             interpret=not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+
+
+def decode_attention(q, k, v, lengths, *, window=None, use_pallas=False,
+                     block_k=512):
+    if use_pallas:
+        return _decode_pallas(q, k, v, lengths, window=window,
+                              block_k=min(block_k, k.shape[1]),
+                              interpret=not _on_tpu())
+    return ref.decode_attention_ref(q, k, v, lengths, window=window)
+
+
+def rwkv6_scan(r, k, v, w, u, state, *, use_pallas=False, block_t=128):
+    if use_pallas:
+        bt = min(block_t, r.shape[1])
+        return _rwkv6_pallas(r, k, v, w, u, state, block_t=bt,
+                             interpret=not _on_tpu())
+    return ref.rwkv6_scan_ref(r, k, v, w, u, state)
+
+
+def rglru_scan(a, b, h0, *, use_pallas=False, block_t=256, block_w=512):
+    if use_pallas:
+        return _rglru_pallas(a, b, h0, block_t=min(block_t, a.shape[1]),
+                             block_w=block_w, interpret=not _on_tpu())
+    return ref.rglru_scan_ref(a, b, h0)

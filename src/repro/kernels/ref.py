@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
+    """q: (B, H, S, D); k/v: (B, KV, S, D); GQA via H % KV == 0.
+    Returns (B, H, S, D), accumulation in fp32."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qf = q.astype(jnp.float32).reshape(b, kv, g, s, d) * (d ** -0.5)
+    logits = jnp.einsum("bkgqd,bktd->bkgqt", qf, k.astype(jnp.float32))
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqt,bktd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, window=None):
+    """Single-token GQA decode. q: (B, H, D); k/v: (B, S, KV, D);
+    lengths: (B,) number of valid cache entries (positions 0..len-1).
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qf = q.astype(jnp.float32).reshape(b, kv, g, d) * (d ** -0.5)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32))
+    pos = jnp.arange(s)[None, :]
+    mask = pos < lengths[:, None]
+    if window is not None:
+        mask &= pos >= (lengths[:, None] - window)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state):
+    """RWKV-6 WKV recurrence. r/k/v/w: (B, T, H, D); u: (H, D);
+    state: (B, H, D, D) fp32. Returns (y (B,T,H,D) fp32, new_state)."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                      # (B, H, D)
+        a = kt[..., :, None] * vt[..., None, :]   # (B, H, D, D)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[..., :, None] * a)
+        s = wt[..., :, None] * s + a
+        return s, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, wf))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def rglru_scan_ref(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t. a/b: (B, T, W) fp32; h0: (B, W) fp32.
+    Returns (hs (B,T,W), h_last)."""
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    af = a.astype(jnp.float32).transpose(1, 0, 2)
+    bf = b.astype(jnp.float32).transpose(1, 0, 2)
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32), (af, bf))
+    return hs.transpose(1, 0, 2), h_last

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence h_t = a_t h_{t-1} + b_t.
+
+Elementwise over the width axis, sequential over time: grid
+(batch, width_blocks, time_chunks), time innermost carrying the (1, block_w)
+state in VMEM scratch.  Within a chunk, a log2(block_t) Blelloch-style
+doubling pass would be possible; the baseline uses the straightforward
+fori_loop (the op is bandwidth-bound: 2 loads + 1 store per element, so the
+sequential loop already sits at the roofline for realistic widths).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hout_ref, h_scr, *,
+                  block_t: int, num_t_blocks: int):
+    tj = pl.program_id(2)
+
+    @pl.when(tj == 0)
+    def _init():
+        h_scr[...] = h0_ref[...]
+
+    def step(t, _):
+        h = a_ref[0, t] * h_scr[0] + b_ref[0, t]
+        y_ref[0, t] = h
+        h_scr[0] = h
+        return 0
+
+    jax.lax.fori_loop(0, block_t, step, 0)
+
+    @pl.when(tj == num_t_blocks - 1)
+    def _finalize():
+        hout_ref[...] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_w", "interpret"))
+def rglru_scan(a, b, h0, *, block_t: int = 256, block_w: int = 512,
+               interpret: bool = False):
+    """a/b: (B, T, W); h0: (B, W). Returns (hs (B, T, W) fp32, h_last)."""
+    bsz, t, w = a.shape
+    assert t % block_t == 0, (t, block_t)
+    block_w = min(block_w, w)
+    assert w % block_w == 0, (w, block_w)
+    nt, nw = t // block_t, w // block_w
+
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    kernel = functools.partial(_rglru_kernel, block_t=block_t, num_t_blocks=nt)
+    io_spec = pl.BlockSpec((1, block_t, block_w), lambda bb, wi, tj: (bb, tj, wi))
+    h_spec = pl.BlockSpec((1, block_w), lambda bb, wi, tj: (bb, wi))
+    hs, h_last = pl.pallas_call(
+        kernel,
+        grid=(bsz, nw, nt),
+        in_specs=[io_spec, io_spec, h_spec],
+        out_specs=[io_spec, h_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, t, w), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, w), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(af, bf, h0.astype(jnp.float32))
+    return hs, h_last

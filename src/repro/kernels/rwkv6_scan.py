@@ -1,0 +1,85 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence (data-dependent decay).
+
+The (D, D) per-head state lives in VMEM scratch and is carried across time
+chunks; the grid is (batch, head, time_chunks) with time innermost.  Within
+a chunk, the recurrence is a fori_loop of rank-1 updates — sequential by
+construction (the decay w_t depends on position t's input), which is the
+TPU-native adaptation of RWKV's CUDA kernel: instead of one thread per
+channel, whole (D, D) outer products ride the VPU per step, and the
+sequential axis is chunked so HBM traffic is tiled through VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+                state_scr, *, block_t: int, num_t_blocks: int):
+    tj = pl.program_id(2)
+
+    @pl.when(tj == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0]
+
+    u = u_ref[0]  # (D,)
+
+    def step(t, _):
+        rt = r_ref[0, 0, t]            # (D,)
+        kt = k_ref[0, 0, t]
+        vt = v_ref[0, 0, t]
+        wt = w_ref[0, 0, t]
+        s = state_scr[...]             # (D, D)
+        a = kt[:, None] * vt[None, :]  # rank-1 update
+        y = ((s + u[:, None] * a) * rt[:, None]).sum(axis=0)
+        y_ref[0, 0, t] = y
+        state_scr[...] = wt[:, None] * s + a
+        return 0
+
+    jax.lax.fori_loop(0, block_t, step, 0)
+
+    @pl.when(tj == num_t_blocks - 1)
+    def _finalize():
+        sout_ref[0, 0] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def rwkv6_scan(r, k, v, w, u, state, *, block_t: int = 128,
+               interpret: bool = False):
+    """r/k/v/w: (B, T, H, D); u: (H, D); state: (B, H, D, D) fp32.
+    Returns (y (B, T, H, D) fp32, new_state)."""
+    b, t, h, d = r.shape
+    assert t % block_t == 0, (t, block_t)
+    nt = t // block_t
+
+    # (B, T, H, D) -> (B, H, T, D)
+    rt, kt, vt, wt = (x.transpose(0, 2, 1, 3).astype(jnp.float32)
+                      for x in (r, k, v, w))
+    u2 = u.astype(jnp.float32)
+
+    kernel = functools.partial(_wkv_kernel, block_t=block_t, num_t_blocks=nt)
+    io_spec = pl.BlockSpec((1, 1, block_t, d), lambda bb, hh, tj: (bb, hh, tj, 0))
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nt),
+        in_specs=[
+            io_spec, io_spec, io_spec, io_spec,
+            pl.BlockSpec((1, d), lambda bb, hh, tj: (hh, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda bb, hh, tj: (bb, hh, 0, 0)),
+        ],
+        out_specs=[
+            io_spec,
+            pl.BlockSpec((1, 1, d, d), lambda bb, hh, tj: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u2, state.astype(jnp.float32))
+    return y.transpose(0, 2, 1, 3), s_out

@@ -1,0 +1,46 @@
+"""Production mesh construction + rollout/train pool partitioning.
+
+Everything here is a FUNCTION — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """TPU v5e: one pod = 16x16 = 256 chips (data, model); two pods add a
+    leading `pod` axis (pure DP across the cross-pod DCI)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Degenerate 1x1 mesh over the local device (tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def split_rollout_train_pools(*, train_chips: int, infer_chips: int,
+                              model_parallel: int = 16) -> Tuple[Mesh, Mesh]:
+    """Rollout-train decoupling at the resource level (paper Fig 3a: e.g.
+    16Train24Infer): partition the device list into two disjoint meshes.
+
+    The trainer mesh is (train_chips/model, model); the rollout mesh is
+    (infer_chips/model, model) — weight sync is a device_put of the param
+    tree from one submesh to the other (ICI transfers under XLA).
+    """
+    devs = np.asarray(jax.devices())
+    assert train_chips + infer_chips <= devs.size, (
+        f"need {train_chips + infer_chips} devices, have {devs.size}")
+    assert train_chips % model_parallel == 0 and infer_chips % model_parallel == 0
+    train_devs = devs[:train_chips].reshape(train_chips // model_parallel,
+                                            model_parallel)
+    infer_devs = devs[train_chips:train_chips + infer_chips].reshape(
+        infer_chips // model_parallel, model_parallel)
+    return (Mesh(train_devs, ("data", "model")),
+            Mesh(infer_devs, ("data", "model")))

@@ -1,0 +1,148 @@
+"""Pipeline assembly: wire models + engine + proxy + buffer + controller.
+
+This is the host-level composition root used by `launch/train.py`, the
+examples, and the integration tests.  Everything is config-driven, mirroring
+the paper's appendix-A YAML (async_generation_ratio, pg_variant,
+rollout_batch_size, num_return_sequences, actor_train/actor_infer split...).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+from repro.algos import LossConfig
+from repro.core.async_controller import AsyncController
+from repro.core.env_manager import EnvManagerPool
+from repro.core.llm_proxy import LLMProxy
+from repro.core.sample_buffer import SampleBuffer
+from repro.core.scheduler import RolloutProducer
+from repro.data.dataset import ArithmeticTask, EOS
+from repro.models import ModelConfig, get_api
+from repro.rewards.verifier import ArithmeticVerifier
+from repro.rollout.engine import DecodeEngine
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import HostTrainer, TrainerConfig
+
+
+@dataclasses.dataclass
+class PipelineSettings:
+    """The paper's launch-config surface (appendix A.1 naming)."""
+    async_generation_ratio: float = 1.0    # 0 => Sync
+    pg_variant: str = "ppo"
+    rollout_batch_size: int = 16           # samples per train step
+    num_return_sequences_in_group: int = 4
+    is_num_return_sequences_expand: bool = True  # prompt replication
+    max_new_tokens: int = 12
+    max_seq_len: int = 32
+    num_slots: int = 8                     # decode slots (infer "GPUs")
+    minibatches: int = 1
+    ppo_epochs: int = 1
+    adv_estimator: str = "grpo"            # grpo (paper default) | gae (critic)
+    kl_beta: float = 0.0
+    learning_rate: float = 3e-3
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RLVRPipeline:
+    settings: PipelineSettings
+    trainer: HostTrainer
+    engine: DecodeEngine
+    proxy: LLMProxy
+    buffer: SampleBuffer
+    producer: RolloutProducer
+    controller: AsyncController
+
+    def run(self, num_steps: int, timeout: float = 600.0):
+        self.proxy.start()
+        self.producer.start()
+        try:
+            return self.controller.train(num_steps, timeout=timeout)
+        finally:
+            self.shutdown()
+
+    def shutdown(self):
+        self.producer.stop()
+        self.buffer.close()
+        self.proxy.stop()
+
+
+def build_rlvr_pipeline(model_cfg: ModelConfig, s: PipelineSettings,
+                        *, task: Optional[ArithmeticTask] = None,
+                        reward_fn: Optional[Callable] = None) -> RLVRPipeline:
+    task = task or ArithmeticTask(seed=s.seed)
+    reward_fn = reward_fn or ArithmeticVerifier(task)
+    api = get_api(model_cfg)
+
+    loss_cfg = LossConfig(pg_variant=s.pg_variant, kl_beta=s.kl_beta)
+    opt_cfg = OptConfig(learning_rate=s.learning_rate, warmup_steps=5)
+    tcfg = TrainerConfig(max_seq_len=s.max_seq_len,
+                         group_size=s.num_return_sequences_in_group,
+                         minibatches=s.minibatches, ppo_epochs=s.ppo_epochs,
+                         adv_estimator=s.adv_estimator)
+    trainer = HostTrainer(api, jax.random.PRNGKey(s.seed), loss_cfg, opt_cfg, tcfg)
+
+    engine = DecodeEngine(api, trainer.get_weights(), num_slots=s.num_slots,
+                          max_total_len=s.max_seq_len, eos_id=EOS, seed=s.seed)
+    proxy = LLMProxy(engine)
+    alpha = s.async_generation_ratio
+    buffer = SampleBuffer(batch_size=s.rollout_batch_size, alpha=alpha)
+    producer = RolloutProducer(
+        proxy, buffer,
+        task.prompt_stream(group_size=s.num_return_sequences_in_group),
+        group_size=s.num_return_sequences_in_group,
+        max_new_tokens=s.max_new_tokens, reward_fn=reward_fn,
+        replicate=s.is_num_return_sequences_expand)
+    controller = AsyncController(buffer, [proxy], trainer.train_on_samples,
+                                 trainer.get_weights, alpha=alpha)
+    return RLVRPipeline(s, trainer, engine, proxy, buffer, producer, controller)
+
+
+@dataclasses.dataclass
+class AgenticPipeline:
+    trainer: HostTrainer
+    engine: DecodeEngine
+    proxy: LLMProxy
+    buffer: SampleBuffer
+    pool: EnvManagerPool
+    controller: AsyncController
+
+    def run(self, num_steps: int, timeout: float = 600.0):
+        self.proxy.start()
+        self.pool.start()
+        try:
+            return self.controller.train(num_steps, timeout=timeout)
+        finally:
+            self.shutdown()
+
+    def shutdown(self):
+        self.pool.stop(join=False)
+        self.buffer.close()
+        self.proxy.stop()
+
+
+def build_agentic_pipeline(model_cfg: ModelConfig, s: PipelineSettings, *,
+                           make_env: Callable, num_env_groups: int,
+                           group_size: int, max_env_steps: int = 8) -> AgenticPipeline:
+    api = get_api(model_cfg)
+    loss_cfg = LossConfig(pg_variant=s.pg_variant, kl_beta=s.kl_beta)
+    opt_cfg = OptConfig(learning_rate=s.learning_rate, warmup_steps=5)
+    tcfg = TrainerConfig(max_seq_len=s.max_seq_len, group_size=group_size,
+                         minibatches=s.minibatches, ppo_epochs=s.ppo_epochs,
+                         adv_estimator=s.adv_estimator)
+    trainer = HostTrainer(api, jax.random.PRNGKey(s.seed), loss_cfg, opt_cfg, tcfg)
+    engine = DecodeEngine(api, trainer.get_weights(), num_slots=s.num_slots,
+                          max_total_len=s.max_seq_len, eos_id=EOS, seed=s.seed)
+    proxy = LLMProxy(engine)
+    buffer = SampleBuffer(batch_size=s.rollout_batch_size,
+                          alpha=s.async_generation_ratio)
+    pool = EnvManagerPool(make_env, proxy, buffer,
+                          num_env_groups=num_env_groups, group_size=group_size,
+                          max_steps=max_env_steps,
+                          max_new_tokens=s.max_new_tokens)
+    controller = AsyncController(buffer, [proxy], trainer.train_on_samples,
+                                 trainer.get_weights,
+                                 alpha=s.async_generation_ratio)
+    return AgenticPipeline(trainer, engine, proxy, buffer, pool, controller)

@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.api import ModelAPI, get_api  # noqa: F401

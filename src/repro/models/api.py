@@ -1,0 +1,87 @@
+"""Uniform model API across families.
+
+Everything downstream (trainer, rollout engine, dry-run launcher) talks to
+models only through this facade:
+
+    api = get_api(cfg)
+    params = api.init(key)
+    logits, aux = api.apply(params, batch)                 # train forward
+    logits, cache = api.prefill(params, batch, cache)      # fill caches
+    logits, cache = api.decode_step(params, token, pos, cache)
+    cache = api.init_cache(batch_size, max_len)
+
+`batch` is a dict; which keys exist depends on family:
+    tokens          (B, S) int32          all families
+    frames          (B, T, D)             audio (stubbed frontend output)
+    patches         (B, P, D)             vlm   (stubbed vision embeddings)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    apply: Callable[..., Any]        # (params, batch, remat=, moe_mode=) -> (logits, aux)
+    prefill: Callable[..., Any]      # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable[..., Any]  # (params, token, pos, cache) -> (logits, cache)
+    init_cache: Callable[..., Any]   # (batch, max_len) -> cache
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "audio":
+        def init(key):
+            return encdec.init_encdec(key, cfg)
+
+        def apply(params, batch, *, remat=False, moe_mode="ep",
+                  return_features=False):
+            return encdec.encdec_apply(params, cfg, batch["frames"], batch["tokens"],
+                                       remat=remat, return_features=return_features)
+
+        def prefill(params, batch, cache, *, moe_mode="ep"):
+            del moe_mode  # enc-dec backbone is dense
+            return encdec.encdec_prefill(params, cfg, batch["frames"], batch["tokens"], cache)
+
+        def decode_step(params, token, pos, cache, *, moe_mode="ep"):
+            del moe_mode
+            return encdec.encdec_decode_step(params, cfg, token, pos, cache)
+
+        def init_cache(batch, max_len):
+            return encdec.init_dec_cache(cfg, batch, max_len, cfg.encoder_frames)
+
+        return ModelAPI(cfg, init, apply, prefill, decode_step, init_cache)
+
+    # decoder-only families (dense / moe / ssm / hybrid / vlm)
+    def init(key):
+        return transformer.init_lm(key, cfg)
+
+    def apply(params, batch, *, remat=False, moe_mode="ep",
+              return_features=False):
+        return transformer.lm_apply(params, cfg, batch["tokens"],
+                                    prefix_embeds=batch.get("patches"),
+                                    remat=remat, moe_mode=moe_mode,
+                                    return_features=return_features)
+
+    def prefill(params, batch, cache, *, moe_mode="ep"):
+        return transformer.lm_prefill(params, cfg, batch["tokens"], cache,
+                                      prefix_embeds=batch.get("patches"),
+                                      moe_mode=moe_mode,
+                                      valid=batch.get("valid"))
+
+    def decode_step(params, token, pos, cache, *, moe_mode="ep"):
+        return transformer.lm_decode_step(params, cfg, token, pos, cache,
+                                          moe_mode=moe_mode)
+
+    def init_cache(batch, max_len):
+        extra = cfg.num_image_tokens if cfg.family == "vlm" else 0
+        return transformer.init_cache(cfg, batch, max_len + extra)
+
+    return ModelAPI(cfg, init, apply, prefill, decode_step, init_cache)

@@ -1,0 +1,280 @@
+"""GQA attention: full-sequence (train/prefill), decode-step, cross-attention.
+
+Design notes
+------------
+* KV caches are statically shaped ``(B, S_max, n_kv, head_dim)`` plus an
+  int32 position map ``(B, S_max)`` (−1 = empty).  Sliding-window archs
+  allocate ``S_max = window`` and write at ``pos % S_max`` (ring buffer);
+  the position map makes masking uniform across full and ring caches.
+* Full-sequence attention uses an online-softmax scan over KV blocks
+  (flash-style in pure jnp) so prefill at 32k never materialises the
+  (S, S) score matrix.  Small sequences take the direct einsum path.
+* GQA is expressed by reshaping queries to (B, S, n_kv, group, head_dim);
+  KV heads are never repeated in memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module
+from repro.models.config import ModelConfig
+
+_DIRECT_PATH_MAX_SEQ = 2048  # below this, materialise scores directly
+_KV_BLOCK = 1024
+
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    hd = cfg.resolved_head_dim
+    p = {
+        "wq": module.dense_init(ks[0], cfg.d_model, cfg.q_dim, dt),
+        "wk": module.dense_init(ks[1], cfg.d_model, cfg.kv_dim, dt),
+        "wv": module.dense_init(ks[2], cfg.d_model, cfg.kv_dim, dt),
+        "wo": module.dense_init(ks[3], cfg.q_dim, cfg.d_model, dt),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array    # (B, S_max, n_kv, head_dim)
+    v: jax.Array    # (B, S_max, n_kv, head_dim)
+    pos: jax.Array  # (B, S_max) int32, -1 = empty
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, *, window: Optional[int] = None) -> KVCache:
+    w = window if window is not None else cfg.sliding_window
+    s = min(max_len, w) if w is not None else max_len
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return KVCache(
+        k=jnp.zeros((batch, s, cfg.num_kv_heads, hd), dt),
+        v=jnp.zeros((batch, s, cfg.num_kv_heads, hd), dt),
+        pos=jnp.full((batch, s), -1, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# core attend
+# ---------------------------------------------------------------------------
+
+def _soft_cap(logits, cap):
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def _attend_direct(q, k, v, q_pos, kv_pos, kv_valid, *, window, softcap):
+    """q: (B,Sq,KV,G,hd); k/v: (B,Skv,KV,hd). Positions int32.
+
+    Materialises the score tensor — only for short sequences / decode.
+    """
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqkgd,btkd->bkgqt", q.astype(jnp.float32) * scale, k.astype(jnp.float32))
+    logits = _soft_cap(logits, softcap)
+    mask = kv_valid[:, None, None, None, :] & (kv_pos[:, None, None, None, :] <= q_pos[:, None, None, :, None])
+    if window is not None:
+        mask &= (q_pos[:, None, None, :, None] - kv_pos[:, None, None, None, :]) < window
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", probs.astype(v.dtype), v)
+    return out
+
+
+_Q_CHUNK = 2048
+
+
+def _attend_blockwise(q, k, v, q_pos, kv_pos, kv_valid, **kwargs):
+    """Two-level memory-efficient attention.
+
+    Outer: lax.map over query chunks (rematerialized — flash-style backward
+    recomputes each chunk's KV sweep instead of saving S x S residuals).
+    Inner: online-softmax scan over KV blocks.  Peak live logits are
+    (B, H, q_chunk, block_k) instead of (B, H, S, block_k) — at 32k this is
+    the difference between ~1 TiB and a few GiB per device (§Perf iter 1).
+    """
+    b, sq, nkv, g, hd = q.shape
+    if sq <= _Q_CHUNK:
+        return _attend_kv_scan(q, k, v, q_pos, kv_pos, kv_valid, **kwargs)
+    nqc = -(-sq // _Q_CHUNK)
+    pad = nqc * _Q_CHUNK - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    qc = q.reshape(b, nqc, _Q_CHUNK, nkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    pc = q_pos.reshape(b, nqc, _Q_CHUNK).transpose(1, 0, 2)
+
+    def body(chunk):
+        qi, pi = chunk
+        return _attend_kv_scan(qi, k, v, pi, kv_pos, kv_valid, **kwargs)
+
+    out = jax.lax.map(jax.checkpoint(body, prevent_cse=False), (qc, pc))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nqc * _Q_CHUNK, nkv, g, hd)
+    return out[:, :sq]
+
+
+def _attend_kv_scan(q, k, v, q_pos, kv_pos, kv_valid, *, window, softcap, block=_KV_BLOCK):
+    """Online-softmax scan over KV blocks. Same field order as _attend_direct."""
+    b, sq, nkv, g, hd = q.shape
+    skv = k.shape[1]
+    nblk = -(-skv // block)
+    pad = nblk * block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad)), constant_values=False)
+
+    kb = k.reshape(b, nblk, block, nkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, block, nkv, hd).transpose(1, 0, 2, 3, 4)
+    pb = kv_pos.reshape(b, nblk, block).transpose(1, 0, 2)
+    mb = kv_valid.reshape(b, nblk, block).transpose(1, 0, 2)
+
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32) * scale
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kj, vj, pj, vmj = blk
+        logits = jnp.einsum("bqkgd,btkd->bkgqt", qf, kj.astype(jnp.float32))
+        logits = _soft_cap(logits, softcap)
+        mask = vmj[:, None, None, None, :] & (pj[:, None, None, None, :] <= q_pos[:, None, None, :, None])
+        if window is not None:
+            mask &= (q_pos[:, None, None, :, None] - pj[:, None, None, None, :]) < window
+        logits = jnp.where(mask, logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bkgqt,btkd->bkgqd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, nkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, nkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, nkv, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb, mb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,Sq,KV,G,hd)
+
+
+def attend(q, k, v, q_pos, kv_pos, kv_valid, *, window=None, softcap=None):
+    if k.shape[1] <= _DIRECT_PATH_MAX_SEQ:
+        return _attend_direct(q, k, v, q_pos, kv_pos, kv_valid, window=window, softcap=softcap)
+    return _attend_blockwise(q, k, v, q_pos, kv_pos, kv_valid, window=window, softcap=softcap)
+
+
+# ---------------------------------------------------------------------------
+# layer-level entry points
+# ---------------------------------------------------------------------------
+
+def _project_q(p, cfg: ModelConfig, x, positions, *, rope=True):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    if cfg.qk_norm and "q_norm" in p:
+        q = module.rmsnorm_head(p["q_norm"], q, cfg.norm_eps)
+    if rope:
+        q = module.apply_rope(q, positions, cfg.rope_theta)
+    return q.reshape(b, s, cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads, hd)
+
+
+def _project_kv(p, cfg: ModelConfig, x, positions, *, rope=True):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    k = (x @ p["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm and "k_norm" in p:
+        k = module.rmsnorm_head(p["k_norm"], k, cfg.norm_eps)
+    if rope:
+        k = module.apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def self_attention(p, cfg: ModelConfig, x, positions, *, causal=True, window="cfg"):
+    """Full-sequence self-attention. x: (B,S,D); positions: (B,S) int32."""
+    b, s, _ = x.shape
+    w = cfg.sliding_window if window == "cfg" else window
+    q = _project_q(p, cfg, x, positions)
+    k, v = _project_kv(p, cfg, x, positions)
+    kv_valid = jnp.ones((b, s), bool)
+    q_pos = positions if causal else jnp.full_like(positions, jnp.iinfo(jnp.int32).max)
+    out = attend(q, k, v, q_pos, positions, kv_valid, window=w, softcap=cfg.attn_logit_softcap)
+    return out.reshape(b, s, cfg.q_dim) @ p["wo"]
+
+
+def prefill_attention(p, cfg: ModelConfig, x, positions, cache: KVCache, *,
+                      window="cfg", valid=None):
+    """Causal self-attention that also writes the KV cache.
+
+    Requires cache S_max >= S for full caches; ring caches keep the last
+    `window` tokens.  `valid` (B,S) masks right-padded prompt slots: invalid
+    positions are excluded from attention and written with pos=-1.
+    """
+    b, s, _ = x.shape
+    w = cfg.sliding_window if window == "cfg" else window
+    q = _project_q(p, cfg, x, positions)
+    k, v = _project_kv(p, cfg, x, positions)
+    kv_valid = jnp.ones((b, s), bool) if valid is None else valid
+    smax = cache.k.shape[1]
+    idx = positions % smax  # (B,S)
+    bidx = jnp.arange(b)[:, None]
+    write_pos = jnp.where(kv_valid, positions, -1)
+    new_cache = KVCache(
+        k=cache.k.at[bidx, idx].set(k),
+        v=cache.v.at[bidx, idx].set(v),
+        pos=cache.pos.at[bidx, idx].set(write_pos),
+    )
+    out = attend(q, k, v, positions, positions, kv_valid, window=w, softcap=cfg.attn_logit_softcap)
+    return out.reshape(b, s, cfg.q_dim) @ p["wo"], new_cache
+
+
+def decode_attention(p, cfg: ModelConfig, x, pos, cache: KVCache, *, window="cfg"):
+    """One-token decode. x: (B,1,D); pos: (B,) int32 current positions."""
+    b = x.shape[0]
+    w = cfg.sliding_window if window == "cfg" else window
+    positions = pos[:, None]
+    q = _project_q(p, cfg, x, positions)
+    k_new, v_new = _project_kv(p, cfg, x, positions)
+    smax = cache.k.shape[1]
+    idx = (pos % smax)[:, None]
+    bidx = jnp.arange(b)[:, None]
+    cache = KVCache(
+        k=cache.k.at[bidx, idx].set(k_new),
+        v=cache.v.at[bidx, idx].set(v_new),
+        pos=cache.pos.at[bidx, idx].set(positions),
+    )
+    kv_valid = cache.pos >= 0
+    out = _attend_direct(q, cache.k, cache.v, positions, cache.pos, kv_valid,
+                         window=w, softcap=cfg.attn_logit_softcap)
+    return out.reshape(b, 1, cfg.q_dim) @ p["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def cross_attention(p, cfg: ModelConfig, x, memory, memory_valid=None):
+    """x: (B,S,D) decoder states; memory: (B,T,D) encoder output (no rope)."""
+    b, s, _ = x.shape
+    t = memory.shape[1]
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    q = q.reshape(b, s, cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads, hd)
+    k = (memory @ p["wk"]).reshape(b, t, cfg.num_kv_heads, hd)
+    v = (memory @ p["wv"]).reshape(b, t, cfg.num_kv_heads, hd)
+    if memory_valid is None:
+        memory_valid = jnp.ones((b, t), bool)
+    q_pos = jnp.full((b, s), jnp.iinfo(jnp.int32).max, jnp.int32)
+    kv_pos = jnp.zeros((b, t), jnp.int32)
+    out = attend(q, k, v, q_pos, kv_pos, memory_valid, window=None, softcap=None)
+    return out.reshape(b, s, cfg.q_dim) @ p["wo"]

@@ -1,0 +1,190 @@
+"""Encoder–decoder transformer backbone (seamless-m4t-medium).
+
+The audio frontend (mel + conv feature extractor) is STUBBED per the task
+carve-out: the encoder consumes precomputed frame embeddings
+``(B, T_frames, d_model)`` from ``input_specs``.  The decoder is a standard
+causal transformer with cross-attention; cross K/V are computed once at
+encode time and carried in the cache for decode.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, ffn, module
+from repro.models.sharding import constrain_activation
+from repro.models.config import ModelConfig
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": module.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "ln2": module.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "attn": attention.init_attention(ks[0], cfg),
+        "mlp": ffn.init_mlp(ks[1], cfg),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": module.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "ln2": module.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "ln3": module.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "attn": attention.init_attention(ks[0], cfg),
+        "cross": attention.init_attention(ks[1], cfg, cross=True),
+        "mlp": ffn.init_mlp(ks[2], cfg),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.num_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": module.embed_init(ks[2], cfg.vocab_size, cfg.d_model, jnp.dtype(cfg.dtype)),
+        "lm_head": module.dense_init(ks[3], cfg.d_model, cfg.vocab_size, jnp.dtype(cfg.dtype)),
+        "enc_norm": module.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "final_norm": module.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "encoder": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "decoder": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames, *, remat: bool = False):
+    """frames: (B, T, D) stubbed frontend output -> memory (B, T, D)."""
+    b, t, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(h, lp):
+        h = constrain_activation(h)
+        y = attention.self_attention(lp["attn"], cfg, module.rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                                     positions, causal=False, window=None)
+        h = h + y
+        h = h + ffn.mlp(lp["mlp"], cfg, module.rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        return h, None
+
+    fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+    x, _ = jax.lax.scan(fn, frames.astype(jnp.dtype(cfg.dtype)), params["encoder"])
+    return module.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(params, cfg: ModelConfig, memory):
+    """Precompute stacked cross K/V: (L, B, T, KV, hd) each."""
+    hd = cfg.resolved_head_dim
+    b, t, _ = memory.shape
+
+    def body(_, lp):
+        k = (memory @ lp["cross"]["wk"]).reshape(b, t, cfg.num_kv_heads, hd)
+        v = (memory @ lp["cross"]["wv"]).reshape(b, t, cfg.num_kv_heads, hd)
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, None, params["decoder"])
+    return ks, vs
+
+
+def _cross_attend(lp, cfg: ModelConfig, x, ck, cv):
+    b, s, _ = x.shape
+    t = ck.shape[1]
+    hd = cfg.resolved_head_dim
+    q = (x @ lp["cross"]["wq"]).reshape(b, s, cfg.num_kv_heads,
+                                        cfg.num_heads // cfg.num_kv_heads, hd)
+    valid = jnp.ones((b, t), bool)
+    q_pos = jnp.full((b, s), jnp.iinfo(jnp.int32).max, jnp.int32)
+    kv_pos = jnp.zeros((b, t), jnp.int32)
+    out = attention.attend(q, ck, cv, q_pos, kv_pos, valid, window=None, softcap=None)
+    return out.reshape(b, s, cfg.q_dim) @ lp["cross"]["wo"]
+
+
+def init_dec_cache(cfg: ModelConfig, batch: int, max_len: int, enc_frames: int):
+    one = attention.init_kv_cache(cfg, batch, max_len)
+    self_cache = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), one)
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "self": self_cache,
+        "cross_k": jnp.zeros((cfg.num_layers, batch, enc_frames, cfg.num_kv_heads, hd), dt),
+        "cross_v": jnp.zeros((cfg.num_layers, batch, enc_frames, cfg.num_kv_heads, hd), dt),
+    }
+
+
+def _dec_layer(lp, cfg, x, positions, ck, cv, *, cache=None, pos=None, mode="full"):
+    h = module.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if mode == "full":
+        y = attention.self_attention(lp["attn"], cfg, h, positions, window=None)
+        new_cache = None
+    elif mode == "prefill":
+        y, new_cache = attention.prefill_attention(lp["attn"], cfg, h, positions, cache, window=None)
+    else:  # decode
+        y, new_cache = attention.decode_attention(lp["attn"], cfg, h, pos, cache, window=None)
+    x = x + y
+    x = x + _cross_attend(lp, cfg, module.rmsnorm(lp["ln2"], x, cfg.norm_eps), ck, cv)
+    x = x + ffn.mlp(lp["mlp"], cfg, module.rmsnorm(lp["ln3"], x, cfg.norm_eps))
+    return x, new_cache
+
+
+def encdec_apply(params, cfg: ModelConfig, frames, tokens, *, remat: bool = False,
+                 return_features: bool = False):
+    """Teacher-forcing forward. Returns (logits fp32, aux); with
+    ``return_features`` the final-norm hidden states instead (see
+    transformer.lm_apply)."""
+    memory = encode(params, cfg, frames, remat=remat)
+    ck_all, cv_all = _cross_kv(params, cfg, memory)
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(h, inp):
+        lp, ck, cv = inp
+        h2, _ = _dec_layer(lp, cfg, constrain_activation(h), positions, ck, cv, mode="full")
+        return h2, None
+
+    fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+    x, _ = jax.lax.scan(fn, x, (params["decoder"], ck_all, cv_all))
+    x = module.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    aux = {"load_balance_loss": jnp.zeros((), jnp.float32),
+           "router_z_loss": jnp.zeros((), jnp.float32)}
+    if return_features:
+        return x, aux
+    return (x @ params["lm_head"]).astype(jnp.float32), aux
+
+
+def encdec_prefill(params, cfg: ModelConfig, frames, tokens, cache):
+    """Encode + prefill decoder self-cache. Returns (logits, cache)."""
+    memory = encode(params, cfg, frames)
+    ck_all, cv_all = _cross_kv(params, cfg, memory)
+    cache = dict(cache, cross_k=ck_all, cross_v=cv_all)
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(h, inp):
+        lp, ck, cv, c = inp
+        h2, c2 = _dec_layer(lp, cfg, h, positions, ck, cv, cache=c, mode="prefill")
+        return h2, c2
+
+    x, self_cache = jax.lax.scan(body, x, (params["decoder"], ck_all, cv_all, cache["self"]))
+    cache["self"] = self_cache
+    # last-position logits only (see transformer._last_position_logits)
+    x_last = module.rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    return (x_last[:, 0] @ params["lm_head"]).astype(jnp.float32), cache
+
+
+def encdec_decode_step(params, cfg: ModelConfig, token, pos, cache):
+    """One decoder token; cross K/V already in cache."""
+    x = params["embed"][token][:, None, :]
+
+    def body(h, inp):
+        lp, ck, cv, c = inp
+        h2, c2 = _dec_layer(lp, cfg, h, None, ck, cv, cache=c, pos=pos, mode="decode")
+        return h2, c2
+
+    x, self_cache = jax.lax.scan(
+        body, x, (params["decoder"], cache["cross_k"], cache["cross_v"], cache["self"]))
+    cache = dict(cache, self=self_cache)
+    x = module.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return (x @ params["lm_head"]).astype(jnp.float32)[:, 0, :], cache

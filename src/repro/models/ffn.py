@@ -1,0 +1,29 @@
+"""Gated MLPs (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module
+from repro.models.config import ModelConfig
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    dt = jnp.dtype(cfg.dtype)
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": module.dense_init(ks[0], cfg.d_model, d_ff, dt),
+        "wi_up": module.dense_init(ks[1], cfg.d_model, d_ff, dt),
+        "wo": module.dense_init(ks[2], d_ff, cfg.d_model, dt),
+    }
+
+
+def mlp(p, cfg: ModelConfig, x):
+    gate = x @ p["wi_gate"]
+    up = x @ p["wi_up"]
+    if cfg.mlp_activation == "geglu":
+        act = jax.nn.gelu(gate, approximate=True)
+    else:
+        act = jax.nn.silu(gate)
+    return (act * up) @ p["wo"]

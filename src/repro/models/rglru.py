@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t), with
+a_t = exp(-c * softplus(Lambda) * r_t), r/i input-dependent sigmoid gates.
+Training uses `jax.lax.associative_scan` (linear recurrence); decode is a
+single fused step.  The block is: linear -> causal depthwise conv(4) ->
+RG-LRU on one branch, linear -> GeLU on the other, merged multiplicatively.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module
+from repro.models.config import ModelConfig
+from repro.models.sharding import constrain_activation
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array     # (B, W) fp32 recurrent state
+    conv: jax.Array  # (B, conv_width-1, W) previous conv inputs
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> RGLRUState:
+    w = cfg.lru_width or cfg.d_model
+    return RGLRUState(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, w), jnp.dtype(cfg.dtype)),
+    )
+
+
+def init_recurrent_block(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": module.dense_init(ks[0], d, w, dt),       # conv/LRU branch in
+        "wy": module.dense_init(ks[1], d, w, dt),       # gate branch in
+        "wo": module.dense_init(ks[2], w, d, dt),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, w)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "lam": jnp.full((w,), 2.0, jnp.float32),        # softplus(2)~2.1 -> slow decay
+        "wa": module.dense_init(ks[4], w, w, dt, scale=0.01),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wi": module.dense_init(ks[5], w, w, dt, scale=0.01),
+        "bi": jnp.zeros((w,), jnp.float32),
+    }
+
+
+def _causal_conv(p, x, conv_state):
+    """Depthwise causal conv width K. x: (B,S,W); conv_state: (B,K-1,W)."""
+    k = p["conv_w"].shape[0]
+    full = jnp.concatenate([conv_state, x], axis=1)  # (B, K-1+S, W)
+    out = p["conv_b"]
+    s = x.shape[1]
+    acc = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        acc = acc + full[:, i:i + s, :].astype(jnp.float32) * p["conv_w"][k - 1 - i].astype(jnp.float32)
+    new_state = full[:, -(k - 1):, :]
+    return (acc + out).astype(x.dtype), new_state
+
+
+def _gates(p, xc):
+    r = jax.nn.sigmoid(xc.astype(jnp.float32) @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(xc.astype(jnp.float32) @ p["wi"].astype(jnp.float32) + p["bi"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * xc.astype(jnp.float32))
+
+
+def rglru_scan(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t via associative scan. a,b: (B,S,W); h0: (B,W)."""
+    # prepend h0 as an element with a=0, b=h0
+    a_ext = jnp.concatenate([jnp.zeros_like(h0)[:, None, :], a], axis=1)
+    b_ext = jnp.concatenate([h0[:, None, :], b], axis=1)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a_ext, b_ext), axis=1)
+    return hs[:, 1:, :]  # (B,S,W)
+
+
+def recurrent_block(p, cfg: ModelConfig, x, state: RGLRUState):
+    """x: (B,S,D) -> (B,S,D), new state."""
+    gate = jax.nn.gelu(x @ p["wy"], approximate=True)
+    xb = x @ p["wx"]
+    xc, conv_state = _causal_conv(p, xb, state.conv)
+    a, b = _gates(p, xc)
+    hs = rglru_scan(a, b, state.h)
+    out = (hs.astype(x.dtype) * gate) @ p["wo"]
+    return out, RGLRUState(h=hs[:, -1, :], conv=conv_state)
+
+
+def recurrent_step(p, cfg: ModelConfig, x, state: RGLRUState):
+    """Decode: x (B,1,D)."""
+    gate = jax.nn.gelu(x @ p["wy"], approximate=True)
+    xb = x @ p["wx"]
+    xc, conv_state = _causal_conv(p, xb, state.conv)
+    a, b = _gates(p, xc)  # (B,1,W)
+    h = a[:, 0] * state.h + b[:, 0]
+    out = (h[:, None, :].astype(x.dtype) * gate) @ p["wo"]
+    return out, RGLRUState(h=h, conv=conv_state)

@@ -1,0 +1,201 @@
+"""RWKV-6 "Finch" block: data-dependent token-shift + decay linear attention.
+
+Faithful to arXiv:2404.05892: time-mixing with LoRA-modulated token shift,
+per-channel data-dependent decay w_t = exp(-exp(.)), bonus u, per-head WKV
+state S in R^{hd x hd}; channel-mixing with squared-ReLU.
+
+Training path runs `jax.lax.scan` over time (the Pallas kernel in
+`kernels/rwkv6_scan.py` is the TPU hot-spot version; this module is the
+XLA-lowering path used by pjit).  Decode carries {wkv, tm_prev, cm_prev}.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module
+from repro.models.config import ModelConfig
+
+_MIX_LORA = 32
+_DECAY_LORA = 64
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array      # (B, H, hd, hd) fp32
+    tm_prev: jax.Array  # (B, D)
+    cm_prev: jax.Array  # (B, D)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> RWKVState:
+    h, hd, d = cfg.num_rwkv_heads, cfg.rwkv_head_size, cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    return RWKVState(
+        wkv=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        tm_prev=jnp.zeros((batch, d), dt),
+        cm_prev=jnp.zeros((batch, d), dt),
+    )
+
+
+def init_time_mix(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    d, h, hd = cfg.d_model, cfg.num_rwkv_heads, cfg.rwkv_head_size
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_x": jnp.zeros((d,), dt), "mu_w": jnp.zeros((d,), dt),
+        "mu_k": jnp.zeros((d,), dt), "mu_v": jnp.zeros((d,), dt),
+        "mu_r": jnp.zeros((d,), dt), "mu_g": jnp.zeros((d,), dt),
+        # token-shift LoRA: (D, 5*r) tanh (5, r, D)
+        "mix_a": module.dense_init(ks[0], d, 5 * _MIX_LORA, dt, scale=0.01),
+        "mix_b": (jax.random.normal(ks[1], (5, _MIX_LORA, d)) * 0.01).astype(dt),
+        # decay: w = exp(-exp(w0 + tanh(x@da)@db))
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "decay_a": module.dense_init(ks[2], d, _DECAY_LORA, dt, scale=0.01),
+        "decay_b": (jax.random.normal(ks[3], (_DECAY_LORA, d)) * 0.01).astype(dt),
+        "u": (jax.random.normal(ks[4], (h, hd)) * 0.1).astype(jnp.float32),
+        "wr": module.dense_init(ks[5], d, d, dt),
+        "wk": module.dense_init(ks[6], d, d, dt),
+        "wv": module.dense_init(ks[7], d, d, dt),
+        "wg": module.dense_init(ks[8], d, d, dt),
+        "wo": module.dense_init(ks[9], d, d, dt),
+        "ln_scale": jnp.ones((h, hd), jnp.float32),
+        "ln_bias": jnp.zeros((h, hd), jnp.float32),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), dt), "mu_r": jnp.zeros((d,), dt),
+        "wk": module.dense_init(ks[0], d, f, dt),
+        "wv": module.dense_init(ks[1], f, d, dt),
+        "wr": module.dense_init(ks[2], d, d, dt),
+    }
+
+
+def _head_groupnorm(p, y, eps=1e-5):
+    """y: (..., H, hd) layernorm per head."""
+    yf = y.astype(jnp.float32)
+    mean = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    return ((yf - mean) * jax.lax.rsqrt(var + eps) * p["ln_scale"] + p["ln_bias"])
+
+
+def _token_shift_inputs(p, x, prev):
+    """Finch data-dependent token shift.
+
+    x: (B,S,D); prev: (B,D) state (token before x[:,0]).
+    Returns xw, xk, xv, xr, xg each (B,S,D), plus new prev (B,D).
+    """
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    sx = shifted - x
+    xxx = x + sx * p["mu_x"]
+    a = jnp.tanh(xxx @ p["mix_a"])                   # (B,S,5r)
+    b, s, _ = a.shape
+    a = a.reshape(b, s, 5, _MIX_LORA)
+    adj = jnp.einsum("bsnr,nrd->bsnd", a, p["mix_b"])  # (B,S,5,D)
+    mus = jnp.stack([p["mu_w"], p["mu_k"], p["mu_v"], p["mu_r"], p["mu_g"]])
+    mixed = x[:, :, None, :] + sx[:, :, None, :] * (mus + adj)
+    xw, xk, xv, xr, xg = [mixed[:, :, i, :] for i in range(5)]
+    return xw, xk, xv, xr, xg, x[:, -1, :]
+
+
+def _decay(p, xw):
+    """w in (0,1): (B,S,D) fp32."""
+    lora = jnp.tanh(xw @ p["decay_a"]).astype(jnp.float32) @ p["decay_b"].astype(jnp.float32)
+    return jnp.exp(-jnp.exp(p["w0"] + lora))
+
+
+_WKV_CHUNK = 256
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Sequential WKV recurrence.
+
+    r,k,v: (B,S,H,hd); w: (B,S,H,hd) decay in (0,1); u: (H,hd);
+    state: (B,H,hd,hd).  Returns y (B,S,H,hd) fp32, new state.
+
+    Time is chunked with `jax.checkpoint` around each chunk: naive scan AD
+    saves the (B,H,hd,hd) carry at EVERY step (~43 GiB/device at 4k train,
+    §Perf iter 5); chunking saves it only at chunk boundaries and
+    rematerializes inside, bounding residuals to chunk-local.
+    """
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd)
+        a = kt[..., :, None] * vt[..., None, :]          # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[..., :, None] * a)
+        s = wt[..., :, None] * s + a
+        return s, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, wf))  # (S,B,H,hd)
+    s_len = xs[0].shape[0]
+    if s_len <= _WKV_CHUNK or s_len % _WKV_CHUNK != 0:
+        state, ys = jax.lax.scan(step, state, xs)
+        return ys.transpose(1, 0, 2, 3), state
+
+    nc = s_len // _WKV_CHUNK
+    xs_c = tuple(t.reshape((nc, _WKV_CHUNK) + t.shape[1:]) for t in xs)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_body(s, inp):
+        s, ys = jax.lax.scan(step, s, inp)
+        return s, ys
+
+    state, ys = jax.lax.scan(chunk_body, state, xs_c)
+    ys = ys.reshape((s_len,) + ys.shape[2:])
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def time_mix(p, cfg: ModelConfig, x, prev, wkv_state):
+    b, s, d = x.shape
+    h, hd = cfg.num_rwkv_heads, cfg.rwkv_head_size
+    xw, xk, xv, xr, xg, new_prev = _token_shift_inputs(p, x, prev)
+    r = (xr @ p["wr"]).reshape(b, s, h, hd)
+    k = (xk @ p["wk"]).reshape(b, s, h, hd)
+    v = (xv @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _decay(p, xw).reshape(b, s, h, hd)
+    y, new_state = wkv_scan(r, k, v, w, p["u"], wkv_state)
+    y = _head_groupnorm(p, y).reshape(b, s, d).astype(x.dtype)
+    return (y * g) @ p["wo"], new_prev, new_state
+
+
+def channel_mix(p, x, prev):
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    sx = shifted - x
+    xk = x + sx * p["mu_k"]
+    xr = x + sx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    v = k @ p["wv"]
+    return jax.nn.sigmoid(xr @ p["wr"]) * v, x[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# full block (pre-norm residual, as upstream RWKV)
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": module.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+        "ln2": module.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+        "time_mix": init_time_mix(ks[0], cfg),
+        "channel_mix": init_channel_mix(ks[1], cfg),
+    }
+
+
+def block(p, cfg: ModelConfig, x, state: RWKVState):
+    y, tm_prev, wkv = time_mix(p["time_mix"], cfg, module.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                               state.tm_prev, state.wkv)
+    x = x + y
+    y, cm_prev = channel_mix(p["channel_mix"], module.rmsnorm(p["ln2"], x, cfg.norm_eps),
+                             state.cm_prev)
+    x = x + y
+    return x, RWKVState(wkv=wkv, tm_prev=tm_prev, cm_prev=cm_prev)

@@ -1,0 +1,203 @@
+"""Path-based parameter sharding rules.
+
+Parameters are nested dicts; rules regex-match the '/'-joined tree path and
+yield a PartitionSpec *template* for the trailing dims.  Layer stacking
+prepends axes (blocks are stacked over layers/groups), so templates are
+right-aligned: a rank-3 array matched by a rank-2 template gets `None`
+prepended.  Any dim not divisible by its mesh axis falls back to replication
+(GQA kv projections with few heads, tiny LoRA factors, ...).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (regex on path, right-aligned spec template). First match wins.
+# Two-axis sharding: the tensor-parallel dim shards over `model`, the other
+# big dim shards over `data` (FSDP/ZeRO-style — essential for the 235B MoE
+# optimizer state to fit per-chip HBM).  Divisibility fallback per-dim.
+PARAM_RULES: list[tuple[str, tuple]] = [
+    # --- MoE (expert-parallel over `model`, FSDP over d_model/d_ff) ---
+    (r"moe/router$", ("data", None)),
+    (r"moe/w_(gate|up|down)$", ("model", "data", None)),
+    # --- channel-mix down-proj before generic wv rule ---
+    (r"channel_mix/wv$", ("model", "data")),
+    (r"channel_mix/w[kr]$", ("data", "model")),
+    # --- attention / generic projections ---
+    (r"(attn|cross)/w[qkv]$", ("data", "model")),
+    (r"(attn|cross)/wo$", ("model", "data")),
+    # --- MLP ---
+    (r"wi_(gate|up)$", ("data", "model")),
+    (r"mlp/wo$", ("model", "data")),
+    # --- RWKV time-mix ---
+    (r"time_mix/w[rkvg]$", ("data", "model")),
+    (r"time_mix/wo$", ("model", "data")),
+    (r"time_mix/(mix_[ab]|decay_[ab]|u|ln_scale|ln_bias)$", ()),  # replicate
+    # --- RG-LRU ---
+    # RG-LRU branch: weights are tiny (W^2) next to its fp32 activations
+    # (B_loc*S = 16x W), so tensor-parallel W sharding made GSPMD bounce
+    # 1 GiB (B,S,W) f32 tensors between every producer/consumer (§Perf
+    # iter 4, two refuted attempts in EXPERIMENTS.md).  FSDP-only sharding
+    # gathers ~32 MiB weights per use instead — activations stay local.
+    (r"rec/w[xy]$", ("data", None)),
+    (r"rec/wo$", (None, "data")),
+    (r"rec/w[ai]$", ("data", None)),
+    (r"rec/conv_w$", (None, "model")),
+    # --- embeddings / head ---
+    (r"embed$", ("model", "data")),
+    (r"lm_head$", ("data", "model")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _spec_for(path: str, shape: tuple, mesh_axes: dict[str, int]) -> P:
+    for pat, template in PARAM_RULES:
+        if re.search(pat, path):
+            if not template:
+                return P()
+            spec = [None] * (len(shape) - len(template)) + list(template)
+            for i, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                # the FSDP dim shards over (data, pod): ZeRO across pods —
+                # without it the multi-pod mesh replicates the fp32 optimizer
+                # per pod and 235B-scale training cannot fit (§Perf iter 7)
+                if ax == "data" and "pod" in mesh_axes:
+                    ax = ("data", "pod")
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                size = 1
+                for a in axes:
+                    size *= mesh_axes.get(a, 1)
+                if shape[i] % size != 0:
+                    # retry without the pod axis before full fallback
+                    size = mesh_axes.get(axes[0], 1)
+                    ax = axes[0]
+                    if shape[i] % size != 0:
+                        spec[i] = None
+                        continue
+                spec[i] = ax
+            return P(*spec)
+    return P()  # replicate by default (norm scales, biases, small factors)
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(mesh.shape)  # works for Mesh and AbstractMesh
+
+
+def param_specs(params: Any, mesh: Mesh):
+    """Tree of PartitionSpec matching `params` (arrays or ShapeDtypeStructs)."""
+    sizes = mesh_axis_sizes(mesh)
+
+    def one(path, leaf):
+        return _spec_for(_path_str(path), tuple(leaf.shape), sizes)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params: Any, mesh: Mesh):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), param_specs(params, mesh))
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes used for data parallelism, e.g. ('pod','data') or ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def data_spec(mesh: Mesh, rank: int, *, batch_dim: int = 0, shard_batch: bool = True) -> P:
+    """PartitionSpec for an activation/input of given rank: batch over dp axes."""
+    spec = [None] * rank
+    if shard_batch:
+        spec[batch_dim] = batch_axes(mesh)
+    return P(*spec)
+
+
+def shardable_batch(mesh: Mesh, batch: int) -> bool:
+    sizes = mesh_axis_sizes(mesh)
+    dp = int(np.prod([sizes[a] for a in batch_axes(mesh)]))
+    return batch % dp == 0
+
+
+# ---------------------------------------------------------------------------
+# cache / state sharding: batch-shard everything with a leading (L, B, ...)
+# or (B, ...) layout; fall back to replication when batch is unshardable
+# (long_500k, B=1) — the model axis still shards params.
+# ---------------------------------------------------------------------------
+
+# ---------------------------------------------------------------------------
+# activation sharding hook: the launcher installs a spec; transformer scan
+# bodies constrain the residual stream with it (sequence-parallel-style
+# activation sharding keeps remat-saved activations within per-chip HBM).
+# ---------------------------------------------------------------------------
+
+_ACTIVATION_SPEC: list = [None]
+
+
+def set_activation_sharding(spec) -> None:
+    """Install (or clear with None) a PartitionSpec for (B, S, D) activations."""
+    _ACTIVATION_SPEC[0] = spec
+
+
+def constrain_activation(x):
+    spec = _ACTIVATION_SPEC[0]
+    if spec is None or x.ndim != 3:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x  # no mesh context (unit tests)
+
+
+def cache_specs(cache: Any, mesh: Mesh, *, shard_batch: bool = True):
+    sizes = mesh_axis_sizes(mesh)
+    dp = int(np.prod([sizes[a] for a in batch_axes(mesh)])) or 1
+
+    md = sizes.get("model", 1)
+
+    def one(path, leaf):
+        rank = len(leaf.shape)
+        spec = [None] * rank
+        # stacked caches are (L, B, ...); hybrid "tail" entries are (B, ...)
+        bd = 0 if "tail" in _path_str(path) else 1
+        bd = min(bd, rank - 1)
+        if shard_batch and leaf.shape[bd] % dp == 0 and leaf.shape[bd] >= dp:
+            spec[bd] = batch_axes(mesh)
+        elif rank >= bd + 2:
+            # batch unshardable (long_500k, B=1): context-parallel fallback —
+            # shard the sequence axis of KV caches over `data`
+            sd = bd + 1
+            d_size = sizes.get("data", 1)
+            if leaf.shape[sd] % d_size == 0 and leaf.shape[sd] >= d_size and leaf.shape[sd] > md:
+                spec[sd] = "data"
+        # tensor-parallel one more axis — KV caches at 32k x 128B do not fit
+        # per-chip HBM under batch sharding alone.  Prefer the LARGEST
+        # still-unsharded axis (the sequence axis for KV caches): decode
+        # attention REDUCES over it, which GSPMD turns into cheap partial-
+        # softmax all-reduces, whereas sharding head_dim forced full-tensor
+        # resharding at every GQA reshape (§Perf iter 2).
+        if rank >= bd + 3 and not np.issubdtype(leaf.dtype, np.integer):
+            cands = [i for i in range(bd + 1, rank) if spec[i] is None]
+            cands.sort(key=lambda i: -leaf.shape[i])
+            for i in cands:
+                if leaf.shape[i] % md == 0 and leaf.shape[i] >= md:
+                    spec[i] = "model"
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,1 @@
+from repro.rewards.verifier import ArithmeticVerifier, LengthPenaltyWrapper  # noqa: F401

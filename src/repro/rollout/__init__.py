@@ -1,0 +1,2 @@
+from repro.rollout.engine import DecodeEngine  # noqa: F401
+from repro.rollout.sampler import sample_tokens  # noqa: F401

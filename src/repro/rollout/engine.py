@@ -1,0 +1,200 @@
+"""Slot-based continuous-batching decode engine (the TPU-native vLLM).
+
+TPUs demand static shapes, so instead of paged KV blocks the engine holds a
+fixed number of decode *slots*, each owning one row of a statically shaped
+KV cache / recurrent state.  ADD claims a free slot (prefilling the prompt
+into that row); every `step()` advances ALL active slots by one token in a
+single jitted call; finish/ABORT releases the slot.  This is exactly the
+LLMProxy's step-wise inference contract (§4.2): one engine step per event-
+loop iteration, completed requests surfacing immediately.
+
+Implements `repro.core.llm_proxy.InferenceEngine`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import GenerationResult
+from repro.models.api import ModelAPI
+from repro.rollout.sampler import sample_tokens
+
+
+@dataclasses.dataclass
+class _SlotState:
+    request_id: int
+    tokens: List[int]
+    logprobs: List[float]
+    remaining: int
+
+
+def _batch_axis(path) -> int:
+    return 0 if any(getattr(k, "key", None) == "tail" for k in path) else 1
+
+
+def _insert_slot(cache, slot_cache, slot: int):
+    """Write a single-request cache (batch=1) into the engine cache row."""
+    def one(path, big, small):
+        ax = _batch_axis(path)
+        idx = [0] * big.ndim
+        idx[ax] = slot
+        # Pad trailing dims (e.g. a shorter prefill seq axis) up to the
+        # engine cache — but NEVER the batch axis: the update block must stay
+        # batch=1 so dynamic_update_slice writes exactly one slot row.
+        # (Padding the batch axis makes XLA clamp the start index to 0 and
+        # silently overwrite every slot — cross-request corruption.)
+        pad_width = [(0, max(0, b - s_)) if i != ax else (0, 0)
+                     for i, (s_, b) in enumerate(zip(small.shape, big.shape))]
+        if any(p != (0, 0) for p in pad_width):
+            fill = -1 if small.dtype == jnp.int32 else 0
+            small = jnp.pad(small, pad_width, constant_values=fill)
+        assert small.shape[ax] == 1, (small.shape, ax)
+        return jax.lax.dynamic_update_slice(big, small.astype(big.dtype), tuple(idx))
+
+    return jax.tree_util.tree_map_with_path(one, cache, slot_cache)
+
+
+class DecodeEngine:
+    def __init__(self, api: ModelAPI, params, *, num_slots: int = 8,
+                 max_total_len: int = 128, eos_id: int = 2,
+                 temperature: float = 1.0, top_k: int = 0,
+                 pad_id: int = 0, seed: int = 0,
+                 prefill_bucket: Optional[int] = 16):
+        cfg = api.cfg
+        self.api = api
+        self.params = params
+        self.num_slots = num_slots
+        self.max_total_len = max_total_len
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.temperature = temperature
+        self.top_k = top_k
+        # recurrent state ingests every fed position: exact-length prefill
+        self.prefill_bucket = None if cfg.family in ("ssm", "hybrid") else prefill_bucket
+        if cfg.sliding_window is not None and cfg.sliding_window < max_total_len:
+            raise ValueError("engine requires cache >= max_total_len "
+                             "(enlarge window or shorten sequences)")
+        self._key = jax.random.PRNGKey(seed)
+        self.cache = api.init_cache(num_slots, max_total_len)
+        self.cur_token = jnp.full((num_slots,), pad_id, jnp.int32)
+        self.pos = jnp.zeros((num_slots,), jnp.int32)
+        self.active = np.zeros((num_slots,), bool)
+        self.slots: Dict[int, _SlotState] = {}      # slot -> state
+        self.req_to_slot: Dict[int, int] = {}
+        self.total_decode_steps = 0
+        self.total_tokens_decoded = 0
+
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+
+    # ----------------------------------------------------------- jit bodies
+    def _decode_impl(self, params, cache, cur_token, pos, key):
+        logits, cache = self.api.decode_step(params, cur_token, pos, cache)
+        tok, lp = sample_tokens(key, logits, temperature=self.temperature,
+                                top_k=self.top_k)
+        return tok.astype(jnp.int32), lp, cache
+
+    def _prefill_impl(self, params, tokens, valid):
+        cache = self.api.init_cache(1, self.max_total_len)
+        logits, cache = self.api.prefill(
+            params, {"tokens": tokens, "valid": valid}, cache)
+        return logits, cache
+
+    # ------------------------------------------------------------ protocol
+    @property
+    def num_free_slots(self) -> int:
+        return self.num_slots - len(self.slots)
+
+    @property
+    def active_request_ids(self) -> List[int]:
+        return list(self.req_to_slot)
+
+    def update_weights(self, params) -> None:
+        self.params = params
+
+    def add_request(self, request_id: int, prompt_tokens, max_new_tokens: int) -> None:
+        assert self.num_free_slots > 0, "no free slot"
+        slot = next(i for i in range(self.num_slots) if not self.active[i])
+        prompt = np.asarray(prompt_tokens, np.int32).ravel()
+        plen = len(prompt)
+        assert plen + max_new_tokens <= self.max_total_len, "sequence budget"
+
+        if self.prefill_bucket:
+            padded = int(np.ceil(plen / self.prefill_bucket) * self.prefill_bucket)
+        else:
+            padded = plen
+        toks = np.full((1, padded), self.pad_id, np.int32)
+        toks[0, :plen] = prompt
+        valid = np.zeros((1, padded), bool)
+        valid[0, :plen] = True
+
+        logits, slot_cache = self._prefill(self.params, jnp.asarray(toks),
+                                           jnp.asarray(valid))
+        self.cache = _insert_slot(self.cache, slot_cache, slot)
+
+        # prefill returns last-real-position logits directly: (1, V)
+        self._key, sub = jax.random.split(self._key)
+        tok, lp = sample_tokens(sub, logits,
+                                temperature=self.temperature, top_k=self.top_k)
+        tok_i, lp_f = int(tok[0]), float(lp[0])
+
+        self.cur_token = self.cur_token.at[slot].set(tok_i)
+        self.pos = self.pos.at[slot].set(plen)
+        self.active[slot] = True
+        st = _SlotState(request_id=request_id, tokens=[tok_i],
+                        logprobs=[lp_f], remaining=max_new_tokens - 1)
+        self.slots[slot] = st
+        self.req_to_slot[request_id] = slot
+
+    def abort(self, request_id: int) -> GenerationResult:
+        slot = self.req_to_slot.pop(request_id)
+        st = self.slots.pop(slot)
+        self.active[slot] = False
+        return GenerationResult(
+            request_id=request_id, task=None,
+            tokens=np.asarray(st.tokens, np.int32),
+            logprobs=np.asarray(st.logprobs, np.float32),
+            version_started=-1, aborted=True, partial=True)
+
+    def step(self) -> List[Tuple[int, np.ndarray, np.ndarray]]:
+        """One decode step for every active slot; returns finished requests."""
+        if not self.slots:
+            return []
+        finished: List[Tuple[int, np.ndarray, np.ndarray]] = []
+        # check eos/budget BEFORE decoding the next token: the last sampled
+        # token may already terminate the request.
+        for slot in list(self.slots):
+            st = self.slots[slot]
+            if st.tokens and (st.tokens[-1] == self.eos_id or st.remaining <= 0):
+                finished.append(self._finish(slot))
+        if not self.slots:
+            return finished
+
+        self._key, sub = jax.random.split(self._key)
+        tok, lp, self.cache = self._decode(self.params, self.cache,
+                                           self.cur_token, self.pos, sub)
+        self.total_decode_steps += 1
+        self.cur_token = tok
+        self.pos = self.pos + 1
+        tok_np = np.asarray(tok)
+        lp_np = np.asarray(lp)
+        for slot, st in list(self.slots.items()):
+            st.tokens.append(int(tok_np[slot]))
+            st.logprobs.append(float(lp_np[slot]))
+            st.remaining -= 1
+            self.total_tokens_decoded += 1
+        return finished
+
+    def _finish(self, slot: int) -> Tuple[int, np.ndarray, np.ndarray]:
+        st = self.slots.pop(slot)
+        self.req_to_slot.pop(st.request_id, None)
+        self.active[slot] = False
+        toks = np.asarray(st.tokens, np.int32)
+        lps = np.asarray(st.logprobs, np.float32)
+        # strip trailing eos from the budget view but keep it in the sample
+        return st.request_id, toks, lps

@@ -1,0 +1,42 @@
+"""Token sampling.
+
+Paper appendix A.1: rollout uses temperature=1, top_p=1 so the engine emits
+the *raw* token distribution — the recorded logprobs are the true behaviour
+policy, required by every IS-based off-policy corrector.  Temperature/top-k
+are still supported for evaluation-time decoding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(key, logits, *, temperature: float = 1.0, top_k: int = 0,
+                  top_p: float = 1.0):
+    """logits: (B, V) fp32. Returns (tokens (B,), logprobs (B,)).
+
+    logprobs are of the *untempered* distribution when temperature == 1.0
+    and top_p == 1.0 (the paper's raw-logits requirement); otherwise of the
+    sampling distribution actually used.
+    """
+    if temperature <= 0.0:  # greedy
+        tokens = jnp.argmax(logits, axis=-1)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        return tokens, jnp.take_along_axis(lp, tokens[:, None], axis=-1)[:, 0]
+
+    scaled = logits / temperature
+    if top_k and top_k < logits.shape[-1]:
+        kth = jnp.sort(scaled, axis=-1)[:, -top_k][:, None]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    if top_p < 1.0:
+        # nucleus: mask tokens outside the smallest set with cum prob >= p
+        sorted_logits = jnp.sort(scaled, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep everything strictly before the cutoff plus the cutoff token
+        cutoff_idx = jnp.argmax(cum >= top_p, axis=-1)
+        cutoff_logit = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
+        scaled = jnp.where(scaled < cutoff_logit, -jnp.inf, scaled)
+    tokens = jax.random.categorical(key, scaled, axis=-1)
+    lp = jax.nn.log_softmax(scaled, axis=-1)
+    return tokens, jnp.take_along_axis(lp, tokens[:, None], axis=-1)[:, 0]

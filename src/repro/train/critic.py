@@ -1,0 +1,97 @@
+"""Actor-critic PPO (the paper's §2.1 PPO formulation, with GAE).
+
+GRPO is the paper's default (critic-free); this module provides the PPO
+alternative: a value head on the trunk features, GAE token advantages from
+the terminal verifiable reward, and a clipped value loss — selectable via
+``TrainerConfig.adv_estimator = "gae"``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.algos import LossConfig, gae, rl_loss
+from repro.models.api import ModelAPI
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+from repro.train.trainer import _policy_logprobs, _unembed_matrix, chunked_token_logprobs
+
+
+def init_value_head(key, d_model: int):
+    return {
+        "w": (jax.random.normal(key, (d_model, 1)) * (d_model ** -0.5)
+              ).astype(jnp.float32),
+        "b": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def value_apply(vh, features):
+    """features: (B, S, D) -> values (B, S) fp32."""
+    return (features.astype(jnp.float32) @ vh["w"] + vh["b"])[..., 0]
+
+
+def make_critic_train_step(api: ModelAPI, loss_cfg: LossConfig,
+                           opt_cfg: OptConfig, *, gamma: float = 1.0,
+                           lam: float = 1.0, vf_coef: float = 0.5,
+                           remat: bool = False, moe_mode: str = "ep"):
+    """PPO train step with a learned critic.
+
+    State: {"params", "value", "opt", "vopt"}.  The batch carries `rewards`
+    (B,) terminal rewards instead of precomputed `advantages`; GAE runs
+    inside the step (token reward = terminal reward at the last response
+    token).
+    """
+    cfg = api.cfg
+
+    def train_step(state, batch):
+        mask = batch["mask"]
+        b = mask.shape[0]
+        # terminal token reward: the last response position of each row
+        last = jnp.maximum(
+            (mask * jnp.arange(mask.shape[1])[None, :]).max(axis=1), 0)
+        token_rewards = jnp.zeros_like(mask).at[
+            jnp.arange(b), last.astype(jnp.int32)].set(batch["rewards"])
+
+        def loss_fn(params, vh):
+            features, aux = api.apply(params, batch, remat=remat,
+                                      moe_mode=moe_mode, return_features=True)
+            if cfg.family == "vlm":
+                features = features[:, cfg.num_image_tokens:]
+            head = _unembed_matrix(api, params)
+            logprobs = chunked_token_logprobs(features, head, batch["tokens"])
+            values = value_apply(vh, features) * mask
+
+            advantages, returns = gae(token_rewards,
+                                      jax.lax.stop_gradient(values), mask,
+                                      gamma=gamma, lam=lam)
+            adv_batch = dict(batch)
+            mean = (advantages * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+            var = (jnp.square(advantages - mean) * mask).sum() / \
+                jnp.maximum(mask.sum(), 1.0)
+            adv_batch["advantages"] = (advantages - mean) * \
+                jax.lax.rsqrt(var + 1e-8) * mask
+
+            pg_loss, metrics = rl_loss(logprobs, adv_batch, loss_cfg, aux)
+            v_loss = (jnp.square(values - returns) * mask).sum() / \
+                jnp.maximum(mask.sum(), 1.0)
+            metrics["value_loss"] = v_loss
+            metrics["explained_value"] = values.sum() / jnp.maximum(mask.sum(), 1.0)
+            return pg_loss + vf_coef * v_loss, metrics
+
+        (loss, metrics), (g_p, g_v) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(state["params"], state["value"])
+        dtypes = jax.tree_util.tree_map(lambda p: p.dtype, state["params"])
+        params, opt, m1 = adamw_update(g_p, state["opt"], opt_cfg, dtypes)
+        vdtypes = jax.tree_util.tree_map(lambda p: p.dtype, state["value"])
+        value, vopt, _ = adamw_update(g_v, state["vopt"], opt_cfg, vdtypes)
+        metrics = dict(metrics, **m1, loss=loss)
+        return {"params": params, "value": value, "opt": opt, "vopt": vopt}, metrics
+
+    return train_step
+
+
+def make_critic_train_state(api: ModelAPI, key):
+    k1, k2 = jax.random.split(key)
+    params = api.init(k1)
+    vh = init_value_head(k2, api.cfg.d_model)
+    return {"params": params, "value": vh,
+            "opt": init_opt_state(params), "vopt": init_opt_state(vh)}

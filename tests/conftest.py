@@ -1,0 +1,39 @@
+import os
+import sys
+
+# tests must see ONE device (the dry-run sets its own flags in-process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs import REGISTRY  # noqa: E402
+
+
+def tiny(arch: str, **overrides):
+    """Extra-small variant of an assigned arch for fast CPU tests."""
+    cfg = REGISTRY[arch].smoke()
+    base = dict(num_layers=2, d_model=64, num_heads=4, head_dim=16,
+                num_kv_heads=2, d_ff=128, vocab_size=64)
+    if cfg.family == "ssm":
+        base.update(num_heads=2, num_kv_heads=2, rwkv_head_size=32)
+    if cfg.family == "hybrid":
+        base.update(num_layers=3, lru_width=64, sliding_window=16,
+                    num_kv_heads=1)
+    if cfg.is_moe:
+        base.update(num_experts=4, num_experts_per_tok=2, moe_d_ff=64)
+    if cfg.family == "vlm":
+        base.update(num_image_tokens=8, num_kv_heads=1)
+    if cfg.family == "audio":
+        base.update(num_encoder_layers=2, encoder_frames=16,
+                    num_kv_heads=4)
+    base.update(overrides)
+    return dataclasses.replace(cfg, **base)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,181 @@
+"""Off-policy objective correctness + advantage estimators (property-based)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.algos import (LossConfig, VARIANTS, gae, group_normalized_advantage,
+                         kl_k3, policy_loss, rl_loss, token_logprobs)
+
+B, S = 4, 8
+KEY = jax.random.PRNGKey(0)
+
+
+def _fields(key, scale=0.3):
+    ks = jax.random.split(key, 6)
+    lp = -jnp.abs(jax.random.normal(ks[0], (B, S)))
+    old = lp + scale * jax.random.normal(ks[1], (B, S))
+    prox = lp + scale * 0.5 * jax.random.normal(ks[2], (B, S))
+    adv = jax.random.normal(ks[3], (B, S))
+    mask = (jax.random.uniform(ks[4], (B, S)) > 0.3).astype(jnp.float32)
+    mask = mask.at[:, 0].set(0.0)
+    pos = (jax.random.uniform(ks[5], (B,)) > 0.5).astype(jnp.float32)
+    return lp, old, prox, adv, mask, pos
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_all_variants_finite_and_differentiable(variant):
+    lp, old, prox, adv, mask, pos = _fields(KEY)
+    cfg = LossConfig(pg_variant=variant)
+
+    def f(lp_):
+        return policy_loss(lp_, old, prox, adv, mask, pos, cfg)[0]
+
+    loss, grad = jax.value_and_grad(f)(lp)
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.isfinite(grad).all())
+    # gradient only flows into masked (response) tokens
+    assert float(jnp.abs(grad * (1 - mask)).max()) == 0.0
+
+
+def test_decoupled_ppo_reduces_to_ppo_when_prox_is_old():
+    lp, old, _, adv, mask, pos = _fields(KEY)
+    l1, _ = policy_loss(lp, old, old, adv, mask, pos, LossConfig(pg_variant="ppo"))
+    l2, _ = policy_loss(lp, old, old, adv, mask, pos,
+                        LossConfig(pg_variant="decoupled_ppo"))
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_tis_cispo_equal_reinforce_gradient_on_policy():
+    """At ratio==1 (on-policy), TIS and CISPO weights are 1 -> gradient equals
+    REINFORCE: -A * grad(logpi)."""
+    lp, _, prox, adv, mask, pos = _fields(KEY)
+    old = lp  # on-policy
+
+    def seq_mean(x):
+        return ((x * mask).sum(-1) / jnp.maximum(mask.sum(-1), 1)).mean()
+
+    for variant in ("tis", "cispo"):
+        g = jax.grad(lambda l: policy_loss(
+            l, old, prox, adv, mask, pos, LossConfig(pg_variant=variant))[0])(lp)
+        g_reinforce = jax.grad(lambda l: -seq_mean(adv * l))(lp)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_reinforce),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_topr_positive_untruncated_negative_truncated():
+    lp, old, prox, adv, mask, _ = _fields(KEY, scale=2.0)  # big ratios
+    cfg = LossConfig(pg_variant="topr", c=1.0)
+    all_pos = jnp.ones((B,))
+    all_neg = jnp.zeros((B,))
+    g_pos = jax.grad(lambda l: policy_loss(l, old, prox, adv, mask, all_pos, cfg)[0])(lp)
+    # positive trajectories: plain REINFORCE (no IS weight at all)
+    def seq_mean(x):
+        return ((x * mask).sum(-1) / jnp.maximum(mask.sum(-1), 1)).mean()
+    g_reinforce = jax.grad(lambda l: -seq_mean(adv * l))(lp)
+    np.testing.assert_allclose(np.asarray(g_pos), np.asarray(g_reinforce),
+                               rtol=1e-5, atol=1e-6)
+    # negative trajectories: weights capped at c
+    loss_neg, m = policy_loss(lp, old, prox, adv, mask, all_neg, cfg)
+    assert bool(jnp.isfinite(loss_neg))
+
+
+def test_ppo_clip_suppresses_gradient_outside_trust_region():
+    """Tokens with ratio far outside [1-eps,1+eps] and favorable advantage
+    contribute zero gradient."""
+    lp = jnp.zeros((1, 4))
+    old = jnp.full((1, 4), -2.0)  # ratio = e^2 >> 1+eps
+    adv = jnp.ones((1, 4))
+    mask = jnp.ones((1, 4))
+    pos = jnp.ones((1,))
+    g = jax.grad(lambda l: policy_loss(
+        l, old, old * 0, adv, mask, pos, LossConfig(pg_variant="ppo"))[0])(lp)
+    assert float(jnp.abs(g).max()) == 0.0
+
+
+@given(st.integers(2, 16), st.integers(2, 64))
+@settings(max_examples=20, deadline=None)
+def test_grpo_group_stats(g, n_groups):
+    rewards = jnp.asarray(
+        np.random.default_rng(g * 100 + n_groups).normal(size=g * n_groups),
+        jnp.float32)
+    adv = group_normalized_advantage(rewards, g)
+    a = np.asarray(adv).reshape(n_groups, g)
+    np.testing.assert_allclose(a.mean(1), 0.0, atol=1e-5)
+    stds = np.asarray(rewards).reshape(n_groups, g).std(1)
+    nz = stds > 1e-4
+    np.testing.assert_allclose(a.std(1)[nz], 1.0, atol=1e-2)
+
+
+def test_grpo_zero_variance_group_gives_zero_advantage():
+    rewards = jnp.asarray([1.0, 1.0, 1.0, 1.0])
+    adv = group_normalized_advantage(rewards, 4)
+    np.testing.assert_allclose(np.asarray(adv), 0.0, atol=1e-4)
+
+
+def test_gae_matches_manual():
+    rewards = jnp.asarray([[0.0, 0.0, 1.0]])
+    values = jnp.asarray([[0.5, 0.5, 0.5]])
+    mask = jnp.ones((1, 3))
+    adv, ret = gae(rewards, values, mask, gamma=1.0, lam=1.0)
+    # terminal: delta_2 = 1 - 0.5 = .5; delta_1 = 0 + .5 - .5 = 0 -> adv_1 = .5
+    np.testing.assert_allclose(np.asarray(adv[0]), [0.5, 0.5, 0.5], atol=1e-6)
+
+
+def test_kl_k3_nonnegative_and_zero_at_equal():
+    lp, old, *_ = _fields(KEY)
+    mask = jnp.ones((B, S))
+    assert float(kl_k3(lp, lp, mask)) == pytest.approx(0.0, abs=1e-6)
+    assert float(kl_k3(lp, old, mask)) >= 0.0
+
+
+def test_token_logprobs_is_log_softmax_gather():
+    logits = jax.random.normal(KEY, (2, 5, 11))
+    toks = jax.random.randint(jax.random.fold_in(KEY, 1), (2, 5), 0, 11)
+    lp = token_logprobs(logits, toks)
+    expected = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                   toks[..., None], -1)[..., 0]
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(expected),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_engine_mismatch_cap_applies():
+    lp, old, prox, adv, mask, pos = _fields(KEY, scale=3.0)
+    batch = dict(old_logprobs=old, prox_logprobs=prox, ref_logprobs=lp,
+                 advantages=adv, mask=mask, is_positive=pos)
+    l1, _ = rl_loss(lp, batch, LossConfig(pg_variant="tis", engine_mismatch_cap=1e9))
+    l2, _ = rl_loss(lp, batch, LossConfig(pg_variant="tis", engine_mismatch_cap=1.0))
+    assert float(l1) != float(l2)
+
+
+def test_critic_ppo_train_step():
+    """Actor-critic PPO path: finite losses, value head learns the reward."""
+    import sys
+    sys.path.insert(0, "tests")
+    from conftest import tiny
+    from repro.models import get_api
+    from repro.train.critic import make_critic_train_state, make_critic_train_step
+    from repro.train.optimizer import OptConfig
+
+    cfg = tiny("qwen3-4b")
+    api = get_api(cfg)
+    state = make_critic_train_state(api, jax.random.PRNGKey(0))
+    step = jax.jit(make_critic_train_step(
+        api, LossConfig(pg_variant="ppo"),
+        OptConfig(learning_rate=1e-2, warmup_steps=1)))
+
+    b, s = 4, 16
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    mask = jnp.zeros((b, s)).at[:, s // 2:].set(1.0)
+    lp = -jnp.abs(jax.random.normal(key, (b, s)))
+    batch = dict(tokens=tokens, mask=mask, rewards=jnp.asarray([1., 0., 1., 0.]),
+                 advantages=mask * 0.0, old_logprobs=lp, prox_logprobs=lp,
+                 ref_logprobs=lp, is_positive=jnp.asarray([1., 0., 1., 0.]))
+    vlosses = []
+    for _ in range(8):
+        state, metrics = step(state, batch)
+        assert bool(jnp.isfinite(metrics["loss"]))
+        vlosses.append(float(metrics["value_loss"]))
+    assert vlosses[-1] < vlosses[0]  # critic fits the terminal rewards

@@ -1,0 +1,120 @@
+"""SampleBuffer freshness invariants (the paper's §4.3), property-based."""
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sample_buffer import SampleBuffer, StaleSampleError
+from repro.core.types import Sample, next_uid
+
+
+def mk_sample(version: int) -> Sample:
+    return Sample(sample_id=next_uid(), prompt_id=0, replica_idx=0,
+                  prompt_tokens=np.zeros(2, np.int32),
+                  response_tokens=np.zeros(2, np.int32),
+                  logprobs=np.zeros(2, np.float32), version_started=version)
+
+
+@given(alpha=st.integers(0, 4), batch=st.integers(1, 8),
+       steps=st.integers(1, 12), data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_staleness_never_exceeds_alpha(alpha, batch, steps, data):
+    """Random interleaving of producer starts / completions / train steps:
+    every consumed sample satisfies version_gap <= alpha."""
+    buf = SampleBuffer(batch_size=batch, alpha=alpha)
+    pending = []  # versions of claimed-but-unfinished generations
+    consumed_gaps = []
+    for _ in range(steps):
+        # producers claim as many slots as the gate allows (random subset)
+        claims = data.draw(st.integers(0, 3 * batch))
+        for _ in range(claims):
+            v = buf.try_begin_generation()
+            if v is None:
+                break
+            pending.append(v)
+        # random completion order (long-tail inversion!)
+        data.draw(st.randoms(use_true_random=False)).shuffle(pending)
+        ncomplete = data.draw(st.integers(0, len(pending)))
+        for _ in range(ncomplete):
+            buf.put(mk_sample(pending.pop()))
+        # trainer consumes if a full batch is ready
+        if buf.occupancy() - 0 >= batch and len(buf._samples) >= batch:
+            got = buf.get_batch(batch, block=False)
+            v_now = buf.version
+            consumed_gaps.extend(v_now - s.version_started for s in got)
+            v = buf.advance_version()
+            # emulate AsyncController.abort_stale: in-flight generations that
+            # would violate alpha are ABORTed and recomputed under the new
+            # policy (re-initiated at the current version)
+            pending[:] = [pv if v - pv <= alpha else v for pv in pending]
+    assert all(g <= alpha for g in consumed_gaps)
+    # occupancy bound: (1+alpha) * batch
+    assert buf.occupancy() <= (1 + alpha) * batch
+
+
+def test_alpha_zero_is_synchronous():
+    """alpha=0: exactly one batch may be initiated per version."""
+    buf = SampleBuffer(batch_size=4, alpha=0)
+    versions = [buf.try_begin_generation() for _ in range(6)]
+    assert versions[:4] == [0, 0, 0, 0] and versions[4:] == [None, None]
+    for _ in range(4):
+        buf.put(mk_sample(0))
+    got = buf.get_batch(4)
+    assert len(got) == 4
+    buf.advance_version()
+    assert buf.try_begin_generation() == 1
+
+
+def test_consumption_is_oldest_version_first():
+    buf = SampleBuffer(batch_size=2, alpha=2)
+    for _ in range(6):
+        buf.try_begin_generation()
+    # completion order inverted: newer versions finish first
+    buf.put(mk_sample(0))
+    buf.advance_version()   # v1
+    buf.put(mk_sample(1))
+    buf.put(mk_sample(1))
+    buf.put(mk_sample(0))
+    got = buf.get_batch(2, block=False)
+    assert [s.version_started for s in got] == [0, 0]
+
+
+def test_strict_mode_raises_on_stale_put():
+    buf = SampleBuffer(batch_size=2, alpha=1)
+    v = buf.try_begin_generation()
+    buf.advance_version()
+    buf.advance_version()  # now v0 sample is 2 behind with alpha=1
+    with pytest.raises(StaleSampleError):
+        buf.put(mk_sample(v))
+
+
+def test_reclaim_returns_reservation():
+    buf = SampleBuffer(batch_size=2, alpha=0)
+    assert buf.try_begin_generation() == 0
+    assert buf.try_begin_generation() == 0
+    assert buf.try_begin_generation() is None
+    buf.reclaim(1)
+    assert buf.try_begin_generation() == 0
+
+
+def test_blocking_get_batch_wakes_on_put():
+    buf = SampleBuffer(batch_size=2, alpha=1)
+    out = {}
+
+    def consumer():
+        out["batch"] = buf.get_batch(2, timeout=5)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    buf.try_begin_generation()
+    buf.try_begin_generation()
+    buf.put(mk_sample(0))
+    buf.put(mk_sample(0))
+    t.join(timeout=5)
+    assert len(out["batch"]) == 2
+
+
+def test_capacity_property():
+    buf = SampleBuffer(batch_size=8, alpha=2.5)
+    assert buf.capacity == 28

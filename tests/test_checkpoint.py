@@ -1,0 +1,33 @@
+"""Checkpoint round-trips (bf16 + fp32 + int trees)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import tiny
+from repro.checkpoint import latest_checkpoint, load_tree, save_checkpoint
+from repro.models import get_api
+from repro.train.trainer import make_train_state
+
+
+def test_roundtrip_train_state(tmp_path, rng_key):
+    cfg = tiny("qwen3-4b")
+    api = get_api(cfg)
+    state = make_train_state(api, rng_key)
+    path = save_checkpoint(str(tmp_path), 7, state, arch=cfg.arch_id)
+    assert latest_checkpoint(str(tmp_path)) == path
+
+    like = jax.tree_util.tree_map(
+        lambda a: jnp.zeros(a.shape, a.dtype), state)
+    restored = load_tree(path, like)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_checkpoint_ordering(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.ones(3)})
+    save_checkpoint(str(tmp_path), 12, {"x": jnp.ones(3)})
+    save_checkpoint(str(tmp_path), 3, {"x": jnp.ones(3)})
+    assert latest_checkpoint(str(tmp_path)).endswith("step_00000012")

@@ -1,0 +1,160 @@
+"""Pallas kernel validation: interpret-mode kernels vs pure-jnp oracles,
+swept over shapes and dtypes (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (1, 4, 4, 128, 64),     # MHA
+    (2, 4, 2, 256, 64),     # GQA
+    (1, 8, 1, 128, 128),    # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 64])
+def test_flash_attention_sweep(b, h, kv, s, d, dtype, window):
+    q = jax.random.normal(KEY, (b, h, s, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, kv, s, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, kv, s, d), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    expected = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_blocks_dont_matter():
+    b, h, kv, s, d = 1, 2, 2, 256, 64
+    q = jax.random.normal(KEY, (b, h, s, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, kv, s, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, kv, s, d))
+    o1 = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    o2 = flash_attention(q, k, v, block_q=128, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (2, 8, 2, 512, 64),
+    (3, 4, 4, 256, 128),
+    (1, 8, 1, 1024, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, h, kv, s, d, dtype):
+    q = jax.random.normal(KEY, (b, h, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, kv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, kv, d), dtype)
+    lengths = jnp.asarray(np.random.default_rng(0).integers(1, s + 1, b), jnp.int32)
+    out = decode_attention(q, k, v, lengths, block_k=128, interpret=True)
+    expected = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_window():
+    b, h, kv, s, d = 2, 4, 2, 512, 64
+    q = jax.random.normal(KEY, (b, h, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, kv, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, kv, d))
+    lengths = jnp.asarray([512, 300], jnp.int32)
+    out = decode_attention(q, k, v, lengths, window=128, block_k=128, interpret=True)
+    expected = ref.decode_attention_ref(q, k, v, lengths, window=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,t,h,d", [(2, 64, 3, 32), (1, 128, 2, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan_sweep(b, t, h, d, dtype):
+    mk = lambda i, scale=0.5: (jax.random.normal(
+        jax.random.fold_in(KEY, i), (b, t, h, d)) * scale).astype(dtype)
+    r, k, v = mk(1), mk(2), mk(3)
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(KEY, 4),
+                                         (b, t, h, d))).astype(dtype)
+    u = (jax.random.normal(jax.random.fold_in(KEY, 5), (h, d)) * 0.1)
+    s0 = jax.random.normal(jax.random.fold_in(KEY, 6), (b, h, d, d)) * 0.1
+    y, s = rwkv6_scan(r, k, v, w, u, s0, block_t=32, interpret=True)
+    yr, sr = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), **_tol(dtype))
+
+
+def test_rwkv6_chunking_equivalence():
+    """State carry across time chunks must be exact."""
+    b, t, h, d = 1, 64, 2, 32
+    mk = lambda i: jax.random.normal(jax.random.fold_in(KEY, i), (b, t, h, d)) * 0.5
+    r, k, v = mk(1), mk(2), mk(3)
+    w = jax.nn.sigmoid(mk(4))
+    u = jax.random.normal(jax.random.fold_in(KEY, 5), (h, d)) * 0.1
+    s0 = jnp.zeros((b, h, d, d))
+    y1, s1 = rwkv6_scan(r, k, v, w, u, s0, block_t=16, interpret=True)
+    y2, s2 = rwkv6_scan(r, k, v, w, u, s0, block_t=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,t,w", [(2, 128, 96), (1, 256, 64), (3, 64, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan_sweep(b, t, w, dtype):
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (b, t, w))).astype(dtype)
+    bb = (jax.random.normal(jax.random.fold_in(KEY, 1), (b, t, w)) * 0.5).astype(dtype)
+    h0 = jax.random.normal(jax.random.fold_in(KEY, 2), (b, w)) * 0.5
+    hs, hl = rglru_scan(a, bb, h0, block_t=32, block_w=32, interpret=True)
+    hsr, hlr = ref.rglru_scan_ref(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hsr), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr), **_tol(dtype))
+
+
+def test_rglru_state_continuation():
+    """Scanning [0:T] == scanning [0:T/2] then [T/2:T] with carried state."""
+    b, t, w = 1, 64, 32
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (b, t, w)))
+    bb = jax.random.normal(jax.random.fold_in(KEY, 1), (b, t, w)) * 0.5
+    h0 = jnp.zeros((b, w))
+    full, _ = rglru_scan(a, bb, h0, block_t=32, block_w=32, interpret=True)
+    h1, hmid = rglru_scan(a[:, :32], bb[:, :32], h0, block_t=32, block_w=32,
+                          interpret=True)
+    h2, _ = rglru_scan(a[:, 32:], bb[:, 32:], hmid, block_t=32, block_w=32,
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.concatenate([h1, h2], axis=1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_non_causal():
+    """Encoder-style dense attention exercises the unguarded tile path."""
+    b, h, kv, s, d = 1, 2, 2, 128, 64
+    q = jax.random.normal(KEY, (b, h, s, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, kv, s, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, kv, s, d))
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    expected = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_window_prunes_but_matches():
+    """Narrow window: most tiles are pruned at block level; numerics exact."""
+    b, h, kv, s, d = 1, 2, 1, 512, 64
+    q = jax.random.normal(KEY, (b, h, s, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, kv, s, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, kv, s, d))
+    out = flash_attention(q, k, v, causal=True, window=32, block_q=64,
+                          block_k=64, interpret=True)
+    expected = ref.flash_attention_ref(q, k, v, causal=True, window=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)

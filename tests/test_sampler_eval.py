@@ -1,0 +1,65 @@
+"""Sampler (temperature / top-k / top-p) + Pass@k evaluation harness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.eval import evaluate_passk, pass_at_k_estimator
+from repro.models import get_api
+from repro.rollout.sampler import sample_tokens
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_greedy_is_argmax():
+    logits = jax.random.normal(KEY, (4, 16))
+    toks, lp = sample_tokens(KEY, logits, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(logits, -1)))
+    assert float(lp.max()) <= 0.0
+
+
+def test_top_k_restricts_support():
+    logits = jnp.asarray([[0.0, 1.0, 2.0, 3.0]])
+    hits = set()
+    for i in range(64):
+        t, _ = sample_tokens(jax.random.fold_in(KEY, i), logits, top_k=2)
+        hits.add(int(t[0]))
+    assert hits <= {2, 3}
+
+
+def test_top_p_restricts_support():
+    # p(3)=0.64, p(2)=0.24 -> top_p=0.7 keeps exactly {3, 2}
+    logits = jnp.log(jnp.asarray([[0.04, 0.08, 0.24, 0.64]]))
+    hits = set()
+    for i in range(128):
+        t, _ = sample_tokens(jax.random.fold_in(KEY, i), logits, top_p=0.7)
+        hits.add(int(t[0]))
+    assert hits == {2, 3}
+
+
+def test_top_p_one_is_full_distribution():
+    logits = jax.random.normal(KEY, (2, 8))
+    t1, lp1 = sample_tokens(KEY, logits, top_p=1.0)
+    t2, lp2 = sample_tokens(KEY, logits)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_allclose(np.asarray(lp1), np.asarray(lp2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,c,k,expected", [
+    (8, 0, 4, 0.0), (8, 8, 1, 1.0), (2, 1, 1, 0.5), (4, 2, 2, 5.0 / 6.0),
+])
+def test_pass_at_k_estimator(n, c, k, expected):
+    assert pass_at_k_estimator(n, c, k) == pytest.approx(expected)
+
+
+def test_evaluate_passk_monotone_in_k():
+    cfg = tiny("qwen3-4b", vocab_size=32)
+    api = get_api(cfg)
+    params = api.init(KEY)
+    res = evaluate_passk(api, params, num_prompts=6, n_per_prompt=4,
+                         ks=(1, 2, 4), max_new_tokens=4)
+    vals = [res.pass_at_k[k] for k in (1, 2, 4)]
+    assert vals == sorted(vals)
+    assert res.pass_at_1 == pytest.approx(res.pass_at_k[1])
