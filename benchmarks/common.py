@@ -1,6 +1,7 @@
-"""Shared benchmark utilities: CSV emission + calibrated workloads."""
+"""Shared benchmark utilities: CSV/JSON emission + calibrated workloads."""
 from __future__ import annotations
 
+import json
 import sys
 
 import numpy as np
@@ -38,3 +39,11 @@ def flush_csv(path: str | None = None) -> None:
             f.write("name,value,derived\n")
             for n, v, d in ROWS:
                 f.write(f"{n},{v},{d}\n")
+
+
+def flush_json(path: str, payload: dict) -> None:
+    """Structured benchmark output (BENCH_*.json) for machine comparison."""
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=float)
+        f.write("\n")
+    print(f"wrote {path}")

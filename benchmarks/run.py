@@ -10,7 +10,7 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (bench_engine, fig1b_throughput_scaling,
+from benchmarks import (bench_engine, bench_paged_engine, fig1b_throughput_scaling,
                         fig3_allocation_and_rollout, fig4_offpolicy_stability,
                         fig7_queue_scheduling, fig8_prompt_replication,
                         fig9_env_async, fig10_redundant_env,
@@ -28,6 +28,7 @@ MODULES = [
     ("fig4", fig4_offpolicy_stability),
     ("fig11", fig11_real_agentic),
     ("engine", bench_engine),
+    ("paged_engine", bench_paged_engine),
     ("roofline", roofline),
 ]
 

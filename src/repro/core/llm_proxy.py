@@ -26,7 +26,18 @@ from repro.core.types import GenerationRequest, GenerationResult, RolloutTask
 
 
 class InferenceEngine(Protocol):
-    """Slot-based continuous-batching engine (see rollout/engine.py)."""
+    """Continuous-batching engine (slot-based: rollout/engine.py; paged-KV
+    with chunked prefill: rollout/paged_engine.py).
+
+    Optional capabilities, feature-detected by the proxy via getattr:
+
+    * ``supports_retain`` (bool) — ``abort(rid, retain=True)`` parks the
+      request's KV pages; ``resume_request(old_rid, new_rid, max_new)``
+      re-attaches them (no prefix re-prefill); ``release_retained(rid)``
+      frees parked pages; ``can_resume(rid, max_new)`` gates admission.
+    * ``can_admit(prompt_len, max_new)`` — admission gate beyond free
+      slots (e.g. page-pool headroom in the paged engine).
+    """
 
     @property
     def num_free_slots(self) -> int: ...
@@ -67,12 +78,30 @@ class LLMProxy:
         self._commands.put(("ADD", req))
         return req.request_id
 
-    def abort(self, request_id: int) -> None:
-        self._commands.put(("ABORT", request_id))
+    def generate_resumed(self, task: RolloutTask, version: int,
+                         callback: Callable[[GenerationResult], None],
+                         resume_from: int) -> int:
+        """Re-initiate an ABORTed-with-retain request: the engine re-attaches
+        the retained KV pages instead of prefilling the prompt."""
+        req = GenerationRequest(request_id=task.task_id, task=task,
+                                version_started=version, callback=callback,
+                                resume_from=resume_from)
+        self._commands.put(("ADD", req))
+        return req.request_id
 
-    def abort_stale(self, min_version: int) -> None:
-        """ABORT every in-flight request initiated before min_version."""
-        self._commands.put(("ABORT_STALE", min_version))
+    def abort(self, request_id: int, retain: bool = False) -> None:
+        self._commands.put(("ABORT", (request_id, retain)))
+
+    def abort_stale(self, min_version: int, retain: bool = False) -> None:
+        """ABORT every in-flight request initiated before min_version.
+
+        ``retain=True`` (engines with ``supports_retain``) parks each
+        victim's KV pages so the subsequent resume skips the prefix."""
+        self._commands.put(("ABORT_STALE", (min_version, retain)))
+
+    def release_retained(self, request_id: int) -> None:
+        """Free the KV pages of a retained request that won't be resumed."""
+        self._commands.put(("RELEASE", request_id))
 
     def suspend(self) -> None:
         """Pause the loop after the current engine step (weight-sync phase 1)."""
@@ -136,39 +165,89 @@ class LLMProxy:
             if op == "ADD":
                 self._pending.append(arg)
             elif op == "ABORT":
-                self._do_abort(arg)
+                rid, retain = arg
+                self._do_abort(rid, retain)
             elif op == "ABORT_STALE":
+                min_version, retain = arg
                 stale = [rid for rid, r in self._active.items()
-                         if r.version_started < arg]
+                         if r.version_started < min_version]
                 for rid in stale:
-                    self._do_abort(rid)
+                    self._do_abort(rid, retain)
                 # pending (not yet started) requests simply re-tag: they will
                 # start under the current weights.
                 for r in self._pending:
-                    r.version_started = max(r.version_started, arg)
+                    r.version_started = max(r.version_started, min_version)
+            elif op == "RELEASE":
+                release = getattr(self.engine, "release_retained", None)
+                if release is not None:
+                    release(arg)
 
-    def _do_abort(self, request_id: int) -> None:
+    def _do_abort(self, request_id: int, retain: bool = False) -> None:
         req = self._active.pop(request_id, None)
         if req is not None:
-            partial = self.engine.abort(request_id)
+            retain = retain and getattr(self.engine, "supports_retain", False)
+            if retain:
+                partial = self.engine.abort(request_id, retain=True)
+            else:
+                partial = self.engine.abort(request_id)
             self.requests_aborted += 1
             req.callback(GenerationResult(
                 request_id=request_id, task=req.task,
                 tokens=getattr(partial, "tokens", None),
                 logprobs=getattr(partial, "logprobs", None),
                 version_started=req.version_started,
-                aborted=True, partial=True))
+                aborted=True, partial=True,
+                resumable=getattr(partial, "resumable", False)))
         else:
-            # not yet admitted: drop from pending
+            # not yet admitted: drop from pending — and free the retained
+            # pages of a dropped resume request (nobody else will).
+            release = getattr(self.engine, "release_retained", None)
+            for r in self._pending:
+                if (r.request_id == request_id and r.resume_from is not None
+                        and release is not None):
+                    release(r.resume_from)
             self._pending = collections.deque(
                 r for r in self._pending if r.request_id != request_id)
 
+    def _try_admit(self, req: GenerationRequest) -> bool:
+        """Admit one request if the engine can take it right now."""
+        if req.resume_from is not None:
+            can_resume = getattr(self.engine, "can_resume", None)
+            if can_resume is not None and not can_resume(
+                    req.resume_from, req.task.max_new_tokens):
+                return False
+            self.engine.resume_request(req.resume_from, req.request_id,
+                                       req.task.max_new_tokens)
+            return True
+        can_admit = getattr(self.engine, "can_admit", None)
+        if can_admit is not None and not can_admit(
+                len(req.task.prompt_tokens), req.task.max_new_tokens):
+            return False
+        self.engine.add_request(req.request_id, req.task.prompt_tokens,
+                                req.task.max_new_tokens)
+        return True
+
     def _admit_pending(self) -> None:
         while self._pending and self.engine.num_free_slots > 0:
-            req = self._pending.popleft()
-            self.engine.add_request(req.request_id, req.task.prompt_tokens,
-                                    req.task.max_new_tokens)
-            self._active[req.request_id] = req
+            req = self._pending[0]
+            if self._try_admit(req):
+                self._pending.popleft()
+                self._active[req.request_id] = req
+                continue
+            # Head is blocked (e.g. page-starved).  Resume requests further
+            # back MUST be allowed to bypass it: they re-attach pages that
+            # are already allocated and are often the only way pages ever
+            # free up again — strict FIFO here would deadlock the pool.
+            admitted_any = False
+            for r in list(self._pending):
+                if self.engine.num_free_slots <= 0:
+                    break
+                if r.resume_from is not None and self._try_admit(r):
+                    self._pending.remove(r)
+                    self._active[r.request_id] = r
+                    admitted_any = True
+            if not admitted_any:
+                break
 
     # ------------------------------------------------------------- metrics
     @property

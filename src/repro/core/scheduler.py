@@ -168,19 +168,48 @@ class RolloutProducer(threading.Thread):
         if result.aborted:
             if self.buffer.closed or self._stop.is_set():
                 self.buffer.reclaim(1)
+                if result.resumable:
+                    # the engine parked this request's pages; nobody will
+                    # resume it, so hand them back to the pool.
+                    self.proxy.release_retained(result.request_id)
                 return
-            # ABORT -> resume: the partial response is NOT wasted.  The
-            # decoded prefix becomes part of the prompt of a resumed task
-            # (KV recomputed under the new weights at prefill); its original
+            # ABORT -> resume: the partial response is NOT wasted.  Its
             # behaviour-policy logprobs are kept — exactly what IS-based
-            # correctors need — and the sample is re-initiated at the
-            # current version, keeping the already-claimed freshness slot.
+            # correctors need (new-policy logprobs are recomputed by the
+            # trainer's forward where the correctors consume them, never
+            # here) — and the sample is re-initiated at the current
+            # version, keeping the already-claimed freshness slot.
             partial = np.asarray(result.tokens) if result.tokens is not None \
                 else np.zeros((0,), np.int32)
             done = task.meta.get("resumed_tokens", np.zeros((0,), np.int32))
             lps = task.meta.get("resumed_logprobs", np.zeros((0,), np.float32))
             plp = np.asarray(result.logprobs) if result.logprobs is not None \
                 else np.zeros((0,), np.float32)
+            carried_meta = {
+                **{k: v for k, v in task.meta.items()
+                   if not k.startswith("resumed_")},
+                "orig_prompt_len": task.meta.get(
+                    "orig_prompt_len", len(np.asarray(task.prompt_tokens))),
+                "resumed_tokens": np.concatenate([done, partial]),
+                "resumed_logprobs": np.concatenate([lps, plp]),
+            }
+            if result.resumable:
+                # Paged engine retained the prefix's KV pages: resume
+                # re-attaches them — zero prefix recomputation.  The prompt
+                # stays the ORIGINAL prompt; the decoded prefix lives in
+                # the retained pages and in resumed_tokens meta.
+                resumed = RolloutTask(
+                    task_id=next_uid(), prompt_id=task.prompt_id,
+                    replica_idx=task.replica_idx,
+                    prompt_tokens=np.asarray(task.prompt_tokens, np.int32),
+                    max_new_tokens=max(1, task.max_new_tokens - len(partial)),
+                    group_id=task.group_id, meta=carried_meta)
+                self.proxy.generate_resumed(resumed, self.buffer.version,
+                                            self._on_result,
+                                            resume_from=result.request_id)
+                return
+            # Slot engine fallback: the decoded prefix becomes part of the
+            # prompt of a resumed task (KV recomputed at prefill).
             resumed = RolloutTask(
                 task_id=next_uid(), prompt_id=task.prompt_id,
                 replica_idx=task.replica_idx,
@@ -188,15 +217,7 @@ class RolloutProducer(threading.Thread):
                     [np.asarray(task.prompt_tokens, np.int32),
                      partial.astype(np.int32)]),
                 max_new_tokens=max(1, task.max_new_tokens - len(partial)),
-                group_id=task.group_id,
-                meta={
-                    **{k: v for k, v in task.meta.items()
-                       if not k.startswith("resumed_")},
-                    "orig_prompt_len": task.meta.get(
-                        "orig_prompt_len", len(np.asarray(task.prompt_tokens))),
-                    "resumed_tokens": np.concatenate([done, partial]),
-                    "resumed_logprobs": np.concatenate([lps, plp]),
-                })
+                group_id=task.group_id, meta=carried_meta)
             self.proxy.generate(resumed, self.buffer.version, self._on_result)
             return
         prefix_t = task.meta.get("resumed_tokens", np.zeros((0,), np.int32))

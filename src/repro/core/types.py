@@ -92,6 +92,9 @@ class GenerationRequest:
     task: RolloutTask
     version_started: int
     callback: Callable[["GenerationResult"], None]
+    # set on a resumed request: the retained (aborted) request_id whose
+    # KV pages the engine re-attaches instead of prefilling the prompt.
+    resume_from: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -103,3 +106,6 @@ class GenerationResult:
     version_started: int
     aborted: bool = False
     partial: bool = False
+    # ABORT with retained KV pages: the engine can resume this request
+    # (by its request_id) without re-prefilling the decoded prefix.
+    resumable: bool = False

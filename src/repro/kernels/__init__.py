@@ -7,5 +7,6 @@ dispatching jit'd wrapper.
 from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.decode_attention import decode_attention  # noqa: F401
+from repro.kernels.paged_decode_attention import paged_decode_attention  # noqa: F401
 from repro.kernels.rwkv6_scan import rwkv6_scan  # noqa: F401
 from repro.kernels.rglru_scan import rglru_scan  # noqa: F401

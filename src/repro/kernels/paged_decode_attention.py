@@ -1,0 +1,119 @@
+"""Pallas TPU paged decode attention: one query token vs. a paged KV pool.
+
+The continuous-batching engine keeps KV in a shared page pool
+(``(num_pages, page_size, n_kv, d)`` per layer) with per-request block
+tables.  This kernel is the decode inner loop on that layout: the block
+table and sequence lengths ride in as scalar-prefetch operands
+(``PrefetchScalarGridSpec``), so each grid step's K/V tile is DMA'd
+straight from the *physical* page the table points at — no dense
+gather/copy of the request's KV ever materializes.
+
+Grid: (batch, kv_head, pages_per_seq) — page dim innermost for the online
+softmax scratch carry, same structure as ``decode_attention.py``.
+Unassigned table entries (−1) are clamped to page 0 for the DMA and masked
+out positionally; one compiled kernel serves every fill level.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  page_size: int, pages_per_seq: int, softcap):
+    bi = pl.program_id(0)
+    pj = pl.program_id(2)
+
+    @pl.when(pj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, d)
+    k = k_ref[0, 0].astype(jnp.float32)          # (page_size, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    d = q.shape[-1]
+    length = len_ref[bi]
+    assigned = bt_ref[bi * pages_per_seq + pj] >= 0
+
+    logits = jax.lax.dot_general(q * (d ** -0.5), k,
+                                 (((1,), (1,)), ((), ())))  # (G, page_size)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = pj * page_size + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    mask = (pos < length) & assigned
+    logits = jnp.where(mask, logits, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p.astype(v.dtype), v)
+    m_scr[...] = m_new
+
+    @pl.when(pj == pages_per_seq - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           softcap=None, interpret: bool = False):
+    """q: (B, H, D); k_pages/v_pages: (N, page_size, KV, D);
+    block_tables: (B, P) int32 physical page ids (-1 = unassigned);
+    lengths: (B,) int32 tokens written so far.  Returns (B, H, D)."""
+    b, h, d = q.shape
+    n, page_size, kv = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    p_seq = block_tables.shape[1]
+    g = h // kv
+    g_pad = max(8, g)  # sublane minimum
+
+    qg = q.reshape(b, kv, g, d)
+    if g_pad != g:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
+    # (N, page, KV, D) -> (N, KV, page, D) tile-friendly layout
+    kt = k_pages.transpose(0, 2, 1, 3)
+    vt = v_pages.transpose(0, 2, 1, 3)
+
+    bt_flat = block_tables.reshape(-1).astype(jnp.int32)
+
+    def page_map(bb, hh, pj, bt, ln):
+        del ln
+        idx = jnp.maximum(bt[bb * p_seq + pj], 0)  # -1 -> garbage page 0
+        return (idx, hh, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, p_seq),
+        in_specs=[
+            pl.BlockSpec((1, 1, g_pad, d), lambda bb, hh, pj, bt, ln: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d), page_map),
+            pl.BlockSpec((1, 1, page_size, d), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g_pad, d),
+                               lambda bb, hh, pj, bt, ln: (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, 1), jnp.float32),
+            pltpu.VMEM((g_pad, 1), jnp.float32),
+            pltpu.VMEM((g_pad, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, page_size=page_size,
+                               pages_per_seq=p_seq, softcap=softcap)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g_pad, d), q.dtype),
+        interpret=interpret,
+    )(bt_flat, lengths.astype(jnp.int32), qg, kt, vt)
+    return out[:, :, :g, :].reshape(b, h, d)

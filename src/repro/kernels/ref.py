@@ -47,6 +47,32 @@ def decode_attention_ref(q, k, v, lengths, *, window=None):
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                               softcap=None):
+    """Paged single-token GQA decode. q: (B, H, D);
+    k_pages/v_pages: (N, page_size, KV, D); block_tables: (B, P) int32
+    physical page ids (-1 = unassigned); lengths: (B,) tokens written.
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    page_size, kv = k_pages.shape[1], k_pages.shape[2]
+    g = h // kv
+    idx = jnp.maximum(block_tables, 0)
+    k = k_pages[idx].reshape(b, -1, kv, d)      # (B, P*page, KV, D)
+    v = v_pages[idx].reshape(b, -1, kv, d)
+    s = k.shape[1]
+    qf = q.astype(jnp.float32).reshape(b, kv, g, d) * (d ** -0.5)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32))
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jnp.arange(s)[None, :]
+    mask = (pos < lengths[:, None]) & jnp.repeat(block_tables >= 0, page_size,
+                                                 axis=1)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
 def rwkv6_scan_ref(r, k, v, w, u, state):
     """RWKV-6 WKV recurrence. r/k/v/w: (B, T, H, D); u: (H, D);
     state: (B, H, D, D) fp32. Returns (y (B,T,H,D) fp32, new_state)."""

@@ -14,6 +14,12 @@ models only through this facade:
     tokens          (B, S) int32          all families
     frames          (B, T, D)             audio (stubbed frontend output)
     patches         (B, P, D)             vlm   (stubbed vision embeddings)
+
+Attention families (dense/moe) additionally expose the paged-KV views used
+by the paged continuous-batching engine (rollout/paged_engine.py): the KV
+cache is a shared page pool indexed through per-request block tables, and
+prefill happens in fixed-size chunks instead of one variable-length call.
+Families without positional KV (ssm/hybrid/audio/vlm) leave these None.
 """
 from __future__ import annotations
 
@@ -22,7 +28,7 @@ from typing import Any, Callable, Optional
 
 import jax.numpy as jnp
 
-from repro.models import encdec, transformer
+from repro.models import encdec, paged, transformer
 from repro.models.config import ModelConfig
 
 
@@ -34,6 +40,11 @@ class ModelAPI:
     prefill: Callable[..., Any]      # (params, batch, cache) -> (logits, cache)
     decode_step: Callable[..., Any]  # (params, token, pos, cache) -> (logits, cache)
     init_cache: Callable[..., Any]   # (batch, max_len) -> cache
+    # paged-KV views (None for families without positional KV caches)
+    init_paged_cache: Optional[Callable[..., Any]] = None  # (num_pages, page_size) -> PagedKVCache
+    prefill_chunk: Optional[Callable[..., Any]] = None     # (params, tokens, valid, start, block_row, cache) -> (logits, cache)
+    decode_paged: Optional[Callable[..., Any]] = None      # (params, token, pos, cache, block_tables, attn_impl=) -> (logits, cache)
+    cache_view: Optional[Callable[..., Any]] = None        # (layer_pages, block_row) -> (k, v, valid) dense per-request view
 
 
 def get_api(cfg: ModelConfig) -> ModelAPI:
@@ -84,4 +95,24 @@ def get_api(cfg: ModelConfig) -> ModelAPI:
         extra = cfg.num_image_tokens if cfg.family == "vlm" else 0
         return transformer.init_cache(cfg, batch, max_len + extra)
 
-    return ModelAPI(cfg, init, apply, prefill, decode_step, init_cache)
+    if not paged.supports_paged(cfg):
+        return ModelAPI(cfg, init, apply, prefill, decode_step, init_cache)
+
+    def init_paged_cache(num_pages, page_size):
+        return paged.init_paged_cache(cfg, num_pages, page_size)
+
+    def prefill_chunk(params, tokens, valid, start, block_row, cache, *,
+                      moe_mode="ep"):
+        return paged.paged_prefill_chunk(params, cfg, tokens, valid, start,
+                                         block_row, cache, moe_mode=moe_mode)
+
+    def decode_paged(params, token, pos, cache, block_tables, *,
+                     moe_mode="ep", attn_impl="ref"):
+        return paged.paged_decode_step(params, cfg, token, pos, cache,
+                                       block_tables, moe_mode=moe_mode,
+                                       attn_impl=attn_impl)
+
+    return ModelAPI(cfg, init, apply, prefill, decode_step, init_cache,
+                    init_paged_cache=init_paged_cache,
+                    prefill_chunk=prefill_chunk, decode_paged=decode_paged,
+                    cache_view=paged.gather_request_view)

@@ -1,0 +1,240 @@
+"""Paged KV cache: block tables over a shared page pool (TPU-native vLLM).
+
+The slot engine's cache is ``(num_slots, S_max, ...)`` — every slot owns a
+full-length row, admission prefills the whole prompt in one variable-length
+call, and an aborted request's KV is gone.  Here the KV lives in a shared
+page pool per layer::
+
+    k_pages / v_pages : (num_layers, num_pages, page_size, n_kv, head_dim)
+
+and each request owns an int32 *block table* row ``(pages_per_seq,)`` of
+physical page indices (−1 = unassigned).  Page 0 is reserved as a garbage
+page: writes from masked-out lanes are redirected there so every engine
+step keeps static shapes.
+
+Two jit-able forwards, both with fixed shapes so one compiled executable
+serves every prompt length / fill level:
+
+* ``paged_prefill_chunk`` — one fixed-size chunk of prompt tokens for ONE
+  request (batch=1), attending to the request's previously written pages
+  plus in-chunk causality.  Chunked prefill means admitting a long prompt
+  costs one chunk per engine step instead of stalling the whole batch.
+* ``paged_decode_step`` — one token for EVERY slot, gathering K/V through
+  the block tables (pure-JAX gather here; the Pallas kernel in
+  ``repro.kernels.paged_decode_attention`` is the accelerator path).
+
+Supported families: dense / moe (decoder-only attention).  Recurrent and
+hybrid families keep per-request state, not positional KV — paging does
+not apply to them.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, ffn, module, moe
+from repro.models.config import ModelConfig
+
+
+class PagedKVCache(NamedTuple):
+    k_pages: jax.Array  # (num_layers, num_pages, page_size, n_kv, head_dim)
+    v_pages: jax.Array
+
+
+GARBAGE_PAGE = 0  # physical page 0 is never allocated to a request
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    return cfg.family in ("dense", "moe")
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int) -> PagedKVCache:
+    if not supports_paged(cfg):
+        raise ValueError(f"paged KV cache requires an attention family, got {cfg.family}")
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads, hd)
+    return PagedKVCache(k_pages=jnp.zeros(shape, dt), v_pages=jnp.zeros(shape, dt))
+
+
+def pages_per_seq(max_total_len: int, page_size: int) -> int:
+    return -(-max_total_len // page_size)
+
+
+# ---------------------------------------------------------------------------
+# per-request dense view (debug / tests / reference attention)
+# ---------------------------------------------------------------------------
+
+def gather_request_view(layer_pages: Tuple[jax.Array, jax.Array], block_row):
+    """Dense (S_view, n_kv, hd) K/V view of one request's table row.
+
+    ``S_view = pages_per_seq * page_size``; positions beyond the request's
+    written length hold stale pool contents — callers must mask by length."""
+    k_pages, v_pages = layer_pages
+    page_size = k_pages.shape[1]
+    idx = jnp.maximum(block_row, 0)
+    nkv, hd = k_pages.shape[2], k_pages.shape[3]
+    k = k_pages[idx].reshape(-1, nkv, hd)
+    v = v_pages[idx].reshape(-1, nkv, hd)
+    valid = jnp.repeat(block_row >= 0, page_size)
+    return k, v, valid
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (batch=1, one chunk of one request)
+# ---------------------------------------------------------------------------
+
+def _paged_attn_prefill(p, cfg: ModelConfig, x, positions, valid, layer_pages,
+                        block_row):
+    """x: (1, C, D); positions/valid: (1, C); block_row: (P,).
+
+    Writes the chunk's K/V into the request's pages (invalid lanes land in
+    the garbage page) and attends causally over the request's whole table
+    — earlier chunks included."""
+    q = attention._project_q(p, cfg, x, positions)
+    k, v = attention._project_kv(p, cfg, x, positions)
+    k_pages, v_pages = layer_pages
+    page_size = k_pages.shape[1]
+
+    logical = positions[0] // page_size                      # (C,)
+    logical = jnp.clip(logical, 0, block_row.shape[0] - 1)
+    phys = jnp.where(valid[0], block_row[logical], GARBAGE_PAGE)
+    phys = jnp.maximum(phys, GARBAGE_PAGE)                   # -1 -> garbage
+    off = positions[0] % page_size
+    k_pages = k_pages.at[phys, off].set(k[0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v[0].astype(v_pages.dtype))
+
+    kd, vd, page_valid = gather_request_view((k_pages, v_pages), block_row)
+    s_view = kd.shape[0]
+    kv_pos = jnp.arange(s_view, dtype=jnp.int32)[None, :]
+    kv_valid = page_valid[None, :]
+    # causality (kv_pos <= q_pos) masks every not-yet-written position: the
+    # request fills its table contiguously, so any stale pool content sits
+    # at kv_pos > q_pos.  Invalid query lanes get q_pos = -1 (fully masked).
+    q_pos = jnp.where(valid, positions, -1)
+    out = attention.attend(q, kd[None], vd[None], q_pos, kv_pos, kv_valid,
+                           window=cfg.sliding_window,
+                           softcap=cfg.attn_logit_softcap)
+    c = x.shape[1]
+    return out.reshape(1, c, cfg.q_dim) @ p["wo"], (k_pages, v_pages)
+
+
+def _paged_block_prefill(p, cfg: ModelConfig, x, positions, valid, layer_pages,
+                         block_row, *, moe_mode: str):
+    y, layer_pages = _paged_attn_prefill(
+        p["attn"], cfg, module.rmsnorm(p["ln1"], x, cfg.norm_eps),
+        positions, valid, layer_pages, block_row)
+    x = x + y
+    h = module.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        y, _ = moe.moe_apply(p["moe"], cfg, h, mode=moe_mode)
+    else:
+        y = ffn.mlp(p["mlp"], cfg, h)
+    return x + y, layer_pages
+
+
+def paged_prefill_chunk(params, cfg: ModelConfig, tokens, valid, start,
+                        block_row, cache: PagedKVCache, *, moe_mode: str = "ep"):
+    """One prefill chunk of one request.
+
+    tokens/valid: (1, C); start: scalar int32 (chunk's first position);
+    block_row: (pages_per_seq,) int32.  Returns (last-valid-position logits
+    (1, V) fp32, cache)."""
+    x = params["embed"][tokens]
+    c = tokens.shape[1]
+    positions = start + jnp.arange(c, dtype=jnp.int32)[None, :]
+
+    def body(h, inp):
+        lp, pages = inp
+        h2, pages2 = _paged_block_prefill(lp, cfg, h, positions, valid, pages,
+                                          block_row, moe_mode=moe_mode)
+        return h2, pages2
+
+    x, pages = jax.lax.scan(body, x, (params["blocks"],
+                                      (cache.k_pages, cache.v_pages)))
+    from repro.models.transformer import _last_position_logits
+    return (_last_position_logits(params, cfg, x, valid),
+            PagedKVCache(k_pages=pages[0], v_pages=pages[1]))
+
+
+# ---------------------------------------------------------------------------
+# decode (one token for every slot, through the block tables)
+# ---------------------------------------------------------------------------
+
+def _paged_attn_decode(p, cfg: ModelConfig, x, pos, layer_pages, block_tables,
+                       *, attn_impl: str):
+    """x: (B, 1, D); pos: (B,); block_tables: (B, P) (-1 rows = masked slot)."""
+    b = x.shape[0]
+    positions = pos[:, None]
+    q = attention._project_q(p, cfg, x, positions)           # (B,1,KV,G,hd)
+    k_new, v_new = attention._project_kv(p, cfg, x, positions)
+    k_pages, v_pages = layer_pages
+    page_size = k_pages.shape[1]
+
+    logical = jnp.clip(pos // page_size, 0, block_tables.shape[1] - 1)
+    phys = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
+    phys = jnp.maximum(phys, GARBAGE_PAGE)                   # masked -> garbage
+    off = pos % page_size
+    k_pages = k_pages.at[phys, off].set(k_new[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v_new[:, 0].astype(v_pages.dtype))
+
+    if attn_impl in ("kernel", "kernel_interpret"):
+        from repro.kernels.paged_decode_attention import paged_decode_attention
+        hd = cfg.resolved_head_dim
+        qh = q.reshape(b, cfg.num_heads, hd)
+        out = paged_decode_attention(
+            qh, k_pages, v_pages, block_tables, pos + 1,
+            softcap=cfg.attn_logit_softcap,
+            interpret=(attn_impl == "kernel_interpret"))
+        out = out.reshape(b, 1, cfg.q_dim)
+    else:
+        nkv, hd = k_pages.shape[2], k_pages.shape[3]
+        idx = jnp.maximum(block_tables, 0)
+        kd = k_pages[idx].reshape(b, -1, nkv, hd)
+        vd = v_pages[idx].reshape(b, -1, nkv, hd)
+        s_view = kd.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(s_view, dtype=jnp.int32)[None, :],
+                                  (b, s_view))
+        kv_valid = jnp.repeat(block_tables >= 0, page_size, axis=1)
+        out = attention._attend_direct(q, kd, vd, positions, kv_pos, kv_valid,
+                                       window=cfg.sliding_window,
+                                       softcap=cfg.attn_logit_softcap)
+        out = out.reshape(b, 1, cfg.q_dim)
+    return out @ p["wo"], (k_pages, v_pages)
+
+
+def _paged_block_decode(p, cfg: ModelConfig, x, pos, layer_pages, block_tables,
+                        *, moe_mode: str, attn_impl: str):
+    y, layer_pages = _paged_attn_decode(
+        p["attn"], cfg, module.rmsnorm(p["ln1"], x, cfg.norm_eps),
+        pos, layer_pages, block_tables, attn_impl=attn_impl)
+    x = x + y
+    h = module.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        y, _ = moe.moe_apply(p["moe"], cfg, h, mode=moe_mode)
+    else:
+        y = ffn.mlp(p["mlp"], cfg, h)
+    return x + y, layer_pages
+
+
+def paged_decode_step(params, cfg: ModelConfig, token, pos, cache: PagedKVCache,
+                      block_tables, *, moe_mode: str = "ep",
+                      attn_impl: str = "ref"):
+    """One-token decode for every slot. token/pos: (B,) int32;
+    block_tables: (B, P) int32 (pass -1 rows for slots that must not step).
+    Returns (logits (B, V) fp32, cache)."""
+    x = params["embed"][token][:, None, :]
+
+    def body(h, inp):
+        lp, pages = inp
+        h2, pages2 = _paged_block_decode(lp, cfg, h, pos, pages, block_tables,
+                                         moe_mode=moe_mode, attn_impl=attn_impl)
+        return h2, pages2
+
+    x, pages = jax.lax.scan(body, x, (params["blocks"],
+                                      (cache.k_pages, cache.v_pages)))
+    from repro.models.transformer import _unembed
+    return (_unembed(params, cfg, x)[:, 0, :],
+            PagedKVCache(k_pages=pages[0], v_pages=pages[1]))

@@ -1,2 +1,3 @@
 from repro.rollout.engine import DecodeEngine  # noqa: F401
+from repro.rollout.paged_engine import PagedDecodeEngine  # noqa: F401
 from repro.rollout.sampler import sample_tokens  # noqa: F401

@@ -1,0 +1,366 @@
+"""Paged-KV continuous-batching engine with chunked prefill + abort→resume.
+
+The slot engine (`engine.py`) prefills each admitted prompt at batch=1 in a
+single variable-length call — every active request stalls for the whole
+prefill, each distinct prompt length compiles a new executable, and an
+ABORTed request's KV is lost (resume re-prefills the accumulated prefix).
+This engine fixes all three pathologies:
+
+* **Paged KV** — KV lives in a shared page pool with per-request block
+  tables (`repro.models.paged`); admission allocates pages, ABORT with
+  ``retain=True`` parks them, resume re-attaches them.  No prefix is ever
+  recomputed on the abort→resume path (§5.1 queue scheduling + the async
+  architecture's abort-under-new-weights).  Behaviour-policy logprobs of
+  the retained prefix are kept — they are exactly what the IS-based
+  off-policy correctors consume; new-policy logprobs are recomputed by the
+  trainer's forward pass where needed, never by the engine.
+* **Chunked prefill** — prompts are fed in fixed-size token chunks
+  co-scheduled with decode inside the same ``step()``: one chunk of ONE
+  prefilling request plus one decode token for EVERY decoding slot.
+  Admitting a 32k prompt no longer blocks the batch for a full prefill.
+* **Static shapes** — ``step()`` is a single jitted call (chunk + decode
+  fused, ``lax.cond``-gated) whose shapes never depend on prompt length or
+  fill level: exactly ONE executable serves every workload (TPU-friendly;
+  the slot engine compiles one prefill per padded prompt length).
+
+Implements `repro.core.llm_proxy.InferenceEngine` plus the retain/resume
+extension consumed by `repro.core.scheduler.RolloutProducer`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import GenerationResult
+from repro.models import paged
+from repro.models.api import ModelAPI
+from repro.rollout.sampler import sample_tokens
+
+_PREFILL = "prefill"
+_DECODE = "decode"
+
+
+@dataclasses.dataclass
+class _SlotState:
+    request_id: int
+    prompt: np.ndarray
+    tokens: List[int]
+    logprobs: List[float]
+    remaining: int
+    phase: str = _PREFILL
+    prefill_done: int = 0
+    carried_last: Optional[int] = None   # last sampled token of a resumed prefix
+
+
+@dataclasses.dataclass
+class _Retained:
+    """A parked request: pages stay allocated, decode state frozen."""
+    pages: List[int]
+    phase: str
+    prompt: np.ndarray
+    prefill_done: int
+    length: int                          # KV positions written (pos value)
+    last_token: int
+
+
+class PagedDecodeEngine:
+    """Continuous-batching engine over a paged KV pool.
+
+    ``attn_impl``: "ref" (pure-JAX gather, exact vs the slot engine),
+    "kernel" (Pallas paged decode attention) or "kernel_interpret"
+    (Pallas interpret mode, for CPU validation).
+    """
+
+    supports_retain = True
+
+    def __init__(self, api: ModelAPI, params, *, num_slots: int = 8,
+                 max_total_len: int = 128, page_size: int = 16,
+                 prefill_chunk: int = 16, num_pages: Optional[int] = None,
+                 eos_id: int = 2, temperature: float = 1.0, top_k: int = 0,
+                 pad_id: int = 0, seed: int = 0, attn_impl: str = "ref"):
+        cfg = api.cfg
+        if api.init_paged_cache is None:
+            raise ValueError(f"family {cfg.family} has no paged-KV support "
+                             "(use the slot DecodeEngine)")
+        if cfg.sliding_window is not None and cfg.sliding_window < max_total_len:
+            raise ValueError("engine requires cache >= max_total_len "
+                             "(enlarge window or shorten sequences)")
+        self.api = api
+        self.params = params
+        self.num_slots = num_slots
+        self.max_total_len = max_total_len
+        self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
+        self.pages_per_seq = paged.pages_per_seq(max_total_len, page_size)
+        if num_pages is None:
+            num_pages = 1 + num_slots * self.pages_per_seq  # +1: garbage page
+        self.num_pages = num_pages
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.temperature = temperature
+        self.top_k = top_k
+        self.attn_impl = attn_impl
+        self._key = jax.random.PRNGKey(seed)
+
+        self.cache = api.init_paged_cache(num_pages, page_size)
+        self.block_tables = jnp.full((num_slots, self.pages_per_seq), -1,
+                                     jnp.int32)
+        self.cur_token = jnp.full((num_slots,), pad_id, jnp.int32)
+        self.pos = jnp.zeros((num_slots,), jnp.int32)
+        self._free_pages: List[int] = list(range(1, num_pages))  # 0 = garbage
+        self._slot_pages: Dict[int, List[int]] = {}
+        self.slots: Dict[int, _SlotState] = {}
+        self.req_to_slot: Dict[int, int] = {}
+        self.retained: Dict[int, _Retained] = {}
+        self._rr = 0
+
+        self.total_decode_steps = 0
+        self.total_tokens_decoded = 0
+        self.total_prefill_chunks = 0
+        self.total_prefill_tokens = 0
+
+        self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+
+    # ----------------------------------------------------------- jit body
+    def _step_impl(self, params, cache, cur_token, pos, decode_tables,
+                   chunk_tokens, chunk_valid, chunk_start, chunk_row,
+                   do_prefill, do_decode, key):
+        """ONE fused engine step: a prefill chunk for one request (cond-gated)
+        plus a decode token for every unmasked slot.  All shapes static."""
+        cfg = self.api.cfg
+        vocab = cfg.vocab_size
+
+        def run_prefill(c):
+            return self.api.prefill_chunk(params, chunk_tokens, chunk_valid,
+                                          chunk_start, chunk_row, c)
+
+        def skip_prefill(c):
+            return jnp.zeros((1, vocab), jnp.float32), c
+
+        chunk_logits, cache = jax.lax.cond(do_prefill, run_prefill,
+                                           skip_prefill, cache)
+
+        def run_decode(c):
+            return self.api.decode_paged(params, cur_token, pos, c,
+                                         decode_tables,
+                                         attn_impl=self.attn_impl)
+
+        def skip_decode(c):
+            return jnp.zeros((self.num_slots, vocab), jnp.float32), c
+
+        dec_logits, cache = jax.lax.cond(do_decode, run_decode,
+                                         skip_decode, cache)
+
+        kp, kd = jax.random.split(key)
+        ptok, plp = sample_tokens(kp, chunk_logits,
+                                  temperature=self.temperature, top_k=self.top_k)
+        dtok, dlp = sample_tokens(kd, dec_logits,
+                                  temperature=self.temperature, top_k=self.top_k)
+        return (ptok.astype(jnp.int32), plp, dtok.astype(jnp.int32), dlp,
+                cache)
+
+    # ------------------------------------------------------------ protocol
+    @property
+    def num_free_slots(self) -> int:
+        return self.num_slots - len(self.slots)
+
+    @property
+    def num_free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def active_request_ids(self) -> List[int]:
+        return list(self.req_to_slot)
+
+    def update_weights(self, params) -> None:
+        self.params = params
+
+    def _pages_needed(self, total_len: int) -> int:
+        return -(-total_len // self.page_size)
+
+    def can_admit(self, prompt_len: int, max_new_tokens: int) -> bool:
+        return (self.num_free_slots > 0
+                and self._pages_needed(prompt_len + max_new_tokens)
+                <= len(self._free_pages))
+
+    def _alloc(self, n: int) -> List[int]:
+        assert n <= len(self._free_pages), "page pool exhausted"
+        pages, self._free_pages = self._free_pages[:n], self._free_pages[n:]
+        return pages
+
+    def _set_table_row(self, slot: int, pages: List[int]) -> None:
+        row = np.full((self.pages_per_seq,), -1, np.int32)
+        row[:len(pages)] = pages
+        self.block_tables = self.block_tables.at[slot].set(jnp.asarray(row))
+
+    def add_request(self, request_id: int, prompt_tokens,
+                    max_new_tokens: int) -> None:
+        assert self.num_free_slots > 0, "no free slot"
+        prompt = np.asarray(prompt_tokens, np.int32).ravel()
+        plen = len(prompt)
+        assert plen + max_new_tokens <= self.max_total_len, "sequence budget"
+        slot = next(i for i in range(self.num_slots) if i not in self.slots)
+        pages = self._alloc(self._pages_needed(plen + max_new_tokens))
+        self._set_table_row(slot, pages)
+        self._slot_pages[slot] = pages
+        self.slots[slot] = _SlotState(request_id=request_id, prompt=prompt,
+                                      tokens=[], logprobs=[],
+                                      remaining=max_new_tokens)
+        self.req_to_slot[request_id] = slot
+
+    # --------------------------------------------------- retain / resume
+    def abort(self, request_id: int, *, retain: bool = False) -> GenerationResult:
+        slot = self.req_to_slot.pop(request_id)
+        st = self.slots.pop(slot)
+        pages = self._slot_pages.pop(slot)
+        self.block_tables = self.block_tables.at[slot].set(-1)
+        if retain:
+            self.retained[request_id] = _Retained(
+                pages=pages, phase=st.phase, prompt=st.prompt,
+                prefill_done=st.prefill_done,
+                length=int(self.pos[slot]) if st.phase == _DECODE else 0,
+                last_token=int(self.cur_token[slot]))
+        else:
+            self._free_pages.extend(pages)
+        return GenerationResult(
+            request_id=request_id, task=None,
+            tokens=np.asarray(st.tokens, np.int32),
+            logprobs=np.asarray(st.logprobs, np.float32),
+            version_started=-1, aborted=True, partial=True, resumable=retain)
+
+    def _resume_pages_needed(self, ret: _Retained, max_new_tokens: int) -> int:
+        base = ret.length if ret.phase == _DECODE else len(ret.prompt)
+        return self._pages_needed(base + max_new_tokens)
+
+    def can_resume(self, request_id: int, max_new_tokens: int) -> bool:
+        ret = self.retained.get(request_id)
+        if ret is None or self.num_free_slots == 0:
+            return False
+        extra = self._resume_pages_needed(ret, max_new_tokens) - len(ret.pages)
+        return extra <= len(self._free_pages)
+
+    def resume_request(self, request_id: int, new_request_id: int,
+                       max_new_tokens: int) -> None:
+        """Re-attach a retained request: its pages (the whole decoded prefix's
+        KV) come back verbatim — zero prefix recomputation.  A budget larger
+        than the original allocation tops the table up from the free pool
+        (both phases: a prefill-phase resume still needs decode headroom)."""
+        ret = self.retained.pop(request_id)
+        assert self.num_free_slots > 0, "no free slot"
+        base = ret.length if ret.phase == _DECODE else len(ret.prompt)
+        assert base + max_new_tokens <= self.max_total_len, "sequence budget"
+        slot = next(i for i in range(self.num_slots) if i not in self.slots)
+        pages = ret.pages
+        need = self._resume_pages_needed(ret, max_new_tokens)
+        if need > len(pages):
+            pages = pages + self._alloc(need - len(pages))
+        self._set_table_row(slot, pages)
+        self._slot_pages[slot] = pages
+        st = _SlotState(request_id=new_request_id, prompt=ret.prompt,
+                        tokens=[], logprobs=[], remaining=max_new_tokens,
+                        phase=ret.phase, prefill_done=ret.prefill_done,
+                        carried_last=(ret.last_token if ret.phase == _DECODE
+                                      else None))
+        self.slots[slot] = st
+        self.req_to_slot[new_request_id] = slot
+        if ret.phase == _DECODE:
+            self.cur_token = self.cur_token.at[slot].set(ret.last_token)
+            self.pos = self.pos.at[slot].set(ret.length)
+
+    def release_retained(self, request_id: int) -> None:
+        ret = self.retained.pop(request_id, None)
+        if ret is not None:
+            self._free_pages.extend(ret.pages)
+
+    # --------------------------------------------------------------- step
+    def step(self) -> List[Tuple[int, np.ndarray, np.ndarray]]:
+        """One fused engine step; returns finished (rid, tokens, logprobs)."""
+        if not self.slots:
+            return []
+        finished: List[Tuple[int, np.ndarray, np.ndarray]] = []
+        # finish BEFORE stepping: the last sampled (or carried) token may
+        # already terminate the request.
+        for slot in list(self.slots):
+            st = self.slots[slot]
+            if st.phase != _DECODE:
+                continue
+            last = st.tokens[-1] if st.tokens else st.carried_last
+            if last is not None and (last == self.eos_id or st.remaining <= 0):
+                finished.append(self._finish(slot))
+        if not self.slots:
+            return finished
+
+        prefill_slots = [s for s, st in sorted(self.slots.items())
+                         if st.phase == _PREFILL]
+        decode_slots = [s for s, st in self.slots.items()
+                        if st.phase == _DECODE]
+
+        c = self.prefill_chunk
+        chunk_slot = None
+        n_chunk = 0
+        toks = np.full((1, c), self.pad_id, np.int32)
+        valid = np.zeros((1, c), bool)
+        start = 0
+        row = jnp.full((self.pages_per_seq,), -1, jnp.int32)
+        if prefill_slots:
+            chunk_slot = prefill_slots[self._rr % len(prefill_slots)]
+            self._rr += 1
+            st = self.slots[chunk_slot]
+            start = st.prefill_done
+            chunk = st.prompt[start:start + c]
+            n_chunk = len(chunk)
+            toks[0, :n_chunk] = chunk
+            valid[0, :n_chunk] = True
+            row = self.block_tables[chunk_slot]
+
+        decode_mask = np.zeros((self.num_slots,), bool)
+        decode_mask[decode_slots] = True
+        mask_j = jnp.asarray(decode_mask)
+        masked_tables = jnp.where(mask_j[:, None], self.block_tables, -1)
+
+        self._key, sub = jax.random.split(self._key)
+        ptok, plp, dtok, dlp, self.cache = self._step(
+            self.params, self.cache, self.cur_token, self.pos, masked_tables,
+            jnp.asarray(toks), jnp.asarray(valid),
+            jnp.asarray(start, jnp.int32), row,
+            np.bool_(chunk_slot is not None), np.bool_(bool(decode_slots)),
+            sub)
+
+        if chunk_slot is not None:
+            st = self.slots[chunk_slot]
+            st.prefill_done += n_chunk
+            self.total_prefill_chunks += 1
+            self.total_prefill_tokens += n_chunk
+            if st.prefill_done >= len(st.prompt):
+                t0, l0 = int(ptok[0]), float(plp[0])
+                st.phase = _DECODE
+                st.tokens.append(t0)
+                st.logprobs.append(l0)
+                st.remaining -= 1
+                self.cur_token = self.cur_token.at[chunk_slot].set(t0)
+                self.pos = self.pos.at[chunk_slot].set(len(st.prompt))
+
+        if decode_slots:
+            self.total_decode_steps += 1
+            tok_np, lp_np = np.asarray(dtok), np.asarray(dlp)
+            self.cur_token = jnp.where(mask_j, dtok, self.cur_token)
+            self.pos = jnp.where(mask_j, self.pos + 1, self.pos)
+            for s in decode_slots:
+                st = self.slots[s]
+                st.tokens.append(int(tok_np[s]))
+                st.logprobs.append(float(lp_np[s]))
+                st.remaining -= 1
+                self.total_tokens_decoded += 1
+        return finished
+
+    def _finish(self, slot: int) -> Tuple[int, np.ndarray, np.ndarray]:
+        st = self.slots.pop(slot)
+        self.req_to_slot.pop(st.request_id, None)
+        self._free_pages.extend(self._slot_pages.pop(slot))
+        self.block_tables = self.block_tables.at[slot].set(-1)
+        return (st.request_id, np.asarray(st.tokens, np.int32),
+                np.asarray(st.logprobs, np.float32))

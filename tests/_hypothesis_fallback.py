@@ -1,0 +1,123 @@
+"""Minimal stand-in for `hypothesis` when the real package is absent.
+
+CI installs the genuine library via the ``[test]`` extra and this module is
+never imported.  In bare environments (no network / no extra), conftest
+registers this as ``hypothesis`` so the property-based test modules still
+collect and run: ``@given`` degrades to a deterministic pseudo-random sweep
+of ``max_examples`` draws per strategy — far weaker than real shrinking
+Hypothesis, but it executes the same properties.
+
+Only the surface these tests use is implemented: ``given``, ``settings``,
+``strategies.integers/floats/sampled_from``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+class _DataObject:
+    """Interactive draws (`data.draw(strategy)`) share the test's stream."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy):
+        return strategy.example(self._rng)
+
+
+def data() -> _Strategy:
+    return _Strategy(lambda rng: _DataObject(rng))
+
+
+def randoms(use_true_random: bool = True) -> _Strategy:
+    return _Strategy(lambda rng: random.Random(rng.getrandbits(64)))
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.sampled_from = sampled_from
+strategies.data = data
+strategies.randoms = randoms
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    """Records max_examples on the function for `given` to pick up, whether
+    applied above or below it in the decorator stack."""
+    def deco(fn):
+        if getattr(fn, "_fallback_given", False):
+            fn._max_examples = max_examples
+        else:
+            fn._pending_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        # positional @given args fill the RIGHTMOST parameters (as in real
+        # hypothesis); bind them by NAME so pytest-passed fixture kwargs
+        # can't collide with them.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        pos_names = [p.name for p in params[len(params) - len(arg_strats):]] \
+            if arg_strats else []
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_pending_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            # deterministic per-test stream so failures reproduce
+            rng = random.Random(fn.__name__)
+            for _ in range(n):
+                drawn_kw = {name: s.example(rng)
+                            for name, s in zip(pos_names, arg_strats)}
+                drawn_kw.update((k, s.example(rng))
+                                for k, s in kw_strats.items())
+                fn(*args, **kwargs, **drawn_kw)
+        wrapper._fallback_given = True
+        # hide strategy-filled parameters from pytest's fixture resolution
+        del wrapper.__wrapped__
+        remaining = [p for p in params
+                     if p.name not in kw_strats and p.name not in pos_names]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+    return deco
+
+
+def install(sys_modules) -> None:
+    """Register this module as `hypothesis` (+ `.strategies`)."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.__is_fallback__ = True
+    sys_modules["hypothesis"] = mod
+    sys_modules["hypothesis.strategies"] = strategies

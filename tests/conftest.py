@@ -5,6 +5,13 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:  # real hypothesis (installed by the [test] extra in CI)
+    import hypothesis  # noqa: F401
+except ImportError:  # bare env: degrade @given to a deterministic sweep
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+    _hypothesis_fallback.install(sys.modules)
+
 import dataclasses  # noqa: E402
 
 import jax  # noqa: E402

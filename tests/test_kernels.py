@@ -8,8 +8,11 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_decode_attention import paged_decode_attention
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.rwkv6_scan import rwkv6_scan
+
+pytestmark = [pytest.mark.kernels, pytest.mark.timeout(300)]
 
 KEY = jax.random.PRNGKey(42)
 
@@ -62,6 +65,80 @@ def test_decode_attention_sweep(b, h, kv, s, d, dtype):
     expected = ref.decode_attention_ref(q, k, v, lengths)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expected, np.float32), **_tol(dtype))
+
+
+def _random_block_tables(rng, b, pages_per_seq, num_pages, page_size):
+    """Random non-overlapping page assignments (page 0 = garbage, unused)."""
+    bt = np.full((b, pages_per_seq), -1, np.int32)
+    perm = rng.permutation(np.arange(1, num_pages))
+    i, lengths = 0, []
+    for bi in range(b):
+        n = int(rng.integers(1, pages_per_seq + 1))
+        bt[bi, :n] = perm[i:i + n]
+        i += n
+        lengths.append(int(rng.integers(1, n * page_size + 1)))
+    return jnp.asarray(bt), jnp.asarray(lengths, jnp.int32)
+
+
+@pytest.mark.parametrize("b,h,kv,d,page_size,pages_per_seq", [
+    (2, 8, 2, 64, 16, 4),    # GQA
+    (3, 4, 4, 64, 32, 2),    # MHA
+    (1, 8, 1, 128, 16, 6),   # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_sweep(b, h, kv, d, page_size, pages_per_seq,
+                                      dtype):
+    num_pages = 1 + b * pages_per_seq
+    q = jax.random.normal(KEY, (b, h, d), dtype)
+    kp = jax.random.normal(jax.random.fold_in(KEY, 1),
+                           (num_pages, page_size, kv, d), dtype)
+    vp = jax.random.normal(jax.random.fold_in(KEY, 2),
+                           (num_pages, page_size, kv, d), dtype)
+    bt, lengths = _random_block_tables(np.random.default_rng(0), b,
+                                       pages_per_seq, num_pages, page_size)
+    out = paged_decode_attention(q, kp, vp, bt, lengths, interpret=True)
+    expected = ref.paged_decode_attention_ref(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **_tol(dtype))
+
+
+def test_paged_decode_attention_matches_dense_decode():
+    """A contiguous identity block table must reproduce the dense decode
+    oracle: paging is pure bookkeeping, not different math."""
+    b, h, kv, d, page_size, pages_per_seq = 2, 4, 2, 64, 16, 4
+    s = page_size * pages_per_seq
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, kv, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, kv, d))
+    q = jax.random.normal(KEY, (b, h, d))
+    lengths = jnp.asarray([s, 37], jnp.int32)
+    # identity layout: request bi's page p is physical page 1 + bi*P + p
+    bt = jnp.arange(1, 1 + b * pages_per_seq, dtype=jnp.int32).reshape(b, -1)
+    kp = jnp.concatenate([jnp.zeros((1, page_size, kv, d)),
+                          k.reshape(b * pages_per_seq, page_size, kv, d)])
+    vp = jnp.concatenate([jnp.zeros((1, page_size, kv, d)),
+                          v.reshape(b * pages_per_seq, page_size, kv, d)])
+    out = paged_decode_attention(q, kp, vp, bt, lengths, interpret=True)
+    expected = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_attention_softcap():
+    b, h, kv, d, page_size, pages_per_seq = 2, 4, 2, 64, 16, 3
+    num_pages = 1 + b * pages_per_seq
+    q = jax.random.normal(KEY, (b, h, d))
+    kp = jax.random.normal(jax.random.fold_in(KEY, 1),
+                           (num_pages, page_size, kv, d))
+    vp = jax.random.normal(jax.random.fold_in(KEY, 2),
+                           (num_pages, page_size, kv, d))
+    bt, lengths = _random_block_tables(np.random.default_rng(1), b,
+                                       pages_per_seq, num_pages, page_size)
+    out = paged_decode_attention(q, kp, vp, bt, lengths, softcap=30.0,
+                                 interpret=True)
+    expected = ref.paged_decode_attention_ref(q, kp, vp, bt, lengths,
+                                              softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
 
 
 def test_decode_attention_window():

@@ -47,6 +47,8 @@ def test_smoke_forward(arch, rng_key):
     assert bool(jnp.isfinite(logits).all())
 
 
+@pytest.mark.slow
+@pytest.mark.timeout(120)
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_train_step(arch, rng_key):
     """One RL train step on the reduced variant: finite loss, params move."""
@@ -74,6 +76,8 @@ def test_smoke_train_step(arch, rng_key):
                            np.asarray(after, np.float32))
 
 
+@pytest.mark.slow
+@pytest.mark.timeout(120)
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_prefill_decode_matches_full(arch, rng_key):
     """Engine paths == teacher-forcing forward, token by token."""

@@ -200,6 +200,8 @@ def test_engine_abort_frees_slot(engine_setup):
     assert done[0][0] == 1
 
 
+@pytest.mark.slow
+@pytest.mark.timeout(300)
 def test_engine_fuzz_against_reference(engine_setup):
     """Property: under RANDOM interleavings of add/step/abort, every
     completed request's greedy output equals decoding it alone."""

@@ -65,7 +65,10 @@ def test_divisibility_fallback_replicates():
 
 def _abstract_mesh(data=16, model=16):
     from jax.sharding import AbstractMesh
-    return AbstractMesh((data, model), ("data", "model"))
+    try:  # jax >= 0.5: AbstractMesh(axis_sizes, axis_names)
+        return AbstractMesh((data, model), ("data", "model"))
+    except TypeError:  # jax 0.4.x: AbstractMesh(((name, size), ...))
+        return AbstractMesh((("data", data), ("model", model)))
 
 
 def test_cache_specs_batch_and_feature_sharded():
@@ -116,7 +119,10 @@ def test_build_combo_lowers_on_unit_mesh(arch, shape, monkeypatch):
     with mesh:
         compiled = jax.jit(fn, in_shardings=in_shard, out_shardings=out_shard,
                            donate_argnums=donate).lower(*args).compile()
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # jax 0.4.x returns a per-device list
+        ca = ca[0]
+    assert ca.get("flops", 0) > 0
 
 
 def test_activation_sharding_hook_noop_without_spec():

@@ -11,6 +11,8 @@ from repro.envs.sim_envs import GridTargetEnv
 from repro.launch.pipeline import (PipelineSettings, build_agentic_pipeline,
                                    build_rlvr_pipeline)
 
+pytestmark = [pytest.mark.slow, pytest.mark.timeout(300)]  # integration tier
+
 MODEL = tiny("qwen3-4b", vocab_size=32)
 
 
