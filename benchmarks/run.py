@@ -10,7 +10,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (bench_engine, bench_paged_engine, fig1b_throughput_scaling,
+from benchmarks import (bench_engine, bench_paged_engine, bench_prefix_sharing,
+                        fig1b_throughput_scaling,
                         fig3_allocation_and_rollout, fig4_offpolicy_stability,
                         fig7_queue_scheduling, fig8_prompt_replication,
                         fig9_env_async, fig10_redundant_env,
@@ -29,6 +30,7 @@ MODULES = [
     ("fig11", fig11_real_agentic),
     ("engine", bench_engine),
     ("paged_engine", bench_paged_engine),
+    ("prefix_sharing", bench_prefix_sharing),
     ("roofline", roofline),
 ]
 

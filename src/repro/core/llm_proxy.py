@@ -17,6 +17,7 @@ implement the AsyncController's 3-phase weight synchronization.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import queue
 import threading
 import time
@@ -27,7 +28,7 @@ from repro.core.types import GenerationRequest, GenerationResult, RolloutTask
 
 class InferenceEngine(Protocol):
     """Continuous-batching engine (slot-based: rollout/engine.py; paged-KV
-    with chunked prefill: rollout/paged_engine.py).
+    with chunked prefill + COW prefix sharing: rollout/paged_engine.py).
 
     Optional capabilities, feature-detected by the proxy via getattr:
 
@@ -37,6 +38,12 @@ class InferenceEngine(Protocol):
       frees parked pages; ``can_resume(rid, max_new)`` gates admission.
     * ``can_admit(prompt_len, max_new)`` — admission gate beyond free
       slots (e.g. page-pool headroom in the paged engine).
+    * ``supports_group`` (bool) — ``submit_group([rids], prompt, max_new)``
+      admits the G candidates of one prompt as a unit, prefilling the
+      prompt ONCE and forking G decode lanes whose block tables alias the
+      shared prefix pages (copy-on-write); ``can_admit_group(plen, G,
+      max_new)`` gates it.  Engines without it get the group expanded into
+      G independent requests by the proxy.
     """
 
     @property
@@ -53,12 +60,19 @@ class InferenceEngine(Protocol):
     def update_weights(self, params) -> None: ...
 
 
+@dataclasses.dataclass
+class _PendingGroup:
+    """G candidates of one prompt awaiting an all-or-nothing group admit."""
+    requests: List[GenerationRequest]
+
+
 class LLMProxy:
     def __init__(self, engine: InferenceEngine, *, name: str = "llm_proxy"):
         self.engine = engine
         self.name = name
         self._commands: "queue.Queue[tuple]" = queue.Queue()
-        self._pending: collections.deque[GenerationRequest] = collections.deque()
+        # entries: GenerationRequest | _PendingGroup
+        self._pending: collections.deque = collections.deque()
         self._active: Dict[int, GenerationRequest] = {}
         self._suspended = threading.Event()
         self._resumed = threading.Event()
@@ -77,6 +91,25 @@ class LLMProxy:
                                 version_started=version, callback=callback)
         self._commands.put(("ADD", req))
         return req.request_id
+
+    def generate_group(self, tasks: List[RolloutTask], version: int,
+                       callback: Callable[[GenerationResult], None]) -> List[int]:
+        """Submit the G candidates of ONE prompt as a single group.
+
+        Engines with COW prefix sharing (``supports_group``) prefill the
+        prompt once and fork G decode lanes sharing its KV pages; other
+        engines transparently get G independent requests.  All tasks must
+        carry the same prompt and budget (they are replicas)."""
+        assert tasks, "empty group"
+        t0 = tasks[0]
+        assert all(t.max_new_tokens == t0.max_new_tokens
+                   and len(t.prompt_tokens) == len(t0.prompt_tokens)
+                   for t in tasks), "group tasks must be replicas"
+        reqs = [GenerationRequest(request_id=t.task_id, task=t,
+                                  version_started=version, callback=callback)
+                for t in tasks]
+        self._commands.put(("ADD_GROUP", _PendingGroup(reqs)))
+        return [r.request_id for r in reqs]
 
     def generate_resumed(self, task: RolloutTask, version: int,
                          callback: Callable[[GenerationResult], None],
@@ -164,6 +197,8 @@ class LLMProxy:
                 return
             if op == "ADD":
                 self._pending.append(arg)
+            elif op == "ADD_GROUP":
+                self._pending.append(arg)
             elif op == "ABORT":
                 rid, retain = arg
                 self._do_abort(rid, retain)
@@ -175,8 +210,9 @@ class LLMProxy:
                     self._do_abort(rid, retain)
                 # pending (not yet started) requests simply re-tag: they will
                 # start under the current weights.
-                for r in self._pending:
-                    r.version_started = max(r.version_started, min_version)
+                for entry in self._pending:
+                    for r in self._entry_requests(entry):
+                        r.version_started = max(r.version_started, min_version)
             elif op == "RELEASE":
                 release = getattr(self.engine, "release_retained", None)
                 if release is not None:
@@ -202,12 +238,25 @@ class LLMProxy:
             # not yet admitted: drop from pending — and free the retained
             # pages of a dropped resume request (nobody else will).
             release = getattr(self.engine, "release_retained", None)
-            for r in self._pending:
-                if (r.request_id == request_id and r.resume_from is not None
-                        and release is not None):
-                    release(r.resume_from)
-            self._pending = collections.deque(
-                r for r in self._pending if r.request_id != request_id)
+            for entry in self._pending:
+                for r in self._entry_requests(entry):
+                    if (r.request_id == request_id and r.resume_from is not None
+                            and release is not None):
+                        release(r.resume_from)
+            kept: collections.deque = collections.deque()
+            for entry in self._pending:
+                if isinstance(entry, _PendingGroup):
+                    entry.requests = [r for r in entry.requests
+                                      if r.request_id != request_id]
+                    if entry.requests:
+                        kept.append(entry)
+                elif entry.request_id != request_id:
+                    kept.append(entry)
+            self._pending = kept
+
+    @staticmethod
+    def _entry_requests(entry) -> List[GenerationRequest]:
+        return entry.requests if isinstance(entry, _PendingGroup) else [entry]
 
     def _try_admit(self, req: GenerationRequest) -> bool:
         """Admit one request if the engine can take it right now."""
@@ -227,24 +276,72 @@ class LLMProxy:
                                 req.task.max_new_tokens)
         return True
 
+    def _try_admit_group(self, grp: _PendingGroup):
+        """All-or-nothing group admission.  Returns True (admitted), False
+        (blocked — not enough slots/pages right now) or "expand" (the engine
+        cannot take this group as a unit; split into singles)."""
+        reqs = grp.requests
+        if len(reqs) == 1:
+            return True if self._try_admit(reqs[0]) else False
+        eng = self.engine
+        t = reqs[0].task
+        if (not getattr(eng, "supports_group", False)
+                or len(reqs) > getattr(eng, "num_slots", len(reqs))):
+            return "expand"
+        fits = getattr(eng, "group_fits_pool", None)
+        if fits is not None and not fits(len(t.prompt_tokens), len(reqs),
+                                         t.max_new_tokens):
+            # the group can NEVER be admitted as a unit (pool too small):
+            # expand instead of blocking the queue head forever.
+            return "expand"
+        if eng.num_free_slots < len(reqs):
+            # All-or-nothing admission convoys here while the previous
+            # group's lanes drain at different speeds.  Deliberate: letting
+            # singles backfill would admit the next group's candidates
+            # WITHOUT sharing, silently reverting the COW win.  Size
+            # num_slots >= 2*G (the default settings do) so two groups
+            # interleave and cover each other's drain.
+            return False
+        can = getattr(eng, "can_admit_group", None)
+        if can is not None and not can(len(t.prompt_tokens), len(reqs),
+                                       t.max_new_tokens):
+            return False
+        eng.submit_group([r.request_id for r in reqs], t.prompt_tokens,
+                         t.max_new_tokens)
+        return True
+
     def _admit_pending(self) -> None:
         while self._pending and self.engine.num_free_slots > 0:
-            req = self._pending[0]
-            if self._try_admit(req):
+            entry = self._pending[0]
+            if isinstance(entry, _PendingGroup):
+                verdict = self._try_admit_group(entry)
+                if verdict == "expand":
+                    # engine can't take the group as a unit: requeue the
+                    # members as ordinary head-of-queue requests.
+                    self._pending.popleft()
+                    self._pending.extendleft(reversed(entry.requests))
+                    continue
+                if verdict:
+                    self._pending.popleft()
+                    for r in entry.requests:
+                        self._active[r.request_id] = r
+                    continue
+            elif self._try_admit(entry):
                 self._pending.popleft()
-                self._active[req.request_id] = req
+                self._active[entry.request_id] = entry
                 continue
             # Head is blocked (e.g. page-starved).  Resume requests further
             # back MUST be allowed to bypass it: they re-attach pages that
             # are already allocated and are often the only way pages ever
             # free up again — strict FIFO here would deadlock the pool.
             admitted_any = False
-            for r in list(self._pending):
+            for e in list(self._pending):
                 if self.engine.num_free_slots <= 0:
                     break
-                if r.resume_from is not None and self._try_admit(r):
-                    self._pending.remove(r)
-                    self._active[r.request_id] = r
+                if (isinstance(e, GenerationRequest) and e.resume_from is not None
+                        and self._try_admit(e)):
+                    self._pending.remove(e)
+                    self._active[e.request_id] = e
                     admitted_any = True
             if not admitted_any:
                 break
@@ -256,4 +353,4 @@ class LLMProxy:
 
     @property
     def num_pending(self) -> int:
-        return len(self._pending)
+        return sum(len(self._entry_requests(e)) for e in self._pending)

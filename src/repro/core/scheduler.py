@@ -99,18 +99,29 @@ def collect_rollout(
     max_additional_running_prompts: int = 0,
     version: int = 0,
     timeout: float = 300.0,
+    group_submit: bool = True,
 ) -> List[Sample]:
     """One rollout step (queue scheduling): returns num_groups qualifying
-    groups, flattened. Extra in-flight generations are ABORTed on return."""
+    groups, flattened. Extra in-flight generations are ABORTed on return.
+
+    With ``group_submit`` (default) the G replicated candidates of a prompt
+    go to the proxy as ONE group submission: COW engines prefill the prompt
+    once and fork G lanes sharing its KV pages; other engines degrade to G
+    independent requests inside the proxy."""
     collector = _GroupCollector(group_size, reward_fn, filter_fn)
     submitted: List[int] = []
 
     def submit_one_prompt():
         pid, toks = next(prompts)
-        for task in expand_tasks(pid, toks, group_size, max_new_tokens,
-                                 replicate=replicate):
-            submitted.append(task.task_id)
-            proxy.generate(task, version, lambda r: collector.add(r, version))
+        tasks = expand_tasks(pid, toks, group_size, max_new_tokens,
+                             replicate=replicate)
+        submitted.extend(t.task_id for t in tasks)
+        cb = lambda r: collector.add(r, version)  # noqa: E731
+        if group_submit and replicate and len(tasks) > 1:
+            proxy.generate_group(tasks, version, cb)
+        else:
+            for task in tasks:
+                proxy.generate(task, version, cb)
 
     for _ in range(num_groups + max_additional_running_prompts):
         submit_one_prompt()
@@ -159,6 +170,9 @@ class RolloutProducer(threading.Thread):
         self.reward_fn = reward_fn
         self.replicate = replicate
         self._stop = threading.Event()
+        # prompt pulled past a group boundary during partial-group assembly;
+        # it seeds the next group so grouping stays aligned with the stream.
+        self._held_prompt: Optional[tuple] = None
 
     def stop(self) -> None:
         self._stop.set()
@@ -237,7 +251,62 @@ class RolloutProducer(threading.Thread):
         sample.is_positive = sample.reward > 0
         self.buffer.put(sample)
 
+    def _produce_group(self) -> bool:
+        """Claim up to group_size freshness slots and submit them as ONE
+        group (prompt_stream repeats each prompt group_size times, so
+        consecutive pulls are replicas of the same prompt).  A capacity
+        pinch flushes a partial group — COW sharing degrades for that group,
+        correctness doesn't: assembly downstream keys on group_id, not on
+        submission batching.  Groups always cut at prompt boundaries: a pull
+        that crosses into the next prompt is held back to seed the next
+        group, so one partial flush never de-aligns the rest of the run.
+        Returns False to stop the producer."""
+        tasks: List[RolloutTask] = []
+        version = 0
+        exhausted = False
+        while len(tasks) < self.group_size:
+            if self._stop.is_set() or self.buffer.closed:
+                self.buffer.reclaim(len(tasks))
+                return False
+            v = self.buffer.begin_generation(timeout=0.1)
+            if v is None:
+                if tasks:
+                    break  # freshness capacity pinch: flush a partial group
+                continue
+            if self._held_prompt is not None:
+                pid, toks = self._held_prompt
+                self._held_prompt = None
+            else:
+                try:
+                    pid, toks = next(self.prompts)
+                except StopIteration:
+                    self.buffer.reclaim(1)
+                    exhausted = True
+                    break
+            if tasks and pid != tasks[0].prompt_id:
+                # crossed a prompt boundary (a previous partial flush left
+                # the stream mid-prompt): hold it for the next group.
+                self._held_prompt = (pid, toks)
+                self.buffer.reclaim(1)
+                break
+            version = max(version, v)
+            tasks.append(RolloutTask(task_id=next_uid(), prompt_id=pid,
+                                     replica_idx=len(tasks),
+                                     prompt_tokens=toks,
+                                     max_new_tokens=self.max_new_tokens,
+                                     group_id=pid))
+        if len(tasks) > 1:
+            self.proxy.generate_group(tasks, version, self._on_result)
+        elif tasks:
+            self.proxy.generate(tasks[0], version, self._on_result)
+        return not exhausted
+
     def run(self) -> None:
+        if self.replicate and self.group_size > 1:
+            while not self._stop.is_set() and not self.buffer.closed:
+                if not self._produce_group():
+                    return
+            return
         while not self._stop.is_set() and not self.buffer.closed:
             version = self.buffer.begin_generation(timeout=0.1)
             if version is None:

@@ -8,7 +8,7 @@ rollout_batch_size, num_return_sequences, actor_train/actor_infer split...).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 
@@ -22,8 +22,11 @@ from repro.data.dataset import ArithmeticTask, EOS
 from repro.models import ModelConfig, get_api
 from repro.rewards.verifier import ArithmeticVerifier
 from repro.rollout.engine import DecodeEngine
+from repro.rollout.paged_engine import PagedDecodeEngine
 from repro.train.optimizer import OptConfig
 from repro.train.trainer import HostTrainer, TrainerConfig
+
+RolloutEngine = Union[DecodeEngine, PagedDecodeEngine]
 
 
 @dataclasses.dataclass
@@ -43,13 +46,39 @@ class PipelineSettings:
     kl_beta: float = 0.0
     learning_rate: float = 3e-3
     seed: int = 0
+    # rollout engine selection: "auto" runs the paged COW engine for
+    # attention families (dense/moe) and falls back to the slot engine for
+    # families without positional KV (rwkv6 / rglru / encdec / vlm).
+    rollout_engine: str = "auto"           # auto | paged | slot
+    page_size: int = 16                    # paged engine: KV page tokens
+    prefill_chunk: int = 16                # paged engine: prefill chunk tokens
+    num_pages: Optional[int] = None        # paged engine: pool size (auto)
+    attn_impl: str = "ref"                 # ref | kernel | kernel_interpret
+
+
+def make_rollout_engine(api, params, s: PipelineSettings) -> RolloutEngine:
+    """Construct the rollout engine per ``s.rollout_engine`` (see above)."""
+    choice = s.rollout_engine
+    if choice == "auto":
+        choice = "paged" if api.init_paged_cache is not None else "slot"
+    if choice == "paged":
+        return PagedDecodeEngine(
+            api, params, num_slots=s.num_slots, max_total_len=s.max_seq_len,
+            page_size=s.page_size, prefill_chunk=s.prefill_chunk,
+            num_pages=s.num_pages, eos_id=EOS, seed=s.seed,
+            attn_impl=s.attn_impl)
+    if choice != "slot":
+        raise ValueError(f"unknown rollout_engine {s.rollout_engine!r} "
+                         "(expected auto | paged | slot)")
+    return DecodeEngine(api, params, num_slots=s.num_slots,
+                        max_total_len=s.max_seq_len, eos_id=EOS, seed=s.seed)
 
 
 @dataclasses.dataclass
 class RLVRPipeline:
     settings: PipelineSettings
     trainer: HostTrainer
-    engine: DecodeEngine
+    engine: RolloutEngine
     proxy: LLMProxy
     buffer: SampleBuffer
     producer: RolloutProducer
@@ -84,8 +113,7 @@ def build_rlvr_pipeline(model_cfg: ModelConfig, s: PipelineSettings,
                          adv_estimator=s.adv_estimator)
     trainer = HostTrainer(api, jax.random.PRNGKey(s.seed), loss_cfg, opt_cfg, tcfg)
 
-    engine = DecodeEngine(api, trainer.get_weights(), num_slots=s.num_slots,
-                          max_total_len=s.max_seq_len, eos_id=EOS, seed=s.seed)
+    engine = make_rollout_engine(api, trainer.get_weights(), s)
     proxy = LLMProxy(engine)
     alpha = s.async_generation_ratio
     buffer = SampleBuffer(batch_size=s.rollout_batch_size, alpha=alpha)
@@ -103,7 +131,7 @@ def build_rlvr_pipeline(model_cfg: ModelConfig, s: PipelineSettings,
 @dataclasses.dataclass
 class AgenticPipeline:
     trainer: HostTrainer
-    engine: DecodeEngine
+    engine: RolloutEngine
     proxy: LLMProxy
     buffer: SampleBuffer
     pool: EnvManagerPool
@@ -133,8 +161,7 @@ def build_agentic_pipeline(model_cfg: ModelConfig, s: PipelineSettings, *,
                          minibatches=s.minibatches, ppo_epochs=s.ppo_epochs,
                          adv_estimator=s.adv_estimator)
     trainer = HostTrainer(api, jax.random.PRNGKey(s.seed), loss_cfg, opt_cfg, tcfg)
-    engine = DecodeEngine(api, trainer.get_weights(), num_slots=s.num_slots,
-                          max_total_len=s.max_seq_len, eos_id=EOS, seed=s.seed)
+    engine = make_rollout_engine(api, trainer.get_weights(), s)
     proxy = LLMProxy(engine)
     buffer = SampleBuffer(batch_size=s.rollout_batch_size,
                           alpha=s.async_generation_ratio)

@@ -29,10 +29,11 @@ not apply to them.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import attention, ffn, module, moe
 from repro.models.config import ModelConfig
@@ -44,6 +45,92 @@ class PagedKVCache(NamedTuple):
 
 
 GARBAGE_PAGE = 0  # physical page 0 is never allocated to a request
+
+
+class PagePool:
+    """Reference-counted host-side allocator over the physical page pool.
+
+    Copy-on-write prefix sharing for GRPO prompt groups: the G candidates of
+    one prompt alias the prompt's fully-filled pages (refcount G) and own
+    only their partial tail page + decode region privately.  A page returns
+    to the free list when its last reference is released, so any mix of
+    finish / abort / retain / resume orderings across the group composes —
+    the refcount IS the ownership protocol.
+
+    Page 0 stays the reserved garbage target (never allocated, refcount
+    pinned to 0): masked-out engine lanes keep writing there.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("pool needs >= 2 pages (page 0 is garbage)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._ref = np.zeros((num_pages,), np.int32)
+        self._free: List[int] = list(range(1, num_pages))
+        self.peak_pages_in_use = 0
+
+    # ------------------------------------------------------------- counters
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - 1 - len(self._free)
+
+    @property
+    def pages_shared(self) -> int:
+        """Pages aliased by >= 2 holders (COW prompt prefixes)."""
+        return int((self._ref >= 2).sum())
+
+    @property
+    def pages_private(self) -> int:
+        """Pages exclusively owned by one lane / retained record."""
+        return int((self._ref == 1).sum())
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    # ----------------------------------------------------------- operations
+    def alloc(self, n: int) -> List[int]:
+        assert n <= len(self._free), "page pool exhausted"
+        pages, self._free = self._free[:n], self._free[n:]
+        for p in pages:
+            self._ref[p] = 1
+        self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
+        return pages
+
+    def share(self, pages: List[int]) -> None:
+        """Add one reference to each page (must already be allocated)."""
+        for p in pages:
+            assert self._ref[p] > 0, f"share of unallocated page {p}"
+            self._ref[p] += 1
+
+    def release(self, pages: List[int]) -> None:
+        """Drop one reference per page; last reference frees the page."""
+        for p in pages:
+            assert self._ref[p] > 0, f"double release of page {p}"
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+
+    def fork_prefix(self, block_pages: List[int],
+                    upto_token: int) -> Tuple[List[int], Optional[int]]:
+        """COW fork of a lane's prefix covering positions [0, upto_token).
+
+        Fully-filled pages are shared in place (one new reference each); the
+        partial tail page — the only page the forked lane will keep writing —
+        cannot be aliased.  Returns ``(shared_pages, tail_src)`` where
+        ``tail_src`` is the physical page the caller must copy into a freshly
+        owned page (None when upto_token lands exactly on a page boundary).
+        """
+        full = upto_token // self.page_size
+        shared = list(block_pages[:full])
+        self.share(shared)
+        tail_src = (int(block_pages[full]) if upto_token % self.page_size
+                    else None)
+        return shared, tail_src
 
 
 def supports_paged(cfg: ModelConfig) -> bool:
@@ -80,6 +167,18 @@ def gather_request_view(layer_pages: Tuple[jax.Array, jax.Array], block_row):
     v = v_pages[idx].reshape(-1, nkv, hd)
     valid = jnp.repeat(block_row >= 0, page_size)
     return k, v, valid
+
+
+def copy_pages(cache: PagedKVCache, src, dst) -> PagedKVCache:
+    """Copy whole physical pages ``src[i] -> dst[i]`` across every layer.
+
+    The device half of a COW fork: the group's partial prompt-tail page is
+    duplicated into each forked lane's privately owned page (src/dst: (N,)
+    int32 page ids).  Everything else in the fork is pure block-table /
+    refcount bookkeeping — the attention kernels never change."""
+    k = cache.k_pages.at[:, dst].set(cache.k_pages[:, src])
+    v = cache.v_pages.at[:, dst].set(cache.v_pages[:, src])
+    return PagedKVCache(k_pages=k, v_pages=v)
 
 
 # ---------------------------------------------------------------------------

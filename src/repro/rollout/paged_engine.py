@@ -1,4 +1,5 @@
-"""Paged-KV continuous-batching engine with chunked prefill + abort→resume.
+"""Paged-KV continuous-batching engine: chunked prefill, abort→resume, and
+copy-on-write prefix sharing for GRPO prompt groups.
 
 The slot engine (`engine.py`) prefills each admitted prompt at batch=1 in a
 single variable-length call — every active request stalls for the whole
@@ -18,13 +19,22 @@ This engine fixes all three pathologies:
   co-scheduled with decode inside the same ``step()``: one chunk of ONE
   prefilling request plus one decode token for EVERY decoding slot.
   Admitting a 32k prompt no longer blocks the batch for a full prefill.
+* **COW prefix sharing** — ``submit_group`` admits the G candidates of one
+  GRPO prompt as a unit: the prompt is chunk-prefilled ONCE into the
+  leader lane, then the group forks — follower block tables alias the
+  fully-filled prompt pages (refcount G in the ``PagePool``) and each lane
+  privately owns only the partial tail page (copied at fork) plus its
+  decode region.  G× less prefill compute, ~(G-1)/G of the prompt KV
+  reclaimed; divergence after the fork only ever writes privately owned
+  pages, so the Pallas ``paged_decode_attention`` kernel is unchanged —
+  only block-table construction knows about sharing.
 * **Static shapes** — ``step()`` is a single jitted call (chunk + decode
   fused, ``lax.cond``-gated) whose shapes never depend on prompt length or
   fill level: exactly ONE executable serves every workload (TPU-friendly;
   the slot engine compiles one prefill per padded prompt length).
 
 Implements `repro.core.llm_proxy.InferenceEngine` plus the retain/resume
-extension consumed by `repro.core.scheduler.RolloutProducer`.
+and group-submit extensions consumed by `repro.core.scheduler`.
 """
 from __future__ import annotations
 
@@ -42,6 +52,7 @@ from repro.rollout.sampler import sample_tokens
 
 _PREFILL = "prefill"
 _DECODE = "decode"
+_FORKWAIT = "forkwait"   # group follower parked until the leader's prefill
 
 
 @dataclasses.dataclass
@@ -54,11 +65,13 @@ class _SlotState:
     phase: str = _PREFILL
     prefill_done: int = 0
     carried_last: Optional[int] = None   # last sampled token of a resumed prefix
+    followers: List[int] = dataclasses.field(default_factory=list)
+    group_leader: Optional[int] = None   # follower pre-fork: leader's slot
 
 
 @dataclasses.dataclass
 class _Retained:
-    """A parked request: pages stay allocated, decode state frozen."""
+    """A parked request: pages stay allocated (refs held), state frozen."""
     pages: List[int]
     phase: str
     prompt: np.ndarray
@@ -68,7 +81,7 @@ class _Retained:
 
 
 class PagedDecodeEngine:
-    """Continuous-batching engine over a paged KV pool.
+    """Continuous-batching engine over a refcounted paged KV pool.
 
     ``attn_impl``: "ref" (pure-JAX gather, exact vs the slot engine),
     "kernel" (Pallas paged decode attention) or "kernel_interpret"
@@ -76,6 +89,7 @@ class PagedDecodeEngine:
     """
 
     supports_retain = True
+    supports_group = True
 
     def __init__(self, api: ModelAPI, params, *, num_slots: int = 8,
                  max_total_len: int = 128, page_size: int = 16,
@@ -111,7 +125,7 @@ class PagedDecodeEngine:
                                      jnp.int32)
         self.cur_token = jnp.full((num_slots,), pad_id, jnp.int32)
         self.pos = jnp.zeros((num_slots,), jnp.int32)
-        self._free_pages: List[int] = list(range(1, num_pages))  # 0 = garbage
+        self.pool = paged.PagePool(num_pages, page_size)
         self._slot_pages: Dict[int, List[int]] = {}
         self.slots: Dict[int, _SlotState] = {}
         self.req_to_slot: Dict[int, int] = {}
@@ -122,8 +136,10 @@ class PagedDecodeEngine:
         self.total_tokens_decoded = 0
         self.total_prefill_chunks = 0
         self.total_prefill_tokens = 0
+        self.total_groups_forked = 0
 
         self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+        self._copy_pages = jax.jit(paged.copy_pages, donate_argnums=(0,))
 
     # ----------------------------------------------------------- jit body
     def _step_impl(self, params, cache, cur_token, pos, decode_tables,
@@ -160,8 +176,10 @@ class PagedDecodeEngine:
                                   temperature=self.temperature, top_k=self.top_k)
         dtok, dlp = sample_tokens(kd, dec_logits,
                                   temperature=self.temperature, top_k=self.top_k)
+        # chunk_logits ride along so group forks can sample per-follower
+        # first tokens from the final prefill position.
         return (ptok.astype(jnp.int32), plp, dtok.astype(jnp.int32), dlp,
-                cache)
+                chunk_logits, cache)
 
     # ------------------------------------------------------------ protocol
     @property
@@ -170,7 +188,23 @@ class PagedDecodeEngine:
 
     @property
     def num_free_pages(self) -> int:
-        return len(self._free_pages)
+        return self.pool.pages_free
+
+    @property
+    def pages_free(self) -> int:
+        return self.pool.pages_free
+
+    @property
+    def pages_shared(self) -> int:
+        return self.pool.pages_shared
+
+    @property
+    def pages_private(self) -> int:
+        return self.pool.pages_private
+
+    @property
+    def peak_pages_in_use(self) -> int:
+        return self.pool.peak_pages_in_use
 
     @property
     def active_request_ids(self) -> List[int]:
@@ -185,17 +219,15 @@ class PagedDecodeEngine:
     def can_admit(self, prompt_len: int, max_new_tokens: int) -> bool:
         return (self.num_free_slots > 0
                 and self._pages_needed(prompt_len + max_new_tokens)
-                <= len(self._free_pages))
-
-    def _alloc(self, n: int) -> List[int]:
-        assert n <= len(self._free_pages), "page pool exhausted"
-        pages, self._free_pages = self._free_pages[:n], self._free_pages[n:]
-        return pages
+                <= self.pool.pages_free)
 
     def _set_table_row(self, slot: int, pages: List[int]) -> None:
         row = np.full((self.pages_per_seq,), -1, np.int32)
         row[:len(pages)] = pages
         self.block_tables = self.block_tables.at[slot].set(jnp.asarray(row))
+
+    def _free_slot_id(self) -> int:
+        return next(i for i in range(self.num_slots) if i not in self.slots)
 
     def add_request(self, request_id: int, prompt_tokens,
                     max_new_tokens: int) -> None:
@@ -203,8 +235,8 @@ class PagedDecodeEngine:
         prompt = np.asarray(prompt_tokens, np.int32).ravel()
         plen = len(prompt)
         assert plen + max_new_tokens <= self.max_total_len, "sequence budget"
-        slot = next(i for i in range(self.num_slots) if i not in self.slots)
-        pages = self._alloc(self._pages_needed(plen + max_new_tokens))
+        slot = self._free_slot_id()
+        pages = self.pool.alloc(self._pages_needed(plen + max_new_tokens))
         self._set_table_row(slot, pages)
         self._slot_pages[slot] = pages
         self.slots[slot] = _SlotState(request_id=request_id, prompt=prompt,
@@ -212,20 +244,157 @@ class PagedDecodeEngine:
                                       remaining=max_new_tokens)
         self.req_to_slot[request_id] = slot
 
+    # -------------------------------------------------- group (COW) submit
+    def _group_page_plan(self, prompt_len: int,
+                         max_new_tokens: int) -> Tuple[int, int]:
+        """(shared-prefix pages, private pages per lane) for one group lane."""
+        total = self._pages_needed(prompt_len + max_new_tokens)
+        full = prompt_len // self.page_size
+        return full, total - full
+
+    def can_admit_group(self, prompt_len: int, group_size: int,
+                        max_new_tokens: int) -> bool:
+        full, priv = self._group_page_plan(prompt_len, max_new_tokens)
+        return (self.num_free_slots >= group_size
+                and full + group_size * priv <= self.pool.pages_free)
+
+    def group_fits_pool(self, prompt_len: int, group_size: int,
+                        max_new_tokens: int) -> bool:
+        """Whether the group could EVER be admitted as a unit (vs the whole
+        pool, not current headroom).  The proxy expands never-fitting groups
+        into singles instead of letting them block the queue forever."""
+        full, priv = self._group_page_plan(prompt_len, max_new_tokens)
+        return (group_size <= self.num_slots
+                and full + group_size * priv <= self.num_pages - 1)
+
+    def submit_group(self, request_ids: List[int], prompt_tokens,
+                     max_new_tokens: int) -> None:
+        """Admit the G candidates of ONE prompt as a COW group.
+
+        The first request becomes the prefill leader (a normal chunked
+        prefill over its fully allocated block table); the rest park in
+        ``forkwait`` holding only their private pages.  When the leader's
+        prefill completes, ``_fork_followers`` aliases the fully-filled
+        prompt pages into every follower's table (refcount++), copies the
+        partial tail page once per follower, and flips them all to decode —
+        the prompt is prefilled exactly once for the whole group."""
+        g = len(request_ids)
+        assert g >= 1
+        prompt = np.asarray(prompt_tokens, np.int32).ravel()
+        plen = len(prompt)
+        assert plen + max_new_tokens <= self.max_total_len, "sequence budget"
+        assert self.num_free_slots >= g, "not enough free slots for group"
+        full, priv = self._group_page_plan(plen, max_new_tokens)
+        assert full + g * priv <= self.pool.pages_free, "page pool exhausted"
+
+        leader = self._free_slot_id()
+        pages = self.pool.alloc(full + priv)
+        self._set_table_row(leader, pages)
+        self._slot_pages[leader] = pages
+        lst = _SlotState(request_id=request_ids[0], prompt=prompt,
+                         tokens=[], logprobs=[], remaining=max_new_tokens)
+        self.slots[leader] = lst
+        self.req_to_slot[request_ids[0]] = leader
+
+        for rid in request_ids[1:]:
+            slot = self._free_slot_id()
+            self._slot_pages[slot] = self.pool.alloc(priv)
+            self.slots[slot] = _SlotState(
+                request_id=rid, prompt=prompt, tokens=[], logprobs=[],
+                remaining=max_new_tokens, phase=_FORKWAIT, group_leader=leader)
+            self.req_to_slot[rid] = slot
+            lst.followers.append(slot)
+
+    def _fork_followers(self, leader: int, chunk_logits,
+                        first_tok: int, first_lp: float) -> None:
+        """The COW fork: leader finished prefilling, so alias the prompt's
+        fully-filled pages into every follower and copy only the partial
+        tail page (one batched device copy).  Each follower samples its own
+        first token from the final prefill logits (greedy reuses the
+        leader's — bit-identical by construction)."""
+        st = self.slots[leader]
+        plen = len(st.prompt)
+        srcs: List[int] = []
+        dsts: List[int] = []
+        for fslot in st.followers:
+            fst = self.slots[fslot]
+            shared, tail_src = self.pool.fork_prefix(
+                self._slot_pages[leader], plen)
+            priv = self._slot_pages[fslot]
+            if tail_src is not None:
+                srcs.append(tail_src)
+                dsts.append(priv[0])
+            pages = shared + priv
+            self._slot_pages[fslot] = pages
+            self._set_table_row(fslot, pages)
+            if self.temperature <= 0.0:
+                t0, l0 = first_tok, first_lp
+            else:
+                self._key, sub = jax.random.split(self._key)
+                ftok, flp = sample_tokens(sub, chunk_logits,
+                                          temperature=self.temperature,
+                                          top_k=self.top_k)
+                t0, l0 = int(ftok[0]), float(flp[0])
+            fst.phase = _DECODE
+            fst.group_leader = None
+            fst.tokens.append(t0)
+            fst.logprobs.append(l0)
+            fst.remaining -= 1
+            fst.prefill_done = plen
+            self.cur_token = self.cur_token.at[fslot].set(t0)
+            self.pos = self.pos.at[fslot].set(plen)
+        st.followers = []
+        self.total_groups_forked += 1
+        if srcs:
+            self.cache = self._copy_pages(self.cache, jnp.asarray(srcs),
+                                          jnp.asarray(dsts))
+
+    def _promote_follower(self, st: _SlotState, leader_pages: List[int]) -> None:
+        """The group's prefill leader was aborted before the fork: hand its
+        full page allocation (prefilled content intact) to the first waiting
+        follower, which becomes the new leader and continues the chunked
+        prefill where the old one stopped — no prompt work is repeated."""
+        new_leader = st.followers[0]
+        nst = self.slots[new_leader]
+        self.pool.release(self._slot_pages[new_leader])
+        self._slot_pages[new_leader] = leader_pages
+        self._set_table_row(new_leader, leader_pages)
+        nst.phase = _PREFILL
+        nst.group_leader = None
+        nst.prefill_done = st.prefill_done
+        nst.followers = st.followers[1:]
+        for f in nst.followers:
+            self.slots[f].group_leader = new_leader
+
     # --------------------------------------------------- retain / resume
     def abort(self, request_id: int, *, retain: bool = False) -> GenerationResult:
         slot = self.req_to_slot.pop(request_id)
         st = self.slots.pop(slot)
         pages = self._slot_pages.pop(slot)
         self.block_tables = self.block_tables.at[slot].set(-1)
-        if retain:
+        if st.phase == _FORKWAIT:
+            # pre-fork follower: it has no KV yet — nothing to retain.
+            leader = self.slots.get(st.group_leader)
+            if leader is not None and slot in leader.followers:
+                leader.followers.remove(slot)
+            self.pool.release(pages)
+            retain = False
+        elif st.followers:
+            # pre-fork group leader: its pages must keep serving the group
+            # (the promoted follower continues the prefill in-place), so
+            # there is nothing left to park — degrade retain to a plain
+            # abort.  Zero tokens have been decoded at this point, so the
+            # caller loses only partial prompt prefill.
+            self._promote_follower(st, pages)
+            retain = False
+        elif retain:
             self.retained[request_id] = _Retained(
                 pages=pages, phase=st.phase, prompt=st.prompt,
                 prefill_done=st.prefill_done,
                 length=int(self.pos[slot]) if st.phase == _DECODE else 0,
                 last_token=int(self.cur_token[slot]))
         else:
-            self._free_pages.extend(pages)
+            self.pool.release(pages)
         return GenerationResult(
             request_id=request_id, task=None,
             tokens=np.asarray(st.tokens, np.int32),
@@ -241,23 +410,26 @@ class PagedDecodeEngine:
         if ret is None or self.num_free_slots == 0:
             return False
         extra = self._resume_pages_needed(ret, max_new_tokens) - len(ret.pages)
-        return extra <= len(self._free_pages)
+        return extra <= self.pool.pages_free
 
     def resume_request(self, request_id: int, new_request_id: int,
                        max_new_tokens: int) -> None:
         """Re-attach a retained request: its pages (the whole decoded prefix's
         KV) come back verbatim — zero prefix recomputation.  A budget larger
         than the original allocation tops the table up from the free pool
-        (both phases: a prefill-phase resume still needs decode headroom)."""
+        (both phases: a prefill-phase resume still needs decode headroom).
+        A forked lane's shared prefix pages re-attach through the refcounts
+        its retained record kept holding — siblings finishing or aborting in
+        the meantime never invalidates them."""
         ret = self.retained.pop(request_id)
         assert self.num_free_slots > 0, "no free slot"
         base = ret.length if ret.phase == _DECODE else len(ret.prompt)
         assert base + max_new_tokens <= self.max_total_len, "sequence budget"
-        slot = next(i for i in range(self.num_slots) if i not in self.slots)
+        slot = self._free_slot_id()
         pages = ret.pages
         need = self._resume_pages_needed(ret, max_new_tokens)
         if need > len(pages):
-            pages = pages + self._alloc(need - len(pages))
+            pages = pages + self.pool.alloc(need - len(pages))
         self._set_table_row(slot, pages)
         self._slot_pages[slot] = pages
         st = _SlotState(request_id=new_request_id, prompt=ret.prompt,
@@ -274,7 +446,29 @@ class PagedDecodeEngine:
     def release_retained(self, request_id: int) -> None:
         ret = self.retained.pop(request_id, None)
         if ret is not None:
-            self._free_pages.extend(ret.pages)
+            self.pool.release(ret.pages)
+
+    # ------------------------------------------------------------ auditing
+    def audit_pages(self) -> None:
+        """Assert the refcount invariant: every page's refcount equals its
+        number of appearances across live block tables and retained records,
+        and a page is free exactly when its refcount is zero."""
+        expect = np.zeros((self.num_pages,), np.int64)
+        for pages in self._slot_pages.values():
+            for p in pages:
+                expect[p] += 1
+        for ret in self.retained.values():
+            for p in ret.pages:
+                expect[p] += 1
+        actual = np.asarray([self.pool.refcount(p)
+                             for p in range(self.num_pages)], np.int64)
+        assert (expect == actual).all(), \
+            f"refcount leak: expected {expect.tolist()} got {actual.tolist()}"
+        free = set(self.pool._free)
+        assert paged.GARBAGE_PAGE not in free
+        for p in range(1, self.num_pages):
+            assert (p in free) == (actual[p] == 0), \
+                f"page {p}: refcount {actual[p]} vs free={p in free}"
 
     # --------------------------------------------------------------- step
     def step(self) -> List[Tuple[int, np.ndarray, np.ndarray]]:
@@ -323,7 +517,7 @@ class PagedDecodeEngine:
         masked_tables = jnp.where(mask_j[:, None], self.block_tables, -1)
 
         self._key, sub = jax.random.split(self._key)
-        ptok, plp, dtok, dlp, self.cache = self._step(
+        ptok, plp, dtok, dlp, chunk_logits, self.cache = self._step(
             self.params, self.cache, self.cur_token, self.pos, masked_tables,
             jnp.asarray(toks), jnp.asarray(valid),
             jnp.asarray(start, jnp.int32), row,
@@ -343,6 +537,8 @@ class PagedDecodeEngine:
                 st.remaining -= 1
                 self.cur_token = self.cur_token.at[chunk_slot].set(t0)
                 self.pos = self.pos.at[chunk_slot].set(len(st.prompt))
+                if st.followers:
+                    self._fork_followers(chunk_slot, chunk_logits, t0, l0)
 
         if decode_slots:
             self.total_decode_steps += 1
@@ -360,7 +556,7 @@ class PagedDecodeEngine:
     def _finish(self, slot: int) -> Tuple[int, np.ndarray, np.ndarray]:
         st = self.slots.pop(slot)
         self.req_to_slot.pop(st.request_id, None)
-        self._free_pages.extend(self._slot_pages.pop(slot))
+        self.pool.release(self._slot_pages.pop(slot))
         self.block_tables = self.block_tables.at[slot].set(-1)
         return (st.request_id, np.asarray(st.tokens, np.int32),
                 np.asarray(st.logprobs, np.float32))

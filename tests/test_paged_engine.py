@@ -187,33 +187,63 @@ def test_abort_resume_through_proxy_and_producer(setup):
 
 
 def test_page_pool_accounting(setup):
-    """Pages are exclusively owned, freed on finish/abort, and admission is
-    gated on pool headroom."""
+    """Pages are exclusively owned, freed on finish/abort, admission is
+    gated on pool headroom, and the refcount audit passes after every
+    completion / abort / resume transition."""
     cfg, api, params = setup
     eng = PagedDecodeEngine(api, params, num_slots=4, max_total_len=32,
                             page_size=8, num_pages=9, prefill_chunk=8,
                             eos_id=99, temperature=0.0)
     total = eng.num_free_pages
     assert total == 8  # page 0 reserved as garbage
+    assert eng.pages_shared == 0 and eng.pages_private == 0
     # 3 requests x (8 prompt + 8 budget) = 2 pages each
     for rid in range(3):
         assert eng.can_admit(8, 8)
         eng.add_request(rid, np.arange(1, 9, dtype=np.int32), 8)
     assert eng.num_free_pages == 2
+    assert eng.pages_private == 6 and eng.pages_shared == 0
     assert eng.can_admit(8, 8) and not eng.can_admit(16, 16)
+    eng.audit_pages()
     # retained pages stay allocated until release
     eng.step()
     partial = eng.abort(2, retain=True)
     assert partial.resumable
     assert eng.num_free_pages == 2
+    eng.audit_pages()
     eng.release_retained(2)
     assert eng.num_free_pages == 4
+    eng.audit_pages()
     # plain abort frees immediately
     eng.abort(1)
     assert eng.num_free_pages == 6
+    eng.audit_pages()
     _drain(eng, 1)  # request 0 runs to completion
     assert eng.num_free_pages == total
+    assert eng.pages_private == 0 and eng.pages_shared == 0
+    assert eng.peak_pages_in_use == 6
+    eng.audit_pages()
     assert not eng.slots and not eng.retained
+
+
+def test_abort_resume_audit_cycle(setup):
+    """Refcounts stay leak-free through a full abort->resume->finish cycle
+    (the retained record holds the refs while parked)."""
+    cfg, api, params = setup
+    eng = PagedDecodeEngine(api, params, num_slots=2, max_total_len=64,
+                            page_size=8, prefill_chunk=8, eos_id=99,
+                            temperature=0.0)
+    eng.add_request(0, np.asarray([1, 5, 7, 9, 2, 4], np.int32), 8)
+    for _ in range(5):
+        eng.step()
+    partial = eng.abort(0, retain=True)
+    assert partial.resumable
+    eng.audit_pages()
+    eng.resume_request(0, 10, 8 - len(partial.tokens))
+    eng.audit_pages()
+    _drain(eng, 1)
+    eng.audit_pages()
+    assert eng.num_free_pages == eng.num_pages - 1
 
 
 @pytest.mark.kernels

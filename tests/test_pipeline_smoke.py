@@ -1,0 +1,66 @@
+"""Tier-1 smoke: the default pipeline rolls out through the paged engine.
+
+The heavyweight end-to-end training runs live in test_system.py (slow
+tier); this file keeps a fast blocking check that `launch/pipeline.py`
+builds the PAGED engine by default for attention families, the producer's
+group submissions flow end-to-end, and the slot engine stays selectable.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.launch.pipeline import (PipelineSettings, build_rlvr_pipeline,
+                                   make_rollout_engine)
+from repro.models import get_api
+from repro.rollout.engine import DecodeEngine
+from repro.rollout.paged_engine import PagedDecodeEngine
+
+pytestmark = pytest.mark.timeout(240)
+
+MODEL = tiny("qwen3-4b", vocab_size=32)
+
+
+def test_default_pipeline_is_paged_and_rolls_out():
+    s = PipelineSettings(async_generation_ratio=1, rollout_batch_size=4,
+                         num_return_sequences_in_group=2, num_slots=4,
+                         max_new_tokens=4, max_seq_len=32, page_size=8,
+                         prefill_chunk=8)
+    pipe = build_rlvr_pipeline(MODEL, s)
+    assert isinstance(pipe.engine, PagedDecodeEngine)
+    pipe.proxy.start()
+    pipe.producer.start()
+    try:
+        batch = pipe.buffer.get_batch(4, timeout=120)
+    finally:
+        pipe.shutdown()
+    assert len(batch) == 4
+    for b in batch:
+        assert len(np.asarray(b.response_tokens)) > 0
+        assert b.reward is not None
+        assert len(np.asarray(b.logprobs)) == len(np.asarray(b.response_tokens))
+    # the producer submitted GRPO groups, the engine forked them (COW)
+    assert pipe.engine.total_groups_forked >= 1
+    pipe.engine.audit_pages()
+
+
+def test_engine_selection():
+    api = get_api(MODEL)
+    params = api.init(jax.random.PRNGKey(0))
+    assert isinstance(make_rollout_engine(api, params, PipelineSettings()),
+                      PagedDecodeEngine)
+    assert isinstance(
+        make_rollout_engine(api, params,
+                            PipelineSettings(rollout_engine="slot")),
+        DecodeEngine)
+    with pytest.raises(ValueError, match="rollout_engine"):
+        make_rollout_engine(api, params,
+                            PipelineSettings(rollout_engine="bogus"))
+
+
+def test_engine_selection_recurrent_family_falls_back_to_slot():
+    cfg = tiny("rwkv6-3b", vocab_size=32)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    assert isinstance(make_rollout_engine(api, params, PipelineSettings()),
+                      DecodeEngine)

@@ -1,0 +1,412 @@
+"""COW prefix sharing for GRPO groups (submit_group + PagePool).
+
+Load-bearing guarantees:
+
+* ``submit_group(G)`` is token-for-token (and logprob-bit) identical to G
+  independent submits under greedy decoding — sharing is an optimization,
+  never a semantic change;
+* the prompt is prefilled exactly once per group;
+* refcounted pages survive any mix of finish / abort / retain / resume
+  across the group (``audit_pages`` after every transition);
+* aborting the not-yet-forked leader promotes a follower with zero
+  repeated prefill.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.llm_proxy import LLMProxy
+from repro.core.scheduler import collect_rollout
+from repro.models import get_api
+from repro.models.paged import PagePool
+from repro.rollout.engine import DecodeEngine
+from repro.rollout.paged_engine import PagedDecodeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny("qwen3-4b", vocab_size=32)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _drain(eng, want, max_steps=800):
+    results = {}
+    for _ in range(max_steps):
+        for rid, toks, lps in eng.step():
+            results[rid] = (list(toks), list(lps))
+        if len(results) >= want:
+            return results
+    raise AssertionError(f"engine stalled: {len(results)}/{want} finished")
+
+
+def _engine(api, params, **kw):
+    base = dict(num_slots=4, max_total_len=64, page_size=8, prefill_chunk=8,
+                eos_id=99, temperature=0.0)
+    base.update(kw)
+    return PagedDecodeEngine(api, params, **base)
+
+
+# --------------------------------------------------------------- page pool
+def test_page_pool_refcounts():
+    pool = PagePool(6, page_size=4)
+    a = pool.alloc(3)
+    assert pool.pages_free == 2 and pool.pages_private == 3
+    pool.share(a[:2])
+    assert pool.pages_shared == 2 and pool.pages_private == 1
+    pool.release(a[:2])               # drop the second refs
+    assert pool.pages_shared == 0 and pool.pages_private == 3
+    pool.release(a)
+    assert pool.pages_free == 5 and pool.pages_in_use == 0
+    with pytest.raises(AssertionError, match="double release"):
+        pool.release([a[0]])
+
+
+def test_page_pool_fork_prefix_boundary():
+    pool = PagePool(10, page_size=4)
+    pages = pool.alloc(4)
+    shared, tail = pool.fork_prefix(pages, 8)     # aligned: 2 full, no tail
+    assert shared == pages[:2] and tail is None
+    shared2, tail2 = pool.fork_prefix(pages, 9)   # partial: tail = page idx 2
+    assert shared2 == pages[:2] and tail2 == pages[2]
+    assert all(pool.refcount(p) == 3 for p in pages[:2])
+    assert pool.peak_pages_in_use == 4
+
+
+# ------------------------------------------------------- greedy parity
+@pytest.mark.parametrize("plen", [8, 11])  # page-aligned and partial tail
+def test_group_parity_with_independent(setup, plen):
+    cfg, api, params = setup
+    rng = np.random.default_rng(plen)
+    prompt = rng.integers(1, cfg.vocab_size, plen).astype(np.int32)
+    g, budget = 3, 7
+
+    eng = _engine(api, params)
+    for rid in range(g):
+        eng.add_request(rid, prompt, budget)
+    indep = _drain(eng, g)
+    prefill_independent = eng.total_prefill_tokens
+
+    eng = _engine(api, params)
+    eng.submit_group(list(range(g)), prompt, budget)
+    grouped = _drain(eng, g)
+    assert eng.total_prefill_tokens == plen, "prompt must prefill exactly once"
+    assert prefill_independent == g * plen
+    eng.audit_pages()
+    assert eng.pages_free == eng.num_pages - 1, "leaked pages after finish"
+    for rid in range(g):
+        assert grouped[rid][0] == indep[rid][0], f"lane {rid} diverged"
+        np.testing.assert_array_equal(
+            np.asarray(grouped[rid][1], np.float32),
+            np.asarray(indep[rid][1], np.float32))
+
+
+def test_fork_shares_prefix_pages(setup):
+    """After the fork the fully-filled prompt pages are aliased (refcount G)
+    and only tail+decode pages are per-lane."""
+    cfg, api, params = setup
+    prompt = np.arange(1, 18, dtype=np.int32)      # 17 tokens: 2 full pages + tail
+    eng = _engine(api, params)
+    eng.submit_group([0, 1, 2], prompt, 6)
+    while eng.total_groups_forked == 0:
+        eng.step()
+    assert eng.pages_shared == 2                    # the full prompt pages
+    leader_row = eng._slot_pages[eng.req_to_slot[0]]
+    for rid in (1, 2):
+        row = eng._slot_pages[eng.req_to_slot[rid]]
+        assert row[:2] == leader_row[:2], "followers must alias prefix pages"
+        assert row[2] != leader_row[2], "tail page must be private"
+    eng.audit_pages()
+    _drain(eng, 3)
+    eng.audit_pages()
+    assert eng.pages_free == eng.num_pages - 1 and eng.pages_shared == 0
+
+
+def test_forked_lane_abort_resume_while_siblings_decode(setup):
+    """Abort one forked lane mid-decode with retained pages; siblings keep
+    decoding; the resumed lane is byte-identical to the uninterrupted run."""
+    cfg, api, params = setup
+    prompt = np.asarray([3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5], np.int32)
+    g, budget = 3, 10
+
+    eng = _engine(api, params)
+    eng.submit_group([0, 1, 2], prompt, budget)
+    base = _drain(eng, g)
+
+    eng = _engine(api, params)
+    eng.submit_group([0, 1, 2], prompt, budget)
+    for _ in range(5):
+        eng.step()
+    partial = eng.abort(1, retain=True)
+    assert partial.resumable and len(partial.tokens) > 0
+    eng.audit_pages()
+    assert eng.pages_shared > 0, "retained lane must keep its shared refs"
+    # siblings run to completion while lane 1 is parked
+    rest = _drain(eng, 2)
+    eng.audit_pages()
+    for rid in (0, 2):
+        assert rest[rid][0] == base[rid][0]
+    prefill_before = eng.total_prefill_tokens
+    eng.resume_request(1, 11, budget - len(partial.tokens))
+    got = _drain(eng, 1)[11]
+    assert eng.total_prefill_tokens == prefill_before, \
+        "resume must re-attach pages, not re-prefill"
+    assert list(partial.tokens) + got[0] == base[1][0]
+    np.testing.assert_array_equal(
+        np.asarray(list(partial.logprobs) + got[1], np.float32),
+        np.asarray(base[1][1], np.float32))
+    eng.audit_pages()
+    assert eng.pages_free == eng.num_pages - 1 and not eng.retained
+
+
+def test_pre_fork_leader_abort_promotes_follower(setup):
+    """Aborting the group's prefill leader before the fork hands its pages
+    (prefilled content intact) to a follower — no prompt work repeats, and
+    retain degrades to a plain abort (nothing decoded yet)."""
+    cfg, api, params = setup
+    prompt = np.asarray([3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5], np.int32)
+    g, budget = 3, 10
+
+    eng = _engine(api, params)
+    eng.submit_group([0, 1, 2], prompt, budget)
+    base = _drain(eng, g)
+
+    eng = _engine(api, params, prefill_chunk=4)
+    eng.submit_group([0, 1, 2], prompt, budget)
+    eng.step()                                     # one 4-token chunk in
+    r = eng.abort(0, retain=True)
+    assert not r.resumable and len(r.tokens) == 0
+    eng.audit_pages()
+    rest = _drain(eng, 2)
+    assert eng.total_prefill_tokens == len(prompt), "prefill must not restart"
+    for rid in (1, 2):
+        assert rest[rid][0] == base[rid][0]
+    eng.audit_pages()
+    assert eng.pages_free == eng.num_pages - 1
+
+
+def test_pre_fork_follower_abort_releases_reserved_pages(setup):
+    cfg, api, params = setup
+    prompt = np.asarray([3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5], np.int32)
+    eng = _engine(api, params, prefill_chunk=4)
+    eng.submit_group([0, 1, 2], prompt, 10)
+    eng.step()
+    free_before = eng.pages_free
+    r = eng.abort(2, retain=True)
+    assert not r.resumable
+    assert eng.pages_free > free_before
+    eng.audit_pages()
+    rest = _drain(eng, 2)
+    assert sorted(rest) == [0, 1]
+    eng.audit_pages()
+    assert eng.pages_free == eng.num_pages - 1
+
+
+def test_group_admission_gating(setup):
+    """can_admit_group accounts for sharing: a group fits where independent
+    lanes would not."""
+    cfg, api, params = setup
+    # 16-token prompt (2 full pages) + 8 budget -> 3 pages/lane independent
+    # (4 lanes = 12 pages, over the 7-page pool), but grouped COW needs only
+    # 2 shared + 4x1 private = 6.
+    eng = _engine(api, params, num_slots=4, max_total_len=32, num_pages=8)
+    assert 4 * eng._pages_needed(16 + 8) > eng.pages_free
+    assert eng.can_admit_group(16, 4, 8)
+    eng.submit_group([0, 1, 2, 3], np.arange(1, 17, dtype=np.int32), 8)
+    _drain(eng, 4)
+    eng.audit_pages()
+    assert eng.pages_free == eng.num_pages - 1
+
+
+# ------------------------------------------------------------ proxy path
+def test_proxy_group_submit_degrades_on_slot_engine(setup):
+    """generate_group works against engines without supports_group: the
+    proxy expands the group into independent requests."""
+    cfg, api, params = setup
+    eng = DecodeEngine(api, params, num_slots=2, max_total_len=32,
+                       eos_id=99, temperature=0.0)
+    proxy = LLMProxy(eng).start()
+    results = []
+    lock = threading.Lock()
+
+    def cb(r):
+        with lock:
+            results.append(r)
+
+    from repro.core.scheduler import expand_tasks
+    tasks = expand_tasks(0, np.asarray([1, 2, 3], np.int32), 3, 5,
+                         replicate=True)
+    proxy.generate_group(tasks, version=0, callback=cb)
+    deadline = time.monotonic() + 30
+    while len(results) < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    proxy.stop()
+    assert len(results) == 3
+    assert all(not r.aborted and len(r.tokens) == 5 for r in results)
+
+
+def test_collect_rollout_group_submission_paged(setup):
+    """collect_rollout emits group submissions: one prefill per prompt,
+    complete groups collected."""
+    cfg, api, params = setup
+    eng = _engine(api, params, num_slots=8, max_total_len=32)
+    proxy = LLMProxy(eng).start()
+    rng = np.random.default_rng(3)
+    import itertools
+
+    def prompts():
+        for pid in itertools.count():
+            yield pid, rng.integers(1, 30, 6).astype(np.int32)
+
+    out = collect_rollout(proxy, prompts(), num_groups=2, group_size=4,
+                          max_new_tokens=5,
+                          reward_fn=lambda s: float(s.response_tokens[0] % 2),
+                          timeout=120)
+    proxy.stop()
+    assert len(out) == 8
+    assert eng.total_groups_forked >= 2
+    assert eng.total_prefill_tokens == 6 * (eng.total_groups_forked)
+    eng.audit_pages()
+
+
+def test_never_fitting_group_expands_to_singles(setup):
+    """A group whose COW page plan exceeds the WHOLE pool must not block the
+    queue forever: the proxy expands it into singles that fit one at a time."""
+    cfg, api, params = setup
+    # 16-token prompt, page 8: full=2, priv=1 -> group of 4 needs 6 pages,
+    # but the pool only has 5 usable; each single (3 pages) fits alone.
+    eng = _engine(api, params, num_slots=4, max_total_len=32, num_pages=6)
+    assert not eng.group_fits_pool(16, 4, 8)
+    proxy = LLMProxy(eng).start()
+    results = []
+    lock = threading.Lock()
+
+    def cb(r):
+        with lock:
+            results.append(r)
+
+    from repro.core.scheduler import expand_tasks
+    tasks = expand_tasks(0, np.arange(1, 17, dtype=np.int32), 4, 8,
+                         replicate=True)
+    proxy.generate_group(tasks, version=0, callback=cb)
+    deadline = time.monotonic() + 60
+    while len(results) < 4 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    proxy.stop()
+    assert len(results) == 4
+    assert all(not r.aborted for r in results)
+    eng.audit_pages()
+
+
+def test_producer_groups_stay_prompt_aligned_after_partial_flush():
+    """A capacity pinch mid-group must not de-align grouping for the rest of
+    the run: the boundary-crossing pull is held back to seed the next group."""
+    from repro.core.sample_buffer import SampleBuffer
+    from repro.core.scheduler import RolloutProducer
+
+    class RecordingProxy:
+        def __init__(self):
+            self.groups, self.singles = [], []
+
+        def generate_group(self, tasks, version, cb):
+            self.groups.append([t.prompt_id for t in tasks])
+
+        def generate(self, task, version, cb):
+            self.singles.append(task.prompt_id)
+
+    p = np.asarray([1, 2], np.int32)
+    stream = iter([(0, p)] * 4 + [(1, p)] * 4)
+    buf = SampleBuffer(batch_size=3, alpha=0)      # capacity 3 < group_size
+    proxy = RecordingProxy()
+    prod = RolloutProducer(proxy, buf, stream, group_size=4, max_new_tokens=4,
+                           reward_fn=lambda s: 1.0)
+    prod._produce_group()                           # pinch: 3 of 4 A-replicas
+    assert proxy.groups == [[0, 0, 0]]
+    buf.reclaim(3)
+    prod._produce_group()   # last A, then B crosses the boundary -> held
+    assert proxy.singles == [0] and prod._held_prompt is not None
+    buf.reclaim(1)
+    prod._produce_group()                           # held B seeds the group
+    assert proxy.groups[-1] == [1, 1, 1]
+    assert all(len(set(g)) == 1 for g in proxy.groups), \
+        "every group must be single-prompt"
+
+
+@pytest.mark.kernels
+def test_group_fork_with_pallas_kernel_matches_ref(setup):
+    """Forked lanes read shared pages through the unchanged Pallas paged
+    decode-attention kernel (interpret mode): greedy outputs match ref."""
+    cfg, api, params = setup
+    prompt = np.asarray([1, 5, 7, 9, 2], np.int32)
+    outs = {}
+    for impl in ("ref", "kernel_interpret"):
+        eng = _engine(api, params, num_slots=2, max_total_len=32,
+                      attn_impl=impl)
+        eng.submit_group([0, 1], prompt, 4)
+        outs[impl] = {rid: t for rid, (t, _) in _drain(eng, 2).items()}
+        eng.audit_pages()
+    assert outs["ref"] == outs["kernel_interpret"]
+
+
+# ----------------------------------------------------------- slow sweeps
+@pytest.mark.slow
+@pytest.mark.timeout(600)
+@pytest.mark.parametrize("g", [2, 4, 8])
+def test_group_parity_sweep(setup, g):
+    """Greedy parity across group sizes and prompt lengths crossing page
+    boundaries, with stochastic admission order."""
+    cfg, api, params = setup
+    rng = np.random.default_rng(g)
+    for plen in (5, 8, 13, 24):
+        prompt = rng.integers(1, cfg.vocab_size, plen).astype(np.int32)
+        eng = _engine(api, params, num_slots=g, max_total_len=64)
+        for rid in range(g):
+            eng.add_request(rid, prompt, 6)
+        indep = _drain(eng, g)
+        eng = _engine(api, params, num_slots=g, max_total_len=64)
+        eng.submit_group(list(range(g)), prompt, 6)
+        grouped = _drain(eng, g)
+        assert eng.total_prefill_tokens == plen
+        eng.audit_pages()
+        for rid in range(g):
+            assert grouped[rid][0] == indep[rid][0], (g, plen, rid)
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(600)
+def test_bench_prefix_sharing_ratios(setup):
+    """The ISSUE acceptance ratios at G=8, reduced workload: grouped COW
+    computes >= 4x fewer prefill tokens and holds >= 2x fewer peak pages
+    than independent submission, byte-identical greedy outputs."""
+    cfg, api, params = setup
+    g, budget = 8, 8
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+               for n in (32, 41, 48)]
+
+    def run(grouped):
+        eng = _engine(api, params, num_slots=g * len(prompts),
+                      max_total_len=64)
+        rid = 0
+        for p in prompts:
+            rids = list(range(rid, rid + g))
+            rid += g
+            if grouped:
+                eng.submit_group(rids, p, budget)
+            else:
+                for r in rids:
+                    eng.add_request(r, p, budget)
+        outs = _drain(eng, g * len(prompts))
+        eng.audit_pages()
+        return eng.total_prefill_tokens, eng.peak_pages_in_use, outs
+
+    pre_i, peak_i, outs_i = run(False)
+    pre_g, peak_g, outs_g = run(True)
+    assert pre_i >= 4 * pre_g, (pre_i, pre_g)
+    assert peak_i >= 2 * peak_g, (peak_i, peak_g)
+    assert all(outs_i[r][0] == outs_g[r][0] for r in outs_i)

@@ -33,6 +33,18 @@ def test_rlvr_pipeline_staleness_bounded(alpha):
     assert pipe.buffer.total_consumed == 3 * 8
 
 
+def test_rlvr_pipeline_with_slot_engine_forced():
+    """The seed slot engine stays selectable via settings and the full
+    training loop behaves identically (paged is merely the default)."""
+    from repro.rollout.engine import DecodeEngine
+
+    pipe = build_rlvr_pipeline(MODEL, settings(rollout_engine="slot"))
+    assert isinstance(pipe.engine, DecodeEngine)
+    stats = pipe.run(num_steps=2, timeout=240)
+    assert len(stats) == 2
+    assert all(s.staleness_max <= 1 for s in stats)
+
+
 def test_rlvr_sync_mode_never_stale():
     pipe = build_rlvr_pipeline(MODEL, settings(async_generation_ratio=0))
     stats = pipe.run(num_steps=2, timeout=240)
