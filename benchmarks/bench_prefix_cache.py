@@ -1,0 +1,154 @@
+"""Automatic cross-prompt prefix caching: radix-tree cache on vs off.
+
+Two workloads the GRPO-group COW sharing of PR 2 cannot touch:
+
+* **shared system prompt** — N DISTINCT prompts carrying the same
+  48-token preamble (system prompt / few-shot block).  With the cache the
+  preamble's pages are computed once and aliased by every later request;
+  without it every admission re-prefills the full prompt.
+* **multi-turn agentic sim** — a conversation resubmitted turn after turn
+  (prompt_t = conversation_{t-1} + action + new observation), the EnvManager
+  ``context_mode="full"`` pattern.  With the cache each turn only prefills
+  the new suffix (incremental prefill); without it prefill grows
+  quadratically with turn count.
+
+Greedy decoding additionally asserts byte-identical outputs — caching is an
+optimization, never a semantic change — and ``audit_pages`` runs after every
+phase.  Emits BENCH_prefix_cache.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, flush_json
+from repro.configs import REGISTRY
+from repro.models import get_api
+from repro.rollout.paged_engine import PagedDecodeEngine
+
+NUM_PROMPTS = 8
+PRE_LEN = 48            # shared preamble (3 pages)
+SFX_LEN = 16            # distinct per-prompt suffix
+BUDGET = 12
+PAGE_SIZE = 16
+PREFILL_CHUNK = 16
+MAX_TOTAL_LEN = 160
+NUM_TURNS = 4
+OBS_LEN = 12
+
+
+def _make_engine(api, params, *, prefix_cache: bool):
+    return PagedDecodeEngine(api, params, num_slots=NUM_PROMPTS,
+                             max_total_len=MAX_TOTAL_LEN, page_size=PAGE_SIZE,
+                             prefill_chunk=PREFILL_CHUNK, eos_id=9999,
+                             temperature=0.0, prefix_cache=prefix_cache)
+
+
+def _drain(eng, want):
+    results = {}
+    while len(results) < want:
+        for rid, toks, lps in eng.step():
+            results[rid] = list(toks)
+    return results
+
+
+def _shared_preamble(api, params, prompts, *, cached: bool):
+    eng = _make_engine(api, params, prefix_cache=cached)
+    t0 = time.perf_counter()
+    for rid, p in enumerate(prompts):
+        eng.add_request(rid, p, BUDGET)
+    outs = _drain(eng, len(prompts))
+    wall = time.perf_counter() - t0
+    eng.audit_pages()
+    return {
+        "wall_s": wall,
+        "prefill_tokens": eng.total_prefill_tokens,
+        "cache_hit_tokens": eng.cache_hit_tokens,
+        "cache_hits": eng.cache_hits,
+        "cache_ext_hits": eng.cache_ext_hits,
+        "peak_pages_in_use": eng.peak_pages_in_use,
+    }, outs
+
+
+def _agentic_sim(api, params, *, cached: bool):
+    """One simulated multi-turn trajectory: resubmit the growing
+    conversation each turn (greedy actions feed the next prompt)."""
+    rng = np.random.default_rng(1)
+    eng = _make_engine(api, params, prefix_cache=cached)
+    convo = rng.integers(1, 60, OBS_LEN).astype(np.int32)
+    submitted = 0
+    t0 = time.perf_counter()
+    for turn in range(NUM_TURNS):
+        eng.add_request(turn, convo, BUDGET)
+        submitted += len(convo)
+        action = np.asarray(_drain(eng, 1)[turn], np.int32)
+        obs = rng.integers(1, 60, OBS_LEN).astype(np.int32)
+        convo = np.concatenate([convo, action, obs])
+    wall = time.perf_counter() - t0
+    eng.audit_pages()
+    return {
+        "wall_s": wall,
+        "prompt_tokens_submitted": submitted,
+        "prefill_tokens": eng.total_prefill_tokens,
+        "cache_hit_tokens": eng.cache_hit_tokens,
+    }, convo
+
+
+def run() -> None:
+    cfg = dataclasses.replace(
+        REGISTRY["qwen3-4b"].smoke(), num_layers=2, d_model=128, num_heads=4,
+        head_dim=32, num_kv_heads=2, d_ff=256, vocab_size=64)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    pre = rng.integers(1, 60, PRE_LEN).astype(np.int32)
+    prompts = [np.concatenate([pre, rng.integers(1, 60, SFX_LEN).astype(np.int32)])
+               for _ in range(NUM_PROMPTS)]
+
+    results = {}
+    on, outs_on = _shared_preamble(api, params, prompts, cached=True)
+    off, outs_off = _shared_preamble(api, params, prompts, cached=False)
+    identical = all(outs_on[r] == outs_off[r] for r in outs_off)
+    ratio = off["prefill_tokens"] / on["prefill_tokens"]
+    total_prompt_tokens = sum(len(p) for p in prompts)
+    results["shared_preamble"] = {
+        "cache_on": on, "cache_off": off,
+        "prefill_tokens_ratio": ratio,
+        # fraction of submitted prompt tokens served from cached pages
+        "cache_hit_rate": on["cache_hit_tokens"] / total_prompt_tokens,
+        "outputs_identical": bool(identical),
+    }
+    emit("prefix_cache.shared_preamble.prefill_tokens_ratio", ratio,
+         f"on={on['prefill_tokens']} off={off['prefill_tokens']} "
+         f"identical={identical}")
+
+    a_on, convo_on = _agentic_sim(api, params, cached=True)
+    a_off, convo_off = _agentic_sim(api, params, cached=False)
+    a_identical = convo_on.tolist() == convo_off.tolist()
+    a_ratio = a_off["prefill_tokens"] / a_on["prefill_tokens"]
+    results["agentic_multi_turn"] = {
+        "cache_on": a_on, "cache_off": a_off,
+        "prefill_tokens_ratio": a_ratio,
+        "outputs_identical": bool(a_identical),
+    }
+    emit("prefix_cache.agentic.prefill_tokens_ratio", a_ratio,
+         f"on={a_on['prefill_tokens']} off={a_off['prefill_tokens']} "
+         f"identical={a_identical}")
+
+    results["workload"] = {
+        "num_prompts": NUM_PROMPTS, "preamble_len": PRE_LEN,
+        "suffix_len": SFX_LEN, "budget": BUDGET, "page_size": PAGE_SIZE,
+        "num_turns": NUM_TURNS, "obs_len": OBS_LEN,
+        "max_total_len": MAX_TOTAL_LEN,
+    }
+    assert identical and a_identical, "cache changed greedy outputs"
+    assert ratio >= 2.0, f"shared-preamble prefill reduction below 2x: {ratio}"
+    flush_json("BENCH_prefix_cache.json", results)
+
+
+if __name__ == "__main__":
+    run()

@@ -10,7 +10,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (bench_engine, bench_paged_engine, bench_prefix_sharing,
+from benchmarks import (bench_engine, bench_paged_engine, bench_prefix_cache,
+                        bench_prefix_sharing,
                         fig1b_throughput_scaling,
                         fig3_allocation_and_rollout, fig4_offpolicy_stability,
                         fig7_queue_scheduling, fig8_prompt_replication,
@@ -31,6 +32,7 @@ MODULES = [
     ("engine", bench_engine),
     ("paged_engine", bench_paged_engine),
     ("prefix_sharing", bench_prefix_sharing),
+    ("prefix_cache", bench_prefix_cache),
     ("roofline", roofline),
 ]
 

@@ -26,12 +26,35 @@ from repro.envs.base import BaseEnv
 
 
 class EnvManager(threading.Thread):
-    """One environment's rollout loop."""
+    """One environment's rollout loop.
+
+    ``context_mode``:
+
+    * ``"turn"`` (default) — each LLM call sees only the current
+      observation (the seed behaviour; right for envs whose observation is
+      already a full state encoding).
+    * ``"full"`` — each LLM call resubmits the growing conversation
+      (obs₀ action₀ obs₁ ... obsₜ).  On an engine with automatic prefix
+      caching this becomes *incremental prefill per turn*: the whole shared
+      history is aliased from cached pages and only the new observation
+      suffix is prefilled.  ``max_context_tokens`` caps the prompt by
+      dropping the oldest turns (a safety valve for the engine's sequence
+      budget; it sacrifices cache hits on the dropped prefix).
+    """
 
     def __init__(self, env: BaseEnv, proxy: LLMProxy, pool: "EnvManagerPool",
                  *, env_id: int, group_id: int, max_steps: int,
-                 max_new_tokens: int):
+                 max_new_tokens: int, context_mode: str = "turn",
+                 max_context_tokens: Optional[int] = None):
         super().__init__(name=f"env_manager_{env_id}", daemon=True)
+        if context_mode not in ("turn", "full"):
+            raise ValueError(f"context_mode must be turn|full, got {context_mode!r}")
+        if context_mode == "full" and max_context_tokens is None:
+            # an uncapped growing conversation would eventually overrun the
+            # engine's sequence budget and assert inside the proxy thread —
+            # force callers to size the cap (pipeline.py derives it from
+            # max_seq_len - max_new_tokens).
+            raise ValueError("context_mode='full' requires max_context_tokens")
         self.env = env
         self.proxy = proxy
         self.pool = pool
@@ -39,8 +62,25 @@ class EnvManager(threading.Thread):
         self.group_id = group_id
         self.max_steps = max_steps
         self.max_new_tokens = max_new_tokens
+        self.context_mode = context_mode
+        self.max_context_tokens = max_context_tokens
         self._result: Optional[GenerationResult] = None
         self._result_ready = threading.Event()
+
+    def _build_prompt(self, ctx: List[np.ndarray], obs) -> np.ndarray:
+        """The turn's LLM prompt: bare observation, or the conversation so
+        far + the new observation (``full`` mode)."""
+        obs = np.asarray(obs, np.int32)
+        if self.context_mode != "full":
+            return obs
+        parts = list(ctx) + [obs]
+        if self.max_context_tokens is not None:
+            total = sum(len(p) for p in parts)
+            while len(parts) > 1 and total > self.max_context_tokens:
+                total -= len(parts.pop(0))   # drop oldest turns first
+            if total > self.max_context_tokens:
+                parts = [parts[0][-self.max_context_tokens:]]
+        return np.concatenate(parts) if len(parts) > 1 else parts[0]
 
     # LLM call: submit to the shared proxy, park this manager (NOT the GPU —
     # other managers' requests keep the decode slots busy meanwhile).
@@ -78,12 +118,17 @@ class EnvManager(threading.Thread):
                 self.pool.buffer.reclaim(1)
                 continue
             aborted = False
+            ctx: List[np.ndarray] = []   # full-context mode: obs/action turns
             for _ in range(self.max_steps):
-                res = self._llm(np.asarray(obs, np.int32), version)
+                prompt = self._build_prompt(ctx, obs)
+                res = self._llm(prompt, version)
                 if res is None or res.aborted:
                     aborted = True
                     break
                 action = np.asarray(res.tokens, np.int32)
+                if self.context_mode == "full":
+                    ctx.append(np.asarray(obs, np.int32))
+                    ctx.append(action)
                 try:
                     obs, reward, done, info = self.env.step(action)
                 except Exception:
@@ -112,7 +157,9 @@ class EnvManagerPool:
     def __init__(self, make_env: Callable[[int], BaseEnv], proxy: LLMProxy,
                  buffer: SampleBuffer, *, num_env_groups: int, group_size: int,
                  max_steps: int, max_new_tokens: int,
-                 target_trajectories: Optional[int] = None):
+                 target_trajectories: Optional[int] = None,
+                 context_mode: str = "turn",
+                 max_context_tokens: Optional[int] = None):
         self.buffer = buffer
         self.proxy = proxy
         self.num_env_groups = num_env_groups
@@ -128,7 +175,9 @@ class EnvManagerPool:
                 env = make_env(eid)
                 self.managers.append(EnvManager(
                     env, proxy, self, env_id=eid, group_id=g,
-                    max_steps=max_steps, max_new_tokens=max_new_tokens))
+                    max_steps=max_steps, max_new_tokens=max_new_tokens,
+                    context_mode=context_mode,
+                    max_context_tokens=max_context_tokens))
                 eid += 1
 
     @property

@@ -354,3 +354,24 @@ class LLMProxy:
     @property
     def num_pending(self) -> int:
         return sum(len(self._entry_requests(e)) for e in self._pending)
+
+    @property
+    def cache_hit_tokens(self) -> int:
+        """Prefill tokens the engine skipped via automatic prefix caching."""
+        return getattr(self.engine, "cache_hit_tokens", 0)
+
+    @property
+    def cache_stats(self) -> Dict[str, int]:
+        """Prefix-cache hit/miss counters (zeros on engines without one)."""
+        eng = self.engine
+        lookups = getattr(eng, "cache_lookups", 0)
+        hits = getattr(eng, "cache_hits", 0)
+        return {
+            "lookups": lookups,
+            "hits": hits,
+            "misses": lookups - hits,
+            "extension_hits": getattr(eng, "cache_ext_hits", 0),
+            "hit_tokens": getattr(eng, "cache_hit_tokens", 0),
+            "evicted_pages": getattr(eng, "cache_evicted_pages", 0),
+            "pages_held": getattr(eng, "cache_pages_held", 0),
+        }

@@ -107,24 +107,47 @@ def collect_rollout(
     With ``group_submit`` (default) the G replicated candidates of a prompt
     go to the proxy as ONE group submission: COW engines prefill the prompt
     once and fork G lanes sharing its KV pages; other engines degrade to G
-    independent requests inside the proxy."""
+    independent requests inside the proxy.
+
+    A finite prompt stream may exhaust mid-step (e.g. during filtered-group
+    top-up at the end of an epoch): the step then returns the qualifying
+    groups it could assemble (possibly fewer than ``num_groups``) instead of
+    raising or spinning until the timeout."""
     collector = _GroupCollector(group_size, reward_fn, filter_fn)
     submitted: List[int] = []
+    finished_ids: set = set()
+    ids_lock = threading.Lock()
+    exhausted = False
 
-    def submit_one_prompt():
-        pid, toks = next(prompts)
+    def submit_one_prompt() -> bool:
+        nonlocal exhausted
+        try:
+            pid, toks = next(prompts)
+        except StopIteration:
+            # a bare StopIteration would escape the caller's generator frames
+            # as RuntimeError (PEP 479) — degrade to "no more prompts".
+            exhausted = True
+            return False
         tasks = expand_tasks(pid, toks, group_size, max_new_tokens,
                              replicate=replicate)
         submitted.extend(t.task_id for t in tasks)
-        cb = lambda r: collector.add(r, version)  # noqa: E731
+
+        def cb(r: GenerationResult) -> None:
+            if not r.aborted:
+                with ids_lock:
+                    finished_ids.add(r.request_id)
+            collector.add(r, version)
+
         if group_submit and replicate and len(tasks) > 1:
             proxy.generate_group(tasks, version, cb)
         else:
             for task in tasks:
                 proxy.generate(task, version, cb)
+        return True
 
     for _ in range(num_groups + max_additional_running_prompts):
-        submit_one_prompt()
+        if not submit_one_prompt():
+            break
 
     out: List[Sample] = []
     import time as _time
@@ -139,11 +162,21 @@ def collect_rollout(
             need_more = collector.filtered_groups
             collector.filtered_groups = 0
         for _ in range(need_more):
-            submit_one_prompt()
+            if not submit_one_prompt():
+                break
+        if exhausted:
+            with ids_lock:
+                all_done = len(finished_ids) >= len(submitted)
+            if all_done and not collector.done_groups:
+                break          # nothing in flight, no prompts left: partial
         if _time.monotonic() > deadline:
             raise TimeoutError("collect_rollout timed out")
-    # ABORT everything still running — the step has what it needs
-    for tid in submitted:
+    while collector.done_groups and len(out) < num_groups * group_size:
+        out.extend(collector.done_groups.popleft())
+    # ABORT only what is still running — the step has what it needs
+    with ids_lock:
+        running = [tid for tid in submitted if tid not in finished_ids]
+    for tid in running:
         proxy.abort(tid)
     return out
 
@@ -173,9 +206,48 @@ class RolloutProducer(threading.Thread):
         # prompt pulled past a group boundary during partial-group assembly;
         # it seeds the next group so grouping stays aligned with the stream.
         self._held_prompt: Optional[tuple] = None
+        # current group uid: one fresh next_uid() per assembled group.  Using
+        # the prompt id would collide a prompt repeated across epochs with
+        # its earlier group in downstream assembly/GRPO grouping.
+        self._group_uid: Optional[int] = None
+        self._group_pid: Optional[int] = None
+        self._group_count = 0
 
     def stop(self) -> None:
         self._stop.set()
+
+    def _next_group_id(self, pid: int) -> int:
+        """Group uid for the next pull of prompt ``pid``: consecutive pulls
+        of the same prompt share one uid until group_size is reached (so a
+        capacity-pinch partial flush stays one logical group), then a fresh
+        uid starts — a prompt repeated in a later epoch never collides with
+        its earlier group."""
+        if (self._group_uid is None or pid != self._group_pid
+                or self._group_count >= self.group_size):
+            self._group_uid = next_uid()
+            self._group_pid = pid
+            self._group_count = 0
+        self._group_count += 1
+        return self._group_uid
+
+    def _publish(self, task: RolloutTask, response: np.ndarray,
+                 logprobs: np.ndarray, version_started: int) -> None:
+        """Reward and publish a finished sample.  The response is clamped to
+        the ORIGINAL generation budget — abort→resume legs must never let
+        the concatenated response exceed it."""
+        opl = task.meta.get("orig_prompt_len",
+                            len(np.asarray(task.prompt_tokens)))
+        budget = task.meta.get("orig_max_new_tokens", task.max_new_tokens)
+        sample = Sample(
+            sample_id=next_uid(), prompt_id=task.prompt_id,
+            replica_idx=task.replica_idx,
+            prompt_tokens=np.asarray(task.prompt_tokens, np.int32)[:opl],
+            response_tokens=np.asarray(response, np.int32)[:budget],
+            logprobs=np.asarray(logprobs, np.float32)[:budget],
+            version_started=version_started, group_id=task.group_id)
+        sample.reward = float(self.reward_fn(sample))
+        sample.is_positive = sample.reward > 0
+        self.buffer.put(sample)
 
     def _on_result(self, result: GenerationResult) -> None:
         task = result.task
@@ -199,13 +271,27 @@ class RolloutProducer(threading.Thread):
             lps = task.meta.get("resumed_logprobs", np.zeros((0,), np.float32))
             plp = np.asarray(result.logprobs) if result.logprobs is not None \
                 else np.zeros((0,), np.float32)
+            budget = task.meta.get("orig_max_new_tokens", task.max_new_tokens)
+            all_tokens = np.concatenate([done, partial])
+            all_lps = np.concatenate([lps, plp])
+            remaining = budget - len(all_tokens)
+            if remaining <= 0:
+                # the budget is already spent: resuming would decode >= 1
+                # extra token per resume cycle (budget overrun).  The sample
+                # is complete — publish it and drop any retained pages.
+                if result.resumable:
+                    self.proxy.release_retained(result.request_id)
+                self._publish(task, all_tokens, all_lps,
+                              result.version_started)
+                return
             carried_meta = {
                 **{k: v for k, v in task.meta.items()
                    if not k.startswith("resumed_")},
                 "orig_prompt_len": task.meta.get(
                     "orig_prompt_len", len(np.asarray(task.prompt_tokens))),
-                "resumed_tokens": np.concatenate([done, partial]),
-                "resumed_logprobs": np.concatenate([lps, plp]),
+                "orig_max_new_tokens": budget,
+                "resumed_tokens": all_tokens,
+                "resumed_logprobs": all_lps,
             }
             if result.resumable:
                 # Paged engine retained the prefix's KV pages: resume
@@ -216,7 +302,7 @@ class RolloutProducer(threading.Thread):
                     task_id=next_uid(), prompt_id=task.prompt_id,
                     replica_idx=task.replica_idx,
                     prompt_tokens=np.asarray(task.prompt_tokens, np.int32),
-                    max_new_tokens=max(1, task.max_new_tokens - len(partial)),
+                    max_new_tokens=remaining,
                     group_id=task.group_id, meta=carried_meta)
                 self.proxy.generate_resumed(resumed, self.buffer.version,
                                             self._on_result,
@@ -230,26 +316,19 @@ class RolloutProducer(threading.Thread):
                 prompt_tokens=np.concatenate(
                     [np.asarray(task.prompt_tokens, np.int32),
                      partial.astype(np.int32)]),
-                max_new_tokens=max(1, task.max_new_tokens - len(partial)),
+                max_new_tokens=remaining,
                 group_id=task.group_id, meta=carried_meta)
             self.proxy.generate(resumed, self.buffer.version, self._on_result)
             return
         prefix_t = task.meta.get("resumed_tokens", np.zeros((0,), np.int32))
         prefix_l = task.meta.get("resumed_logprobs", np.zeros((0,), np.float32))
-        opl = task.meta.get("orig_prompt_len",
-                            len(np.asarray(task.prompt_tokens)))
-        sample = Sample(
-            sample_id=next_uid(), prompt_id=task.prompt_id,
-            replica_idx=task.replica_idx,
-            prompt_tokens=np.asarray(task.prompt_tokens, np.int32)[:opl],
-            response_tokens=np.concatenate(
-                [prefix_t.astype(np.int32), np.asarray(result.tokens, np.int32)]),
-            logprobs=np.concatenate(
-                [prefix_l.astype(np.float32), np.asarray(result.logprobs, np.float32)]),
-            version_started=result.version_started, group_id=task.group_id)
-        sample.reward = float(self.reward_fn(sample))
-        sample.is_positive = sample.reward > 0
-        self.buffer.put(sample)
+        self._publish(
+            task,
+            np.concatenate([prefix_t.astype(np.int32),
+                            np.asarray(result.tokens, np.int32)]),
+            np.concatenate([prefix_l.astype(np.float32),
+                            np.asarray(result.logprobs, np.float32)]),
+            result.version_started)
 
     def _produce_group(self) -> bool:
         """Claim up to group_size freshness slots and submit them as ONE
@@ -294,7 +373,7 @@ class RolloutProducer(threading.Thread):
                                      replica_idx=len(tasks),
                                      prompt_tokens=toks,
                                      max_new_tokens=self.max_new_tokens,
-                                     group_id=pid))
+                                     group_id=self._next_group_id(pid)))
         if len(tasks) > 1:
             self.proxy.generate_group(tasks, version, self._on_result)
         elif tasks:
@@ -319,5 +398,5 @@ class RolloutProducer(threading.Thread):
             task = RolloutTask(task_id=next_uid(), prompt_id=pid,
                                replica_idx=0, prompt_tokens=toks,
                                max_new_tokens=self.max_new_tokens,
-                               group_id=pid)
+                               group_id=self._next_group_id(pid))
             self.proxy.generate(task, version, self._on_result)

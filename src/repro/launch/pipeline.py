@@ -54,10 +54,21 @@ class PipelineSettings:
     prefill_chunk: int = 16                # paged engine: prefill chunk tokens
     num_pages: Optional[int] = None        # paged engine: pool size (auto)
     attn_impl: str = "ref"                 # ref | kernel | kernel_interpret
+    # automatic cross-prompt prefix caching (radix tree over KV pages).
+    # "auto"/"on": enabled on the paged engine; "off": disabled.  The slot
+    # engine has no page pool — the setting passes through as a no-op there.
+    prefix_cache: str = "auto"             # auto | on | off
+    # agentic rollouts: "turn" submits only each turn's observation; "full"
+    # resubmits the growing conversation every turn, which the prefix cache
+    # turns into incremental prefill (only the new suffix is computed).
+    agentic_context: str = "turn"          # turn | full
 
 
 def make_rollout_engine(api, params, s: PipelineSettings) -> RolloutEngine:
     """Construct the rollout engine per ``s.rollout_engine`` (see above)."""
+    if s.prefix_cache not in ("auto", "on", "off"):
+        raise ValueError(f"unknown prefix_cache {s.prefix_cache!r} "
+                         "(expected auto | on | off)")
     choice = s.rollout_engine
     if choice == "auto":
         choice = "paged" if api.init_paged_cache is not None else "slot"
@@ -66,7 +77,7 @@ def make_rollout_engine(api, params, s: PipelineSettings) -> RolloutEngine:
             api, params, num_slots=s.num_slots, max_total_len=s.max_seq_len,
             page_size=s.page_size, prefill_chunk=s.prefill_chunk,
             num_pages=s.num_pages, eos_id=EOS, seed=s.seed,
-            attn_impl=s.attn_impl)
+            attn_impl=s.attn_impl, prefix_cache=s.prefix_cache != "off")
     if choice != "slot":
         raise ValueError(f"unknown rollout_engine {s.rollout_engine!r} "
                          "(expected auto | paged | slot)")
@@ -168,7 +179,9 @@ def build_agentic_pipeline(model_cfg: ModelConfig, s: PipelineSettings, *,
     pool = EnvManagerPool(make_env, proxy, buffer,
                           num_env_groups=num_env_groups, group_size=group_size,
                           max_steps=max_env_steps,
-                          max_new_tokens=s.max_new_tokens)
+                          max_new_tokens=s.max_new_tokens,
+                          context_mode=s.agentic_context,
+                          max_context_tokens=s.max_seq_len - s.max_new_tokens)
     controller = AsyncController(buffer, [proxy], trainer.train_on_samples,
                                  trainer.get_weights,
                                  alpha=s.async_generation_ratio)

@@ -29,7 +29,8 @@ not apply to them.
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Tuple
+import heapq
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -131,6 +132,226 @@ class PagePool:
         tail_src = (int(block_pages[full]) if upto_token % self.page_size
                     else None)
         return shared, tail_src
+
+
+class _RadixNode:
+    """One fully-filled page of cached KV.  The node's *path* from the root
+    spells the token prefix the page's KV was computed under — KV at position
+    i depends on the whole token prefix [0, i], so content-addressing must
+    key on the path, which a radix tree gives for free."""
+
+    __slots__ = ("key", "page", "children", "parent", "last_used")
+
+    def __init__(self, key, page: int, parent, last_used: int):
+        self.key = key                       # tuple of page_size token ids
+        self.page = page                     # physical page holding the KV
+        self.children: Dict[tuple, "_RadixNode"] = {}
+        self.parent = parent
+        self.last_used = last_used
+
+
+class RadixCache:
+    """Automatic cross-prompt prefix cache over the refcounted ``PagePool``.
+
+    vLLM-style automatic prefix caching at page granularity: finished (or
+    aborted) requests insert their fully-filled pages into a radix tree
+    keyed on token content; a new request walks the tree to find the longest
+    cached page-aligned prefix and aliases those pages into its block table
+    (COW through the pool refcounts) instead of re-prefilling them.  The
+    cache holds exactly ONE reference per tree node — live requests stack
+    their own references on top, so any mix of finish/abort/retain/resume
+    composes, and a cached page is evictable precisely when its refcount
+    is 1 (only the cache holds it).
+
+    LRU eviction walks leaves first, cascading upward as children disappear.
+    A node is *freeable* iff only the cache holds its page (refcount 1) AND
+    its whole subtree is freeable — a refcount-1 interior node pinned by a
+    live descendant (possible via mid-prefill extension, which shares only
+    the continuation pages, not the path above them) can never become a
+    leaf, so it must not be promised to admission control.
+    ``evictable_pages`` counts exactly the set ``evict()`` can reach.
+    """
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self.page_size = pool.page_size
+        self.root = _RadixNode(key=None, page=-1, parent=None, last_used=0)
+        self._clock = 0
+        self.lookups = 0          # admission-time matches
+        self.hits = 0             # admission-time matches that returned pages
+        self.ext_hits = 0         # mid-prefill extensions that returned pages
+        self.hit_tokens = 0       # tokens skipped (admission + extension)
+        self.inserted_pages = 0
+        self.evicted_pages = 0
+        self.flushes = 0
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _page_key(self, tokens, i: int) -> tuple:
+        ps = self.page_size
+        return tuple(int(t) for t in tokens[i * ps:(i + 1) * ps])
+
+    # ------------------------------------------------------------- queries
+    def _walk(self, tokens) -> List[_RadixNode]:
+        """Longest cached path covering full pages of ``tokens`` (no side
+        effects beyond nothing; callers bump LRU stamps)."""
+        node, path = self.root, []
+        for i in range(len(tokens) // self.page_size):
+            child = node.children.get(self._page_key(tokens, i))
+            if child is None:
+                break
+            path.append(child)
+            node = child
+        return path
+
+    def peek(self, tokens) -> int:
+        """Number of cached full pages matching ``tokens`` (no refcounts)."""
+        return len(self._walk(tokens))
+
+    def match(self, tokens, from_page: int = 0, *,
+              extend: bool = False) -> List[int]:
+        """Pages ``[from_page, k)`` of the longest cached page-aligned
+        prefix of ``tokens`` (k = matched full pages).
+
+        Shares each returned page (the caller owns one new reference per
+        page — releasing them composes through the pool) and bumps the whole
+        matched path's LRU stamps.  ``from_page`` supports mid-prefill
+        extension: a request that already wrote pages [0, from_page) asks
+        only for the cached continuation.  Extension probes run once per
+        prefill chunk and mostly return nothing — with ``extend=True`` they
+        skip the lookup/hit counters (``ext_hits`` records the productive
+        ones) so hit-rate stats keep meaning one-admission-one-lookup."""
+        if not extend:
+            self.lookups += 1
+        path = self._walk(tokens)
+        stamp = self._tick()
+        for n in path:
+            n.last_used = stamp
+        pages = [n.page for n in path[from_page:]]
+        if pages:
+            if extend:
+                self.ext_hits += 1
+            else:
+                self.hits += 1
+            self.hit_tokens += len(pages) * self.page_size
+            self.pool.share(pages)
+        return pages
+
+    # ----------------------------------------------------------- mutation
+    def insert(self, tokens, pages: List[int]) -> int:
+        """Insert ``pages[i]`` (KV of ``tokens[i*ps:(i+1)*ps]`` computed
+        under the preceding prefix) for every fully-filled page.
+
+        The cache takes its OWN reference on each newly inserted page (the
+        caller keeps and later releases its reference as usual).  Pages whose
+        content is already cached are skipped — the caller's duplicate copy
+        is freed whenever the caller releases it.  Returns #new nodes."""
+        node = self.root
+        stamp = self._tick()
+        new = 0
+        for i, page in enumerate(pages):
+            key = self._page_key(tokens, i)
+            child = node.children.get(key)
+            if child is None:
+                child = _RadixNode(key=key, page=int(page), parent=node,
+                                   last_used=stamp)
+                node.children[key] = child
+                self.pool.share([int(page)])
+                self.inserted_pages += 1
+                new += 1
+            else:
+                child.last_used = stamp
+            node = child
+        return new
+
+    def evict(self, want_pages: int) -> int:
+        """Free up to ``want_pages`` pages by dropping LRU leaves whose page
+        only the cache still holds, cascading upward as parents become
+        childless.  One tree walk + a heap — not one walk per page freed.
+        Returns the number actually freed."""
+        heap: List[Tuple[int, int, _RadixNode]] = []
+        tie = 0
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            for c in n.children.values():
+                if c.children:
+                    stack.append(c)
+                elif self.pool.refcount(c.page) == 1:
+                    heap.append((c.last_used, tie, c))
+                    tie += 1
+        heapq.heapify(heap)
+        freed = 0
+        while freed < want_pages and heap:
+            _, _, leaf = heapq.heappop(heap)
+            parent = leaf.parent
+            del parent.children[leaf.key]
+            self.pool.release([leaf.page])
+            self.evicted_pages += 1
+            freed += 1
+            if (parent is not self.root and not parent.children
+                    and self.pool.refcount(parent.page) == 1):
+                heapq.heappush(heap, (parent.last_used, tie, parent))
+                tie += 1
+        return freed
+
+    def clear(self) -> None:
+        """Drop every cache hold (e.g. on a weight update: all cached KV was
+        computed under the old policy).  Pages still aliased by running
+        requests stay allocated until their holders release them."""
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            for c in n.children.values():
+                stack.append(c)
+                self.pool.release([c.page])
+        self.root.children = {}
+        self.flushes += 1
+
+    # ------------------------------------------------------------ counters
+    @property
+    def num_nodes(self) -> int:
+        count, stack = 0, [self.root]
+        while stack:
+            n = stack.pop()
+            count += len(n.children)
+            stack.extend(n.children.values())
+        return count
+
+    @property
+    def evictable_pages(self) -> int:
+        """Pages freeable by (cascading) leaf-first eviction: nodes whose
+        page only the cache holds AND whose entire subtree is likewise
+        cache-only (a pinned descendant keeps an ancestor from ever
+        becoming a leaf).  Exactly what ``evict()`` can deliver — admission
+        control must not be promised more, or ``pool.alloc`` would assert
+        instead of queueing the request."""
+        count = 0
+
+        def freeable(n: _RadixNode) -> bool:
+            nonlocal count
+            ok = all([freeable(c) for c in n.children.values()])
+            if n is self.root:
+                return ok
+            ok = ok and self.pool.refcount(n.page) == 1
+            if ok:
+                count += 1
+            return ok
+
+        freeable(self.root)
+        return count
+
+    def held_pages(self) -> List[int]:
+        """Every physical page the cache holds a reference on (audit)."""
+        pages, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            for c in n.children.values():
+                stack.append(c)
+                pages.append(c.page)
+        return pages
 
 
 def supports_paged(cfg: ModelConfig) -> bool:

@@ -28,6 +28,15 @@ This engine fixes all three pathologies:
   reclaimed; divergence after the fork only ever writes privately owned
   pages, so the Pallas ``paged_decode_attention`` kernel is unchanged —
   only block-table construction knows about sharing.
+* **Automatic cross-prompt prefix caching** — with ``prefix_cache=True`` a
+  radix tree (`repro.models.paged.RadixCache`) indexes every fully-filled
+  KV page of finished/aborted requests by token content; admission aliases
+  the longest cached page-aligned prefix into the new block table and
+  chunked prefill starts at the first uncached token.  A prefilling slot at
+  a page boundary also adopts pages a concurrent request just published, so
+  a shared system prompt prefills exactly once per batch.  LRU leaves evict
+  under page pressure (the cache never causes admission failure) and the
+  whole tree flushes on ``update_weights`` (cached KV is policy-dependent).
 * **Static shapes** — ``step()`` is a single jitted call (chunk + decode
   fused, ``lax.cond``-gated) whose shapes never depend on prompt length or
   fill level: exactly ONE executable serves every workload (TPU-friendly;
@@ -67,6 +76,16 @@ class _SlotState:
     carried_last: Optional[int] = None   # last sampled token of a resumed prefix
     followers: List[int] = dataclasses.field(default_factory=list)
     group_leader: Optional[int] = None   # follower pre-fork: leader's slot
+    # token content backing the slot's written KV region: positions
+    # [0, len(content_prefix)) hold content_prefix, sampled tokens append
+    # after it.  Equals ``prompt`` except for resumed-decode slots, whose
+    # written region already includes previously decoded tokens.
+    content_prefix: Optional[np.ndarray] = None
+    # weight epoch the slot's KV was (first) computed under: pages are only
+    # published to the prefix cache while this matches the engine's current
+    # epoch — a post-weight-sync abort must not repopulate the flushed
+    # cache with old-policy KV.
+    epoch: int = 0
 
 
 @dataclasses.dataclass
@@ -78,6 +97,11 @@ class _Retained:
     prefill_done: int
     length: int                          # KV positions written (pos value)
     last_token: int
+    # full token content of the written region (plus the pending last token
+    # for decode-phase records): lets the prefix cache index these pages
+    # if the record is released instead of resumed.
+    content: Optional[np.ndarray] = None
+    epoch: int = 0                       # weight epoch the KV was computed under
 
 
 class PagedDecodeEngine:
@@ -95,7 +119,8 @@ class PagedDecodeEngine:
                  max_total_len: int = 128, page_size: int = 16,
                  prefill_chunk: int = 16, num_pages: Optional[int] = None,
                  eos_id: int = 2, temperature: float = 1.0, top_k: int = 0,
-                 pad_id: int = 0, seed: int = 0, attn_impl: str = "ref"):
+                 pad_id: int = 0, seed: int = 0, attn_impl: str = "ref",
+                 prefix_cache: bool = False):
         cfg = api.cfg
         if api.init_paged_cache is None:
             raise ValueError(f"family {cfg.family} has no paged-KV support "
@@ -126,6 +151,11 @@ class PagedDecodeEngine:
         self.cur_token = jnp.full((num_slots,), pad_id, jnp.int32)
         self.pos = jnp.zeros((num_slots,), jnp.int32)
         self.pool = paged.PagePool(num_pages, page_size)
+        # automatic cross-prompt prefix caching (radix tree over page
+        # contents); None = disabled, every page frees on release.
+        self.prefix_cache: Optional[paged.RadixCache] = \
+            paged.RadixCache(self.pool) if prefix_cache else None
+        self._weight_epoch = 0
         self._slot_pages: Dict[int, List[int]] = {}
         self.slots: Dict[int, _SlotState] = {}
         self.req_to_slot: Dict[int, int] = {}
@@ -210,16 +240,72 @@ class PagedDecodeEngine:
     def active_request_ids(self) -> List[int]:
         return list(self.req_to_slot)
 
+    # ------------------------------------------------- prefix-cache counters
+    @property
+    def cache_lookups(self) -> int:
+        return self.prefix_cache.lookups if self.prefix_cache else 0
+
+    @property
+    def cache_hits(self) -> int:
+        return self.prefix_cache.hits if self.prefix_cache else 0
+
+    @property
+    def cache_ext_hits(self) -> int:
+        """Productive mid-prefill extensions (concurrent-preamble pickups)."""
+        return self.prefix_cache.ext_hits if self.prefix_cache else 0
+
+    @property
+    def cache_hit_tokens(self) -> int:
+        """Prefill tokens skipped by aliasing cached prefix pages."""
+        return self.prefix_cache.hit_tokens if self.prefix_cache else 0
+
+    @property
+    def cache_evicted_pages(self) -> int:
+        return self.prefix_cache.evicted_pages if self.prefix_cache else 0
+
+    @property
+    def cache_pages_held(self) -> int:
+        return len(self.prefix_cache.held_pages()) if self.prefix_cache else 0
+
     def update_weights(self, params) -> None:
         self.params = params
+        # bump the epoch even with the cache off: slot/retained records
+        # stamped with an older epoch must never publish their (now
+        # stale-policy) KV if the cache is enabled later.
+        self._weight_epoch += 1
+        if self.prefix_cache is not None:
+            # every cached page was computed under the old policy: new
+            # admissions must not alias stale KV.  Running requests keep
+            # their own references (existing retain/resume semantics), and
+            # the epoch stamp keeps their later release/abort/finish from
+            # re-inserting old-policy pages into the flushed tree.
+            self.prefix_cache.clear()
 
     def _pages_needed(self, total_len: int) -> int:
         return -(-total_len // self.page_size)
 
+    def _can_cover(self, n: int) -> bool:
+        """Whether ``n`` pages can be produced right now: free pages first,
+        cache-evictable holds as the fallback — the cache must never cause
+        an admission failure.  The free-page check short-circuits so the
+        evictability tree walk only runs under actual page pressure."""
+        if n <= self.pool.pages_free:
+            return True
+        if self.prefix_cache is None:
+            return False
+        return n <= self.pool.pages_free + self.prefix_cache.evictable_pages
+
+    def _alloc(self, n: int) -> List[int]:
+        """Pool alloc that evicts LRU cache leaves when free pages run dry."""
+        short = n - self.pool.pages_free
+        if short > 0 and self.prefix_cache is not None:
+            self.prefix_cache.evict(short)
+        return self.pool.alloc(n)
+
     def can_admit(self, prompt_len: int, max_new_tokens: int) -> bool:
-        return (self.num_free_slots > 0
-                and self._pages_needed(prompt_len + max_new_tokens)
-                <= self.pool.pages_free)
+        if self.num_free_slots <= 0:
+            return False
+        return self._can_cover(self._pages_needed(prompt_len + max_new_tokens))
 
     def _set_table_row(self, slot: int, pages: List[int]) -> None:
         row = np.full((self.pages_per_seq,), -1, np.int32)
@@ -236,12 +322,23 @@ class PagedDecodeEngine:
         plen = len(prompt)
         assert plen + max_new_tokens <= self.max_total_len, "sequence budget"
         slot = self._free_slot_id()
-        pages = self.pool.alloc(self._pages_needed(plen + max_new_tokens))
+        # automatic prefix caching: alias the longest cached page-aligned
+        # prefix into the block table and start chunked prefill at the first
+        # uncached token.  The match is capped at plen-1 tokens — the final
+        # prompt token must always prefill to produce first-sample logits.
+        cached: List[int] = []
+        if self.prefix_cache is not None and plen > 1:
+            cached = self.prefix_cache.match(prompt[:plen - 1])
+        pages = cached + self._alloc(
+            self._pages_needed(plen + max_new_tokens) - len(cached))
         self._set_table_row(slot, pages)
         self._slot_pages[slot] = pages
         self.slots[slot] = _SlotState(request_id=request_id, prompt=prompt,
                                       tokens=[], logprobs=[],
-                                      remaining=max_new_tokens)
+                                      remaining=max_new_tokens,
+                                      prefill_done=len(cached) * self.page_size,
+                                      content_prefix=prompt,
+                                      epoch=self._weight_epoch)
         self.req_to_slot[request_id] = slot
 
     # -------------------------------------------------- group (COW) submit
@@ -256,7 +353,7 @@ class PagedDecodeEngine:
                         max_new_tokens: int) -> bool:
         full, priv = self._group_page_plan(prompt_len, max_new_tokens)
         return (self.num_free_slots >= group_size
-                and full + group_size * priv <= self.pool.pages_free)
+                and self._can_cover(full + group_size * priv))
 
     def group_fits_pool(self, prompt_len: int, group_size: int,
                         max_new_tokens: int) -> bool:
@@ -285,23 +382,32 @@ class PagedDecodeEngine:
         assert plen + max_new_tokens <= self.max_total_len, "sequence budget"
         assert self.num_free_slots >= g, "not enough free slots for group"
         full, priv = self._group_page_plan(plen, max_new_tokens)
-        assert full + g * priv <= self.pool.pages_free, "page pool exhausted"
+        assert self._can_cover(full + g * priv), "page pool exhausted"
 
         leader = self._free_slot_id()
-        pages = self.pool.alloc(full + priv)
+        # the leader's prefill rides the cross-prompt prefix cache just like
+        # a single request (matched pages never reach the tail page, so the
+        # COW fork below is untouched).
+        cached: List[int] = []
+        if self.prefix_cache is not None and plen > 1:
+            cached = self.prefix_cache.match(prompt[:plen - 1])
+        pages = cached + self._alloc(full + priv - len(cached))
         self._set_table_row(leader, pages)
         self._slot_pages[leader] = pages
         lst = _SlotState(request_id=request_ids[0], prompt=prompt,
-                         tokens=[], logprobs=[], remaining=max_new_tokens)
+                         tokens=[], logprobs=[], remaining=max_new_tokens,
+                         prefill_done=len(cached) * self.page_size,
+                         content_prefix=prompt, epoch=self._weight_epoch)
         self.slots[leader] = lst
         self.req_to_slot[request_ids[0]] = leader
 
         for rid in request_ids[1:]:
             slot = self._free_slot_id()
-            self._slot_pages[slot] = self.pool.alloc(priv)
+            self._slot_pages[slot] = self._alloc(priv)
             self.slots[slot] = _SlotState(
                 request_id=rid, prompt=prompt, tokens=[], logprobs=[],
-                remaining=max_new_tokens, phase=_FORKWAIT, group_leader=leader)
+                remaining=max_new_tokens, phase=_FORKWAIT, group_leader=leader,
+                content_prefix=prompt, epoch=self._weight_epoch)
             self.req_to_slot[rid] = slot
             lst.followers.append(slot)
 
@@ -366,6 +472,36 @@ class PagedDecodeEngine:
         for f in nst.followers:
             self.slots[f].group_leader = new_leader
 
+    # ------------------------------------------ content-addressed release
+    def _written_content(self, st: _SlotState, slot: int):
+        """(token content, written length) of the slot's written KV region.
+
+        Decode phase: ``content_prefix`` + sampled tokens, of which the
+        final sampled token's KV is not yet written (written == pos).
+        Prefill phase: the prompt up to ``prefill_done``."""
+        if st.phase == _DECODE:
+            content = np.concatenate(
+                [st.content_prefix, np.asarray(st.tokens, np.int32)])
+            return content, int(self.pos[slot])
+        if st.phase == _PREFILL:
+            return st.content_prefix, st.prefill_done
+        return st.content_prefix, 0          # forkwait: nothing written yet
+
+    def _release_pages(self, pages: List[int], content, written: int,
+                       epoch: int) -> None:
+        """Release a request's pages — but first index every fully-written
+        page in the prefix cache (the cache takes its own reference, so the
+        KV survives this release for future cross-prompt hits).  Pages whose
+        KV predates the current weight epoch are NOT published: a
+        post-weight-sync abort must not repopulate the flushed cache with
+        old-policy KV."""
+        if (self.prefix_cache is not None and written >= self.page_size
+                and epoch == self._weight_epoch):
+            full = written // self.page_size
+            self.prefix_cache.insert(content[:full * self.page_size],
+                                     pages[:full])
+        self.pool.release(pages)
+
     # --------------------------------------------------- retain / resume
     def abort(self, request_id: int, *, retain: bool = False) -> GenerationResult:
         slot = self.req_to_slot.pop(request_id)
@@ -388,13 +524,16 @@ class PagedDecodeEngine:
             self._promote_follower(st, pages)
             retain = False
         elif retain:
+            content, length = self._written_content(st, slot)
             self.retained[request_id] = _Retained(
                 pages=pages, phase=st.phase, prompt=st.prompt,
                 prefill_done=st.prefill_done,
-                length=int(self.pos[slot]) if st.phase == _DECODE else 0,
-                last_token=int(self.cur_token[slot]))
+                length=length if st.phase == _DECODE else 0,
+                last_token=int(self.cur_token[slot]), content=content,
+                epoch=st.epoch)
         else:
-            self.pool.release(pages)
+            content, written = self._written_content(st, slot)
+            self._release_pages(pages, content, written, st.epoch)
         return GenerationResult(
             request_id=request_id, task=None,
             tokens=np.asarray(st.tokens, np.int32),
@@ -410,7 +549,7 @@ class PagedDecodeEngine:
         if ret is None or self.num_free_slots == 0:
             return False
         extra = self._resume_pages_needed(ret, max_new_tokens) - len(ret.pages)
-        return extra <= self.pool.pages_free
+        return extra <= 0 or self._can_cover(extra)
 
     def resume_request(self, request_id: int, new_request_id: int,
                        max_new_tokens: int) -> None:
@@ -429,14 +568,17 @@ class PagedDecodeEngine:
         pages = ret.pages
         need = self._resume_pages_needed(ret, max_new_tokens)
         if need > len(pages):
-            pages = pages + self.pool.alloc(need - len(pages))
+            pages = pages + self._alloc(need - len(pages))
         self._set_table_row(slot, pages)
         self._slot_pages[slot] = pages
         st = _SlotState(request_id=new_request_id, prompt=ret.prompt,
                         tokens=[], logprobs=[], remaining=max_new_tokens,
                         phase=ret.phase, prefill_done=ret.prefill_done,
                         carried_last=(ret.last_token if ret.phase == _DECODE
-                                      else None))
+                                      else None),
+                        content_prefix=(ret.content if ret.content is not None
+                                        else ret.prompt),
+                        epoch=ret.epoch)
         self.slots[slot] = st
         self.req_to_slot[new_request_id] = slot
         if ret.phase == _DECODE:
@@ -446,19 +588,25 @@ class PagedDecodeEngine:
     def release_retained(self, request_id: int) -> None:
         ret = self.retained.pop(request_id, None)
         if ret is not None:
-            self.pool.release(ret.pages)
+            written = ret.length if ret.phase == _DECODE else ret.prefill_done
+            content = ret.content if ret.content is not None else ret.prompt
+            self._release_pages(ret.pages, content, written, ret.epoch)
 
     # ------------------------------------------------------------ auditing
     def audit_pages(self) -> None:
         """Assert the refcount invariant: every page's refcount equals its
-        number of appearances across live block tables and retained records,
-        and a page is free exactly when its refcount is zero."""
+        number of appearances across live block tables, retained records and
+        prefix-cache holds, and a page is free exactly when its refcount is
+        zero."""
         expect = np.zeros((self.num_pages,), np.int64)
         for pages in self._slot_pages.values():
             for p in pages:
                 expect[p] += 1
         for ret in self.retained.values():
             for p in ret.pages:
+                expect[p] += 1
+        if self.prefix_cache is not None:
+            for p in self.prefix_cache.held_pages():
                 expect[p] += 1
         actual = np.asarray([self.pool.refcount(p)
                              for p in range(self.num_pages)], np.int64)
@@ -504,6 +652,8 @@ class PagedDecodeEngine:
             chunk_slot = prefill_slots[self._rr % len(prefill_slots)]
             self._rr += 1
             st = self.slots[chunk_slot]
+            if self.prefix_cache is not None:
+                self._extend_cached_prefix(chunk_slot, st)
             start = st.prefill_done
             chunk = st.prompt[start:start + c]
             n_chunk = len(chunk)
@@ -529,6 +679,18 @@ class PagedDecodeEngine:
             st.prefill_done += n_chunk
             self.total_prefill_chunks += 1
             self.total_prefill_tokens += n_chunk
+            if (self.prefix_cache is not None
+                    and st.epoch == self._weight_epoch):
+                # publish freshly completed prompt pages immediately so
+                # CONCURRENT same-prefix requests pick them up mid-prefill
+                # (lazy extension above) — the shared preamble of a batch
+                # prefills exactly once even when everything is admitted
+                # together.
+                full = st.prefill_done // self.page_size
+                if full:
+                    self.prefix_cache.insert(
+                        st.prompt[:full * self.page_size],
+                        self._slot_pages[chunk_slot][:full])
             if st.prefill_done >= len(st.prompt):
                 t0, l0 = int(ptok[0]), float(plp[0])
                 st.phase = _DECODE
@@ -553,10 +715,35 @@ class PagedDecodeEngine:
                 self.total_tokens_decoded += 1
         return finished
 
+    def _extend_cached_prefix(self, slot: int, st: _SlotState) -> None:
+        """Mid-prefill cache extension: when a prefilling slot sits at a page
+        boundary and the cache meanwhile learned a longer prefix of its
+        prompt (e.g. a concurrent request prefilled the shared preamble
+        first), swap the slot's unwritten pages for the cached ones and jump
+        ``prefill_done`` forward.  The swapped-out pages were never written,
+        so this is pure block-table/refcount bookkeeping."""
+        if st.prefill_done % self.page_size:
+            return                       # mid-page: cannot swap whole pages
+        plen = len(st.prompt)
+        j = st.prefill_done // self.page_size
+        ext = self.prefix_cache.match(st.prompt[:plen - 1], from_page=j,
+                                      extend=True)
+        if not ext:
+            return
+        pages = self._slot_pages[slot]
+        k = j + len(ext)
+        swapped_out = pages[j:k]
+        pages[j:k] = ext
+        self.pool.release(swapped_out)
+        self._set_table_row(slot, pages)
+        st.prefill_done = k * self.page_size
+
     def _finish(self, slot: int) -> Tuple[int, np.ndarray, np.ndarray]:
         st = self.slots.pop(slot)
         self.req_to_slot.pop(st.request_id, None)
-        self.pool.release(self._slot_pages.pop(slot))
+        content, written = self._written_content(st, slot)
+        self._release_pages(self._slot_pages.pop(slot), content, written,
+                            st.epoch)
         self.block_tables = self.block_tables.at[slot].set(-1)
         return (st.request_id, np.asarray(st.tokens, np.int32),
                 np.asarray(st.logprobs, np.float32))

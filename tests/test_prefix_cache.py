@@ -1,0 +1,731 @@
+"""Automatic cross-prompt prefix caching (RadixCache) + rollout bugfixes.
+
+Load-bearing guarantees:
+
+* caching is an optimization, never a semantic change: greedy outputs are
+  byte-identical with the cache on vs off;
+* a preamble shared across distinct prompts prefills exactly ONCE — for
+  sequential AND for concurrent admission (mid-prefill extension);
+* the refcount invariant (``audit_pages``) holds across every interaction
+  of the cache with abort/retain/resume/group forks;
+* LRU eviction keeps the cache from ever causing admission failure;
+* regression coverage for the rollout-path bugfixes: per-epoch group uids,
+  budget-exhausted abort→resume, and graceful prompt-stream exhaustion in
+  ``collect_rollout``.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.llm_proxy import LLMProxy
+from repro.core.sample_buffer import SampleBuffer
+from repro.core.scheduler import RolloutProducer, collect_rollout
+from repro.core.types import GenerationResult, RolloutTask, next_uid
+from repro.models import get_api
+from repro.models.paged import PagePool, RadixCache
+from repro.rollout.paged_engine import PagedDecodeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny("qwen3-4b", vocab_size=32)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _drain(eng, want, max_steps=2000):
+    results = {}
+    for _ in range(max_steps):
+        for rid, toks, lps in eng.step():
+            results[rid] = (list(toks), list(lps))
+        if len(results) >= want:
+            return results
+    raise AssertionError(f"engine stalled: {len(results)}/{want} finished")
+
+
+def _engine(api, params, **kw):
+    base = dict(num_slots=4, max_total_len=64, page_size=8, prefill_chunk=8,
+                eos_id=99, temperature=0.0, prefix_cache=True)
+    base.update(kw)
+    return PagedDecodeEngine(api, params, **base)
+
+
+def _preamble_prompts(n=8, pre_len=24, sfx_len=8, seed=0):
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(1, 30, pre_len).astype(np.int32)
+    return [np.concatenate([pre, rng.integers(1, 30, sfx_len).astype(np.int32)])
+            for _ in range(n)]
+
+
+# ------------------------------------------------------------- radix unit
+def test_radix_match_insert_refcounts():
+    pool = PagePool(10, page_size=4)
+    cache = RadixCache(pool)
+    toks = np.arange(1, 13, dtype=np.int32)          # 3 full pages
+    pages = pool.alloc(3)
+    assert cache.insert(toks, pages) == 3
+    assert all(pool.refcount(p) == 2 for p in pages)  # owner + cache
+    pool.release(pages)                               # owner done
+    assert all(pool.refcount(p) == 1 for p in pages)
+    assert cache.held_pages() and pool.pages_free == 10 - 1 - 3
+
+    # full match (shares), partial match, miss
+    m = cache.match(toks)
+    assert m == pages and all(pool.refcount(p) == 2 for p in pages)
+    pool.release(m)
+    partial = np.concatenate([toks[:8], np.asarray([99, 98, 97, 96], np.int32)])
+    m2 = cache.match(partial)
+    assert m2 == pages[:2]
+    pool.release(m2)
+    assert cache.match(np.asarray([7, 7, 7, 7], np.int32)) == []
+    # sub-page prompts can never match
+    assert cache.match(toks[:3]) == []
+    assert cache.hit_tokens == 12 + 8
+
+    # dedupe: same content from a different physical copy is not re-inserted
+    dup = pool.alloc(3)
+    assert cache.insert(toks, dup) == 0
+    pool.release(dup)
+    assert pool.pages_free == 10 - 1 - 3
+
+
+def test_radix_match_from_page_extension():
+    pool = PagePool(10, page_size=4)
+    cache = RadixCache(pool)
+    toks = np.arange(1, 13, dtype=np.int32)
+    pages = pool.alloc(3)
+    cache.insert(toks, pages)
+    pool.release(pages)
+    ext = cache.match(toks, from_page=1)              # skip already-written page
+    assert ext == pages[1:]
+    pool.release(ext)
+    assert cache.match(toks, from_page=3) == []
+
+
+def test_radix_lru_eviction_order():
+    pool = PagePool(12, page_size=4)
+    cache = RadixCache(pool)
+    a = np.asarray([1, 1, 1, 1], np.int32)
+    b = np.asarray([2, 2, 2, 2], np.int32)
+    pa, pb = pool.alloc(1), pool.alloc(1)
+    cache.insert(a, pa)
+    cache.insert(b, pb)
+    pool.release(pa + pb)
+    pool.release(cache.match(a))                      # refresh A: B is now LRU
+    assert cache.evict(1) == 1
+    assert cache.match(b) == [] and cache.match(a) == pa  # B evicted, A kept
+    pool.release(pa)
+    # pinned pages (refcount > 1) are not evictable
+    held = cache.match(a)
+    assert cache.evictable_pages == 0 and cache.evict(1) == 0
+    pool.release(held)
+    assert cache.evictable_pages == 1
+
+
+# --------------------------------------------------- cross-prompt sharing
+def test_shared_preamble_prefills_once_sequential(setup):
+    """8 distinct prompts sharing a 24-token preamble, run back-to-back:
+    the preamble's pages are computed once and aliased 7 times."""
+    cfg, api, params = setup
+    prompts = _preamble_prompts()
+    eng = _engine(api, params)
+    outs = {}
+    for i, p in enumerate(prompts):
+        eng.add_request(i, p, 6)
+        outs.update(_drain(eng, 1))
+        eng.audit_pages()
+    assert eng.total_prefill_tokens == 32 + 7 * 8, "preamble must prefill once"
+    assert eng.cache_hit_tokens == 7 * 24
+    assert eng.cache_hits == 7 and eng.cache_lookups >= 8
+
+    off = _engine(api, params, num_slots=8, prefix_cache=False)
+    for i, p in enumerate(prompts):
+        off.add_request(i, p, 6)
+    outs_off = _drain(off, 8)
+    assert off.total_prefill_tokens == 8 * 32
+    for i in range(8):
+        assert outs[i][0] == outs_off[i][0], f"request {i} diverged"
+        np.testing.assert_array_equal(
+            np.asarray(outs[i][1], np.float32),
+            np.asarray(outs_off[i][1], np.float32))
+
+
+def test_shared_preamble_prefills_once_concurrent(setup):
+    """All 8 admitted together (no completions yet): mid-prefill extension
+    still collapses the shared preamble to a single prefill."""
+    cfg, api, params = setup
+    prompts = _preamble_prompts()
+    eng = _engine(api, params, num_slots=8)
+    for i, p in enumerate(prompts):
+        eng.add_request(i, p, 6)
+    outs = _drain(eng, 8)
+    eng.audit_pages()
+    assert eng.total_prefill_tokens == 32 + 7 * 8
+    off = _engine(api, params, num_slots=8, prefix_cache=False)
+    for i, p in enumerate(prompts):
+        off.add_request(i, p, 6)
+    outs_off = _drain(off, 8)
+    for i in range(8):
+        assert outs[i][0] == outs_off[i][0], f"request {i} diverged"
+
+
+def test_partial_page_boundary_match(setup):
+    """A 20-token shared preamble (2.5 pages) only matches its 2 full pages;
+    an exact-duplicate prompt matches all but the final token's page."""
+    cfg, api, params = setup
+    rng = np.random.default_rng(7)
+    pre = rng.integers(1, 30, 20).astype(np.int32)
+    p1 = np.concatenate([pre, rng.integers(1, 30, 12).astype(np.int32)])
+    p2 = np.concatenate([pre, rng.integers(1, 30, 12).astype(np.int32)])
+    eng = _engine(api, params)
+    eng.add_request(0, p1, 4)
+    _drain(eng, 1)
+    eng.add_request(1, p2, 4)
+    _drain(eng, 1)
+    assert eng.cache_hit_tokens == 16          # 2 full pages, not 20 tokens
+    eng.add_request(2, p1.copy(), 4)           # identical prompt (32 tokens)
+    _drain(eng, 1)
+    # matches 3 of 4 pages: the page holding the final token must prefill
+    assert eng.cache_hit_tokens == 16 + 24
+    eng.audit_pages()
+
+
+def test_cache_survives_group_fork_abort_resume(setup):
+    """COW group forks + abort-with-retain + resume compose with the cache:
+    outputs stay byte-identical and the refcount audit holds throughout."""
+    cfg, api, params = setup
+    prompt = np.asarray([3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5], np.int32)
+    g, budget = 3, 10
+
+    ref = _engine(api, params, prefix_cache=False)
+    ref.submit_group([0, 1, 2], prompt, budget)
+    base = _drain(ref, g)
+
+    eng = _engine(api, params)
+    eng.submit_group([0, 1, 2], prompt, budget)
+    for _ in range(5):
+        eng.step()
+    partial = eng.abort(1, retain=True)
+    assert partial.resumable
+    eng.audit_pages()
+    rest = _drain(eng, 2)
+    eng.audit_pages()
+    for rid in (0, 2):
+        assert rest[rid][0] == base[rid][0]
+    eng.resume_request(1, 11, budget - len(partial.tokens))
+    got = _drain(eng, 1)[11]
+    assert list(partial.tokens) + got[0] == base[1][0]
+    eng.audit_pages()
+    # a second group of the same prompt now rides the cache
+    before = eng.total_prefill_tokens
+    eng.submit_group([20, 21, 22], prompt, budget)
+    again = _drain(eng, 3)
+    assert eng.total_prefill_tokens - before == 3, \
+        "cached group must prefill only the final partial page"
+    for i, rid in enumerate((20, 21, 22)):
+        assert again[rid][0] == base[i][0]
+    eng.audit_pages()
+
+
+def test_release_retained_feeds_cache(setup):
+    cfg, api, params = setup
+    prompt = np.arange(1, 18, dtype=np.int32)
+    eng = _engine(api, params)
+    eng.add_request(0, prompt, 10)
+    for _ in range(12):                  # 3 prefill chunks + 9 decode steps
+        eng.step()
+    r = eng.abort(0, retain=True)
+    assert r.resumable and len(r.tokens) >= 8
+    held = eng.cache_pages_held
+    eng.release_retained(0)
+    eng.audit_pages()
+    assert eng.cache_pages_held > held, \
+        "retained decode-region pages must enter the cache"
+    assert not eng.retained
+    # the decoded prefix is now a hit for a prompt that extends it (the
+    # agentic pattern: next turn's prompt = conversation + previous action)
+    ext = np.concatenate([prompt, np.asarray(r.tokens[:8], np.int32)])
+    eng.add_request(1, ext, 4)
+    assert eng.slots[eng.req_to_slot[1]].prefill_done == 24
+    _drain(eng, 1)
+    eng.audit_pages()
+
+
+def test_lru_eviction_prevents_admission_failure(setup):
+    """A pool sized for 2 in-flight requests accumulates cache holds; the
+    4th admission must evict LRU leaves rather than fail."""
+    cfg, api, params = setup
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, 30, 16).astype(np.int32) for _ in range(4)]
+    eng = _engine(api, params, num_slots=2, max_total_len=32, num_pages=8)
+    for i, p in enumerate(prompts):               # 3 pages each, 7 usable
+        assert eng.can_admit(16, 8), f"admission {i} must not fail"
+        eng.add_request(i, p, 8)
+        _drain(eng, 1)
+        eng.audit_pages()
+    assert eng.cache_evicted_pages > 0, "pressure must trigger LRU eviction"
+    assert eng.pool.pages_free + eng.cache_pages_held == eng.num_pages - 1
+
+
+def test_radix_interior_pin_not_promised_to_admission():
+    """A mid-prefill extender shares only the continuation pages, pinning a
+    descendant while the refcount-1 ancestors stay interior — leaf-first
+    eviction cannot reach them, so evictable_pages must not count them
+    (or can_admit would over-promise and pool.alloc would assert)."""
+    pool = PagePool(10, page_size=4)
+    cache = RadixCache(pool)
+    toks = np.arange(1, 13, dtype=np.int32)           # path A -> B -> C
+    pages = pool.alloc(3)
+    cache.insert(toks, pages)
+    pool.release(pages)
+    assert cache.evictable_pages == 3
+    held = cache.match(toks, from_page=2, extend=True)  # pin C only
+    assert held == pages[2:]
+    assert cache.evictable_pages == 0, \
+        "pinned leaf blocks its whole ancestor path from cascading eviction"
+    assert cache.evict(3) == 0
+    pool.release(held)
+    assert cache.evictable_pages == 3 and cache.evict(3) == 3
+
+
+def test_concurrent_extension_counts_ext_hits(setup):
+    cfg, api, params = setup
+    prompts = _preamble_prompts(n=4)
+    eng = _engine(api, params, num_slots=4)
+    for i, p in enumerate(prompts):
+        eng.add_request(i, p, 4)
+    _drain(eng, 4)
+    # admitted together: nothing cached at admission time, so the sharing
+    # happened via mid-prefill extension — recorded separately from hits
+    assert eng.cache_hits == 0 and eng.cache_ext_hits >= 3
+    assert eng.cache_hit_tokens == 3 * 24
+
+
+def test_stale_pages_not_republished_after_weight_update(setup):
+    """Abort/finish/release of a request whose KV predates the last weight
+    sync must NOT repopulate the flushed cache with old-policy pages (the
+    async controller aborts stale requests right after update_weights)."""
+    cfg, api, params = setup
+    prompt = np.arange(1, 25, dtype=np.int32)
+    eng = _engine(api, params)
+    # in-flight under old weights: partially prefilled + retained records
+    eng.add_request(0, prompt, 6)
+    eng.add_request(1, prompt, 6)
+    for _ in range(4):
+        eng.step()
+    r1 = eng.abort(1, retain=True)
+    assert r1.resumable
+    eng.update_weights(params)                 # flush + epoch bump
+    assert eng.cache_pages_held == 0
+    eng.step()                                 # request 0 keeps prefilling
+    assert eng.cache_pages_held == 0, \
+        "old-epoch slot must not publish mid-prefill pages"
+    _drain(eng, 1)                             # request 0 finishes
+    assert eng.cache_pages_held == 0, \
+        "old-epoch finish must not re-insert stale KV"
+    eng.release_retained(1)
+    assert eng.cache_pages_held == 0, \
+        "old-epoch retained release must not re-insert stale KV"
+    eng.audit_pages()
+    assert eng.pool.pages_free == eng.num_pages - 1
+    # a fresh post-sync request publishes again
+    eng.add_request(2, prompt, 6)
+    _drain(eng, 1)
+    assert eng.cache_pages_held > 0
+    eng.audit_pages()
+
+
+def test_can_resume_uses_evictable_pages(setup):
+    """A resume needing extra pages must count cache-evictable pages as
+    available — gating on raw pages_free would park the resume forever
+    while the cache sits on every free page."""
+    cfg, api, params = setup
+    eng = _engine(api, params, num_slots=2, max_total_len=64, num_pages=10)
+    rng = np.random.default_rng(9)
+    eng.add_request(0, rng.integers(1, 30, 32).astype(np.int32), 8)
+    _drain(eng, 1)                              # cache now holds 4 pages
+    eng.add_request(1, rng.integers(1, 30, 8).astype(np.int32), 8)
+    for _ in range(3):
+        eng.step()
+    r = eng.abort(1, retain=True)
+    assert r.resumable
+    ret = eng.retained[1]
+    extra = eng._resume_pages_needed(ret, 40) - len(ret.pages)
+    assert extra > eng.pool.pages_free, "test needs genuine page pressure"
+    assert eng.can_resume(1, 40), "evictable cache pages must count"
+    eng.resume_request(1, 11, 40)
+    assert eng.cache_evicted_pages > 0
+    eng.audit_pages()
+    _drain(eng, 1)
+    eng.audit_pages()
+
+
+def test_weight_update_flushes_cache(setup):
+    cfg, api, params = setup
+    prompt = np.arange(1, 25, dtype=np.int32)
+    eng = _engine(api, params)
+    eng.add_request(0, prompt, 4)
+    _drain(eng, 1)
+    assert eng.cache_pages_held > 0
+    eng.update_weights(params)
+    assert eng.cache_pages_held == 0
+    assert eng.pool.pages_free == eng.num_pages - 1
+    eng.audit_pages()
+    eng.add_request(1, prompt, 4)
+    assert eng.slots[eng.req_to_slot[1]].prefill_done == 0, \
+        "post-update admission must not alias stale KV"
+    _drain(eng, 1)
+
+
+def test_proxy_cache_stats(setup):
+    cfg, api, params = setup
+    eng = _engine(api, params)
+    proxy = LLMProxy(eng)
+    s = proxy.cache_stats
+    assert s == {"lookups": 0, "hits": 0, "misses": 0, "extension_hits": 0,
+                 "hit_tokens": 0, "evicted_pages": 0, "pages_held": 0}
+    prompts = _preamble_prompts(n=2)
+    eng.add_request(0, prompts[0], 4)
+    _drain(eng, 1)
+    eng.add_request(1, prompts[1], 4)
+    _drain(eng, 1)
+    s = proxy.cache_stats
+    assert s["hits"] == 1 and s["hit_tokens"] == 24
+    assert s["lookups"] == 2, \
+        "one lookup per admission; extension probes must not inflate stats"
+    assert s["misses"] == 1
+    assert proxy.cache_hit_tokens == 24
+
+
+def test_pipeline_prefix_cache_setting(setup):
+    from repro.launch.pipeline import PipelineSettings, make_rollout_engine
+    from repro.rollout.engine import DecodeEngine
+    cfg, api, params = setup
+    eng = make_rollout_engine(api, params, PipelineSettings())
+    assert eng.prefix_cache is not None            # auto -> on for paged
+    eng = make_rollout_engine(api, params, PipelineSettings(prefix_cache="off"))
+    assert eng.prefix_cache is None
+    # slot engine: the setting passes through as a no-op
+    eng = make_rollout_engine(api, params, PipelineSettings(
+        rollout_engine="slot", prefix_cache="on"))
+    assert isinstance(eng, DecodeEngine)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        make_rollout_engine(api, params,
+                            PipelineSettings(prefix_cache="bogus"))
+
+
+def test_multi_turn_incremental_prefill(setup):
+    """The agentic pattern: each turn resubmits the growing conversation.
+    With the cache, turn t only prefills the new suffix."""
+    cfg, api, params = setup
+    rng = np.random.default_rng(11)
+    eng = _engine(api, params, num_slots=2, max_total_len=64)
+    convo = rng.integers(1, 30, 9).astype(np.int32)
+    total_uncached = 0
+    for turn in range(3):
+        eng.add_request(turn, convo, 4)
+        out = _drain(eng, 1)[turn]
+        eng.audit_pages()
+        total_uncached += len(convo)
+        obs = rng.integers(1, 30, 5).astype(np.int32)
+        convo = np.concatenate([convo, np.asarray(out[0], np.int32), obs])
+    assert eng.total_prefill_tokens < total_uncached, \
+        "each turn must re-prefill only the uncached tail"
+    assert eng.cache_hit_tokens >= 16
+
+
+# ----------------------------------------------- rollout-path regressions
+class _RecordingProxy:
+    def __init__(self):
+        self.groups, self.singles, self.resumed, self.released = [], [], [], []
+
+    def generate_group(self, tasks, version, cb):
+        self.groups.append(list(tasks))
+
+    def generate(self, task, version, cb):
+        self.singles.append(task)
+
+    def generate_resumed(self, task, version, cb, resume_from):
+        self.resumed.append((task, resume_from))
+
+    def release_retained(self, request_id):
+        self.released.append(request_id)
+
+
+def test_producer_fresh_group_uid_per_epoch():
+    """A prompt repeated across epochs must get a FRESH group uid — with
+    group_id=pid the second epoch's group collides with the first."""
+    p = np.asarray([1, 2], np.int32)
+    stream = iter([(0, p)] * 4 + [(1, p)] * 4 + [(0, p)] * 4)  # epoch 2 of pid 0
+    buf = SampleBuffer(batch_size=32, alpha=0)
+    proxy = _RecordingProxy()
+    prod = RolloutProducer(proxy, buf, stream, group_size=4, max_new_tokens=4,
+                           reward_fn=lambda s: 1.0)
+    for _ in range(3):
+        prod._produce_group()
+    gids = [[t.group_id for t in g] for g in proxy.groups]
+    assert len(gids) == 3
+    assert all(len(set(g)) == 1 for g in gids), "one uid per group"
+    assert len({g[0] for g in gids}) == 3, \
+        "repeated prompt must not reuse its earlier group uid"
+    assert all(g[0] != t.prompt_id for g, grp in zip(gids, proxy.groups)
+               for t in grp), "group uid must not be the prompt id"
+
+
+def test_producer_partial_flush_keeps_one_uid():
+    """A capacity pinch splits a group across submissions; both halves must
+    carry the SAME uid so downstream assembly reunites them."""
+    p = np.asarray([1, 2], np.int32)
+    stream = iter([(0, p)] * 4 + [(1, p)] * 4)
+    buf = SampleBuffer(batch_size=3, alpha=0)       # capacity 3 < group_size
+    proxy = _RecordingProxy()
+    prod = RolloutProducer(proxy, buf, stream, group_size=4, max_new_tokens=4,
+                           reward_fn=lambda s: 1.0)
+    prod._produce_group()                           # pinch: 3 of 4 replicas
+    buf.reclaim(3)
+    prod._produce_group()                           # 4th replica, B held back
+    buf.reclaim(1)
+    prod._produce_group()                           # held B seeds new group
+    gid_a = proxy.groups[0][0].group_id
+    assert proxy.singles[0].group_id == gid_a, \
+        "partial-flush remainder must keep the group uid"
+    assert proxy.groups[1][0].group_id != gid_a
+
+
+def _abort_result(task, tokens, request_id=500, resumable=True):
+    return GenerationResult(
+        request_id=request_id, task=task,
+        tokens=np.asarray(tokens, np.int32),
+        logprobs=np.zeros((len(tokens),), np.float32),
+        version_started=0, aborted=True, partial=True, resumable=resumable)
+
+
+def test_budget_exhausted_abort_finishes_instead_of_resuming():
+    """An abort arriving with the generation budget fully spent must publish
+    the sample (clamped) and release the retained pages — resuming would
+    decode >= 1 extra token per cycle."""
+    buf = SampleBuffer(batch_size=4, alpha=0)
+    proxy = _RecordingProxy()
+    prod = RolloutProducer(proxy, buf, iter([]), group_size=1,
+                           max_new_tokens=4, reward_fn=lambda s: 1.0)
+    buf.begin_generation()
+    task = RolloutTask(task_id=next_uid(), prompt_id=0, replica_idx=0,
+                       prompt_tokens=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=4, group_id=7)
+    prod._on_result(_abort_result(task, [5, 6, 7, 8]))    # budget spent
+    assert not proxy.resumed and not proxy.singles, "must not resume"
+    assert proxy.released == [500], "retained pages must be freed"
+    batch = buf.get_batch(1, block=False)
+    assert list(batch[0].response_tokens) == [5, 6, 7, 8]
+    assert len(batch[0].logprobs) == 4
+
+
+def test_budget_exhausted_multi_leg_resume_clamps():
+    """Second leg: 3 tokens already resumed + 2 more decoded overruns the
+    4-token budget — finish and clamp to exactly max_new_tokens."""
+    buf = SampleBuffer(batch_size=4, alpha=0)
+    proxy = _RecordingProxy()
+    prod = RolloutProducer(proxy, buf, iter([]), group_size=1,
+                           max_new_tokens=4, reward_fn=lambda s: 1.0)
+    buf.begin_generation()
+    task = RolloutTask(
+        task_id=next_uid(), prompt_id=0, replica_idx=0,
+        prompt_tokens=np.asarray([1, 2, 3], np.int32),
+        max_new_tokens=1, group_id=7,
+        meta={"orig_prompt_len": 3, "orig_max_new_tokens": 4,
+              "resumed_tokens": np.asarray([5, 6, 7], np.int32),
+              "resumed_logprobs": np.zeros((3,), np.float32)})
+    prod._on_result(_abort_result(task, [8, 9]))
+    assert not proxy.resumed
+    batch = buf.get_batch(1, block=False)
+    assert list(batch[0].response_tokens) == [5, 6, 7, 8]
+    assert len(batch[0].logprobs) == 4
+
+
+def test_partial_budget_abort_still_resumes_with_exact_remainder():
+    buf = SampleBuffer(batch_size=4, alpha=0)
+    proxy = _RecordingProxy()
+    prod = RolloutProducer(proxy, buf, iter([]), group_size=1,
+                           max_new_tokens=6, reward_fn=lambda s: 1.0)
+    buf.begin_generation()
+    task = RolloutTask(task_id=next_uid(), prompt_id=0, replica_idx=0,
+                       prompt_tokens=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=6, group_id=7)
+    prod._on_result(_abort_result(task, [5, 6]))
+    (resumed, resume_from), = proxy.resumed
+    assert resume_from == 500
+    assert resumed.max_new_tokens == 4, "remainder, never max(1, ...) padding"
+    assert resumed.meta["orig_max_new_tokens"] == 6
+    assert list(resumed.meta["resumed_tokens"]) == [5, 6]
+
+
+def test_collect_rollout_stream_exhaustion_returns_partial(setup):
+    """All groups filtered + stream exhausted: collect_rollout returns the
+    partial result promptly instead of raising StopIteration or spinning
+    until the timeout."""
+    cfg, api, params = setup
+    eng = _engine(api, params, num_slots=8, max_total_len=32)
+    proxy = LLMProxy(eng).start()
+    rng = np.random.default_rng(5)
+    stream = iter([(i, rng.integers(1, 30, 6).astype(np.int32))
+                   for i in range(3)])
+    t0 = time.monotonic()
+    out = collect_rollout(proxy, stream, num_groups=2, group_size=2,
+                          max_new_tokens=4, reward_fn=lambda s: 1.0,
+                          filter_fn=lambda g: False, timeout=120)
+    elapsed = time.monotonic() - t0
+    proxy.stop()
+    assert out == []
+    assert elapsed < 60, "exhaustion must break out, not run to timeout"
+
+
+def test_collect_rollout_aborts_only_running_tasks(setup):
+    """The cleanup loop must not ABORT task ids that already completed."""
+    cfg, api, params = setup
+    eng = _engine(api, params, num_slots=8, max_total_len=32)
+    proxy = LLMProxy(eng).start()
+    aborted_ids = []
+    real_abort = proxy.abort
+
+    def spy_abort(request_id, retain=False):
+        aborted_ids.append(request_id)
+        return real_abort(request_id, retain=retain)
+
+    proxy.abort = spy_abort
+    rng = np.random.default_rng(6)
+    stream = iter([(i, rng.integers(1, 30, 6).astype(np.int32))
+                   for i in range(8)])
+    out = collect_rollout(proxy, stream, num_groups=2, group_size=2,
+                          max_new_tokens=4,
+                          reward_fn=lambda s: float(s.response_tokens[0] % 2),
+                          timeout=120)
+    proxy.stop()
+    assert len(out) == 4
+    # with no extra running prompts and no filtering, nothing is running at
+    # the end — the old code aborted every submitted (completed) id.
+    assert aborted_ids == []
+
+
+def test_env_manager_full_context_mode(setup):
+    """context_mode='full' resubmits the growing conversation; the prefix
+    cache turns the repeated history into cache hits."""
+    from repro.core.env_manager import EnvManagerPool
+    from repro.envs.base import BaseEnv
+
+    class ScriptedEnv(BaseEnv):
+        def __init__(self, env_id):
+            self.t = 0
+
+        def reset(self):
+            self.t = 0
+            return np.asarray([11, 12, 13, 14, 15, 16, 17, 18], np.int32)
+
+        def step(self, action):
+            self.t += 1
+            done = self.t >= 2
+            return (np.asarray([20 + self.t] * 8, np.int32),
+                    1.0 if done else 0.0, done, {})
+
+    cfg, api, params = setup
+    eng = _engine(api, params, num_slots=4, max_total_len=64)
+    proxy = LLMProxy(eng).start()
+    buf = SampleBuffer(batch_size=2, alpha=0)
+    pool = EnvManagerPool(ScriptedEnv, proxy, buf, num_env_groups=1,
+                          group_size=1, max_steps=4, max_new_tokens=4,
+                          target_trajectories=1, context_mode="full",
+                          max_context_tokens=60)
+    pool.start()
+    batch = buf.get_batch(1, timeout=90)
+    pool.stop()
+    proxy.stop()
+    assert len(batch) == 1
+    assert pool.managers[0].context_mode == "full"
+    assert eng.cache_hit_tokens > 0, \
+        "turn 2's resubmitted history must hit the cache"
+
+
+def test_env_manager_rejects_bad_context_mode(setup):
+    from repro.core.env_manager import EnvManager
+    with pytest.raises(ValueError, match="context_mode"):
+        EnvManager(env=None, proxy=None, pool=None, env_id=0, group_id=0,
+                   max_steps=1, max_new_tokens=1, context_mode="bogus")
+    with pytest.raises(ValueError, match="max_context_tokens"):
+        # uncapped growing conversations would overrun the engine budget
+        EnvManager(env=None, proxy=None, pool=None, env_id=0, group_id=0,
+                   max_steps=1, max_new_tokens=1, context_mode="full")
+
+
+# ----------------------------------------------------------- slow sweeps
+@pytest.mark.slow
+@pytest.mark.timeout(600)
+def test_cache_on_off_parity_sweep(setup):
+    """Greedy parity across prompt lengths crossing page boundaries, with
+    prompts sharing prefixes of various depths."""
+    cfg, api, params = setup
+    rng = np.random.default_rng(0)
+    pre = rng.integers(1, 30, 19).astype(np.int32)
+    lengths = [5, 8, 13, 21, 32]
+    prompts = [np.concatenate([pre[:n % 20], rng.integers(1, 30, n).astype(np.int32)])
+               for n in lengths]
+    outs = {}
+    for pc in (False, True):
+        eng = _engine(api, params, num_slots=8, prefix_cache=pc)
+        for i, p in enumerate(prompts):
+            eng.add_request(i, p, 6)
+        res = _drain(eng, len(prompts))
+        eng.audit_pages()
+        outs[pc] = res
+    for i in range(len(prompts)):
+        assert outs[True][i][0] == outs[False][i][0], f"prompt {i} diverged"
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(600)
+def test_cache_churn_audit_sweep(setup):
+    """Randomized add/abort/retain/resume/finish churn with the cache on:
+    the refcount audit must hold after every transition and the pool must
+    fully drain (minus cache holds) at the end."""
+    cfg, api, params = setup
+    rng = np.random.default_rng(42)
+    eng = _engine(api, params, num_slots=4, max_total_len=32, num_pages=24)
+    next_rid = [0]
+    retained = []
+
+    def admit():
+        plen = int(rng.integers(4, 17))
+        p = rng.integers(1, 30, plen).astype(np.int32)
+        rid = next_rid[0]
+        next_rid[0] += 1
+        if eng.can_admit(plen, 6):
+            eng.add_request(rid, p, 6)
+
+    for step in range(200):
+        op = rng.random()
+        if op < 0.25 and eng.num_free_slots > 0:
+            admit()
+        elif op < 0.35 and eng.active_request_ids:
+            rid = int(rng.choice(eng.active_request_ids))
+            keep = bool(rng.random() < 0.5)
+            r = eng.abort(rid, retain=keep)
+            if r.resumable:
+                retained.append((rid, len(r.tokens)))
+        elif op < 0.45 and retained:
+            rid, ntok = retained.pop()
+            new_rid = 10000 + rid
+            if eng.can_resume(rid, 6):
+                eng.resume_request(rid, new_rid, max(1, 6 - ntok))
+            else:
+                eng.release_retained(rid)
+        else:
+            eng.step()
+        eng.audit_pages()
+    for rid in list(eng.active_request_ids):
+        eng.abort(rid)
+    for rid, _ in retained:
+        eng.release_retained(rid)
+    eng.audit_pages()
+    assert eng.pool.pages_free + eng.cache_pages_held == eng.num_pages - 1
