@@ -1,7 +1,13 @@
 """Agentic post-training on a simulated ALFWorld-style environment, with the
 paper's §5.2 mechanisms: environment-level asynchronous rollout (EnvManager
-pool sharing one LLMProxy) and redundant environment rollout
+pool sharing one rollout service) and redundant environment rollout
 (num_env_groups x group_size > rollout_batch_size, fail-slow envs injected).
+
+Each EnvManager drives a first-class ``Session`` (the handle-based client
+API): the session owns the conversation context, version-tags every turn,
+and a turn interrupted by a weight sync transparently RESUMES — on the paged
+engine the retained KV pages are re-attached, so trajectories survive syncs
+with zero re-prefill instead of being thrown away.
 
   PYTHONPATH=src python examples/agentic_alfworld_sim.py
 """
@@ -27,6 +33,10 @@ settings = PipelineSettings(
     num_slots=8,
     max_new_tokens=4,
     max_seq_len=64,
+    weight_sync="overlapped",          # rollout keeps stepping through syncs
+    agentic_context="full",            # sessions resubmit the conversation;
+                                       # the prefix cache makes each turn an
+                                       # incremental prefill
     learning_rate=1e-3,
 )
 
@@ -53,4 +63,9 @@ for s in stats:
           f"stale_max {s.staleness_max} reward {s.reward_mean:.2f}")
 print("env-level async: decode slots stayed busy while envs were stepping;")
 print(f"proxy completed {pipe.proxy.requests_completed} requests over "
-      f"{pipe.proxy.steps_executed} engine steps")
+      f"{pipe.proxy.steps_executed} engine steps "
+      f"(suspends: {pipe.proxy.suspend_count} — overlapped sync)")
+print(f"session turns rode the prefix cache: {pipe.proxy.cache_stats}")
+print(f"in-flight turns resumed across weight syncs: "
+      f"{pipe.client.resumes} page re-attaches, "
+      f"{pipe.client.reprefills} re-prefills")

@@ -1,6 +1,13 @@
 """End-to-end RLVR driver: async GRPO-style training that actually LEARNS
 the verifiable arithmetic task, comparing sync (alpha=0) vs async (alpha=2).
 
+The async mode runs on the handle-based client API end to end: the
+RolloutProducer consumes GenerationHandles (abort→resume continuation and
+budget clamping live in the RolloutClient), and the controller uses the
+OVERLAPPED weight sync — params are staged per-proxy between engine steps,
+so rollout never suspends (pass --weight-sync blocking for the 3-phase
+barrier).
+
 This is the e2e deliverable driver; `--preset rl_100m --steps 300` runs the
 by-the-book ~100M-parameter configuration (hours on CPU — default is the
 CPU-friendly preset that demonstrates learning in minutes).
@@ -22,14 +29,14 @@ from repro.launch.pipeline import PipelineSettings, build_rlvr_pipeline
 from repro.launch.train import PRESETS, build_model_cfg
 
 
-def run_mode(alpha, steps, preset, seed=0):
+def run_mode(alpha, steps, preset, seed=0, weight_sync="overlapped"):
     model = build_model_cfg("qwen3-4b", preset)
     task = ArithmeticTask(max_operand=4, ops=("+",), seed=seed)
     settings = PipelineSettings(
         async_generation_ratio=alpha, pg_variant="tis",
         rollout_batch_size=16, num_return_sequences_in_group=8,
         num_slots=16, max_new_tokens=4, max_seq_len=16,
-        learning_rate=5e-3, seed=seed)
+        weight_sync=weight_sync, learning_rate=5e-3, seed=seed)
     pipe = build_rlvr_pipeline(model, settings, task=task)
     t0 = time.time()
     stats = pipe.run(num_steps=steps, timeout=1800)
@@ -42,10 +49,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--preset", default="demo", choices=sorted(PRESETS))
+    ap.add_argument("--weight-sync", default="overlapped",
+                    choices=["overlapped", "blocking"])
     args = ap.parse_args()
 
     for name, alpha in (("sync (alpha=0)", 0), ("async (alpha=2)", 2)):
-        rewards, wall, stale = run_mode(alpha, args.steps, args.preset)
+        rewards, wall, stale = run_mode(alpha, args.steps, args.preset,
+                                        weight_sync=args.weight_sync)
         k = max(2, len(rewards) // 5)
         print(f"{name:16s}: {wall:6.1f}s  reward {np.mean(rewards[:k]):.3f} "
               f"-> {np.mean(rewards[-k:]):.3f}  max_staleness={stale}")

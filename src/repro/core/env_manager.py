@@ -1,10 +1,17 @@
 """EnvManager: per-environment event loop for agentic rollouts (§4.2, §5.2).
 
-Each EnvManager mediates between its BaseEnv and the shared LLMProxy:
-reset -> (action <- LLM) -> step -> ... -> reward -> SampleBuffer.  Running
-many EnvManagers concurrently against one proxy realizes *environment-level
-asynchronous rollout*: while one trajectory waits on its environment, the
-decode slots serve other trajectories.
+Each EnvManager mediates between its BaseEnv and the shared rollout service
+through a first-class ``Session`` (`repro.core.rollout_client`):
+reset -> (action <- session.turn) -> step -> ... -> reward -> SampleBuffer.
+The session owns the conversation context (``turn``/``full`` modes — the
+latter rides the radix prefix cache as incremental prefill per turn) and
+version-tags every turn; a turn interrupted by a weight sync is resumed
+transparently by the client layer (paged engines re-attach the retained KV
+pages), so trajectories survive weight syncs instead of being thrown away.
+
+Running many EnvManagers concurrently against one proxy realizes
+*environment-level asynchronous rollout*: while one trajectory waits on its
+environment, the decode slots serve other trajectories.
 
 ``EnvManagerPool`` implements *redundant environment rollout*:
 ``num_env_groups x group_size`` managers run concurrently, the pool stops
@@ -18,34 +25,23 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
-from repro.core.llm_proxy import LLMProxy
+from repro.core.rollout_client import GenerationHandle, RolloutClient, Session
 from repro.core.sample_buffer import SampleBuffer
-from repro.core.types import (GenerationResult, RolloutTask, Trajectory, Turn,
-                              next_uid)
+from repro.core.types import GenerationResult, Trajectory, Turn, next_uid
 from repro.envs.base import BaseEnv
 
 
 class EnvManager(threading.Thread):
-    """One environment's rollout loop.
+    """One environment's rollout loop — a thin consumer of Sessions.
 
-    ``context_mode``:
+    ``context_mode``/``max_context_tokens`` configure each trajectory's
+    Session (see `repro.core.rollout_client.Session`)."""
 
-    * ``"turn"`` (default) — each LLM call sees only the current
-      observation (the seed behaviour; right for envs whose observation is
-      already a full state encoding).
-    * ``"full"`` — each LLM call resubmits the growing conversation
-      (obs₀ action₀ obs₁ ... obsₜ).  On an engine with automatic prefix
-      caching this becomes *incremental prefill per turn*: the whole shared
-      history is aliased from cached pages and only the new observation
-      suffix is prefilled.  ``max_context_tokens`` caps the prompt by
-      dropping the oldest turns (a safety valve for the engine's sequence
-      budget; it sacrifices cache hits on the dropped prefix).
-    """
-
-    def __init__(self, env: BaseEnv, proxy: LLMProxy, pool: "EnvManagerPool",
+    def __init__(self, env: BaseEnv, proxy, pool: "EnvManagerPool",
                  *, env_id: int, group_id: int, max_steps: int,
                  max_new_tokens: int, context_mode: str = "turn",
-                 max_context_tokens: Optional[int] = None):
+                 max_context_tokens: Optional[int] = None,
+                 client: Optional[RolloutClient] = None):
         super().__init__(name=f"env_manager_{env_id}", daemon=True)
         if context_mode not in ("turn", "full"):
             raise ValueError(f"context_mode must be turn|full, got {context_mode!r}")
@@ -56,7 +52,6 @@ class EnvManager(threading.Thread):
             # max_seq_len - max_new_tokens).
             raise ValueError("context_mode='full' requires max_context_tokens")
         self.env = env
-        self.proxy = proxy
         self.pool = pool
         self.env_id = env_id
         self.group_id = group_id
@@ -64,43 +59,29 @@ class EnvManager(threading.Thread):
         self.max_new_tokens = max_new_tokens
         self.context_mode = context_mode
         self.max_context_tokens = max_context_tokens
-        self._result: Optional[GenerationResult] = None
-        self._result_ready = threading.Event()
+        if client is None and proxy is not None:
+            client = RolloutClient.ensure(
+                proxy,
+                version_fn=lambda: self.pool.buffer.version,
+                resume_gate=lambda: not (self.pool.stopped
+                                         or self.pool.buffer.closed))
+        self.client = client
 
-    def _build_prompt(self, ctx: List[np.ndarray], obs) -> np.ndarray:
-        """The turn's LLM prompt: bare observation, or the conversation so
-        far + the new observation (``full`` mode)."""
-        obs = np.asarray(obs, np.int32)
-        if self.context_mode != "full":
-            return obs
-        parts = list(ctx) + [obs]
-        if self.max_context_tokens is not None:
-            total = sum(len(p) for p in parts)
-            while len(parts) > 1 and total > self.max_context_tokens:
-                total -= len(parts.pop(0))   # drop oldest turns first
-            if total > self.max_context_tokens:
-                parts = [parts[0][-self.max_context_tokens:]]
-        return np.concatenate(parts) if len(parts) > 1 else parts[0]
+    def _new_session(self) -> Session:
+        return self.client.session(
+            session_id=self.env_id, group_id=self.group_id,
+            max_new_tokens=self.max_new_tokens,
+            context_mode=self.context_mode,
+            max_context_tokens=self.max_context_tokens)
 
-    # LLM call: submit to the shared proxy, park this manager (NOT the GPU —
-    # other managers' requests keep the decode slots busy meanwhile).
-    def _llm(self, obs_tokens: np.ndarray, version: int) -> Optional[GenerationResult]:
-        self._result_ready.clear()
-        task = RolloutTask(task_id=next_uid(), prompt_id=self.env_id,
-                           replica_idx=0, prompt_tokens=obs_tokens,
-                           max_new_tokens=self.max_new_tokens,
-                           group_id=self.group_id)
-
-        def cb(res: GenerationResult) -> None:
-            self._result = res
-            self._result_ready.set()
-
-        self.proxy.generate(task, version, cb)
-        while not self._result_ready.wait(timeout=0.1):
+    def _await(self, handle: GenerationHandle) -> Optional[GenerationResult]:
+        """Park this manager on the turn's handle (NOT the GPU — other
+        managers' requests keep the decode slots busy meanwhile)."""
+        while not handle.wait(timeout=0.1):
             if self.pool.stopped:
-                self.proxy.abort(task.task_id)
+                handle.abort()        # cancel; retained pages are released
                 return None
-        return self._result
+        return handle.result(0)
 
     def run(self) -> None:
         while not self.pool.stopped:
@@ -117,18 +98,14 @@ class EnvManager(threading.Thread):
                 traj.failed = True
                 self.pool.buffer.reclaim(1)
                 continue
+            session = self._new_session()
             aborted = False
-            ctx: List[np.ndarray] = []   # full-context mode: obs/action turns
             for _ in range(self.max_steps):
-                prompt = self._build_prompt(ctx, obs)
-                res = self._llm(prompt, version)
+                res = self._await(session.turn(obs))
                 if res is None or res.aborted:
                     aborted = True
                     break
                 action = np.asarray(res.tokens, np.int32)
-                if self.context_mode == "full":
-                    ctx.append(np.asarray(obs, np.int32))
-                    ctx.append(action)
                 try:
                     obs, reward, done, info = self.env.step(action)
                 except Exception:
@@ -144,6 +121,8 @@ class EnvManager(threading.Thread):
             if aborted or traj.failed or not traj.done:
                 self.pool.buffer.reclaim(1)
                 continue
+            traj.version_finished = session.turn_versions[-1] \
+                if session.turn_versions else version
             sample = traj.to_sample()
             try:
                 self.pool.buffer.put(sample)
@@ -154,14 +133,17 @@ class EnvManager(threading.Thread):
 
 
 class EnvManagerPool:
-    def __init__(self, make_env: Callable[[int], BaseEnv], proxy: LLMProxy,
+    def __init__(self, make_env: Callable[[int], BaseEnv], proxy,
                  buffer: SampleBuffer, *, num_env_groups: int, group_size: int,
                  max_steps: int, max_new_tokens: int,
                  target_trajectories: Optional[int] = None,
                  context_mode: str = "turn",
                  max_context_tokens: Optional[int] = None):
         self.buffer = buffer
-        self.proxy = proxy
+        self.client = RolloutClient.ensure(
+            proxy, version_fn=lambda: buffer.version,
+            resume_gate=lambda: not (self.stopped or buffer.closed))
+        self.proxy = self.client.proxy
         self.num_env_groups = num_env_groups
         self.group_size = group_size
         self.target = target_trajectories
@@ -174,10 +156,11 @@ class EnvManagerPool:
             for _ in range(group_size):
                 env = make_env(eid)
                 self.managers.append(EnvManager(
-                    env, proxy, self, env_id=eid, group_id=g,
+                    env, self.proxy, self, env_id=eid, group_id=g,
                     max_steps=max_steps, max_new_tokens=max_new_tokens,
                     context_mode=context_mode,
-                    max_context_tokens=max_context_tokens))
+                    max_context_tokens=max_context_tokens,
+                    client=self.client))
                 eid += 1
 
     @property

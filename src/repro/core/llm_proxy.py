@@ -23,7 +23,8 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Protocol
 
-from repro.core.types import GenerationRequest, GenerationResult, RolloutTask
+from repro.core.types import (GenerationRequest, GenerationResult,
+                              RolloutTask, expand_replicas)
 
 
 class InferenceEngine(Protocol):
@@ -80,15 +81,40 @@ class LLMProxy:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._idle_sleep = 0.0005
+        self._num_streaming = 0          # active requests with a stream_cb
         self.steps_executed = 0
         self.requests_completed = 0
         self.requests_aborted = 0
+        self.suspend_count = 0
+        self.staged_weight_updates = 0   # non-blocking (overlapped) swaps
 
     # ------------------------------------------------------------- commands
     def generate(self, task: RolloutTask, version: int,
-                 callback: Callable[[GenerationResult], None]) -> int:
+                 callback: Callable[[GenerationResult], None],
+                 stream_cb: Optional[Callable] = None):
+        """Submit one task.  A task carrying ``meta["num_return_sequences"]
+        = G > 1`` (the non-replicated group encoding) is expanded into G
+        candidate requests sharing its group id — engines decode one
+        sequence per request, so the proxy realizes the group as a group
+        submission (COW sharing where supported); the callback then fires
+        once per candidate.  Returns the request id (list of ids when
+        expanded)."""
+        n = int(task.meta.get("num_return_sequences", 1))
+        if n > 1:
+            if stream_cb is not None:
+                # one stream_cb cannot disambiguate G interleaved candidate
+                # streams — submit the replicas individually to stream them.
+                raise ValueError("stream_cb is unsupported for "
+                                 "num_return_sequences-expanded tasks")
+            reqs = [GenerationRequest(request_id=t.task_id, task=t,
+                                      version_started=version,
+                                      callback=callback)
+                    for t in expand_replicas(task, n)]
+            self._commands.put(("ADD_GROUP", _PendingGroup(reqs)))
+            return [r.request_id for r in reqs]
         req = GenerationRequest(request_id=task.task_id, task=task,
-                                version_started=version, callback=callback)
+                                version_started=version, callback=callback,
+                                stream_cb=stream_cb)
         self._commands.put(("ADD", req))
         return req.request_id
 
@@ -113,12 +139,13 @@ class LLMProxy:
 
     def generate_resumed(self, task: RolloutTask, version: int,
                          callback: Callable[[GenerationResult], None],
-                         resume_from: int) -> int:
+                         resume_from: int,
+                         stream_cb: Optional[Callable] = None) -> int:
         """Re-initiate an ABORTed-with-retain request: the engine re-attaches
         the retained KV pages instead of prefilling the prompt."""
         req = GenerationRequest(request_id=task.task_id, task=task,
                                 version_started=version, callback=callback,
-                                resume_from=resume_from)
+                                resume_from=resume_from, stream_cb=stream_cb)
         self._commands.put(("ADD", req))
         return req.request_id
 
@@ -138,13 +165,30 @@ class LLMProxy:
 
     def suspend(self) -> None:
         """Pause the loop after the current engine step (weight-sync phase 1)."""
+        self.suspend_count += 1
         self._resumed.clear()
         self._suspended.wait()
 
     def update_weights(self, params) -> None:
-        """Weight-sync phase 2 (call between suspend and resume)."""
+        """Blocking weight-sync phase 2 (call between suspend and resume)."""
         assert self._suspended.is_set(), "update_weights requires suspend()"
         self.engine.update_weights(params)
+
+    def update_weights_async(self, params) -> threading.Event:
+        """NON-BLOCKING weight sync: stage a parameter swap that the proxy
+        loop applies between engine steps — rollout keeps advancing; there
+        is no suspend barrier.  Returns an event set once the engine holds
+        the new weights.  (Do not mix with a concurrent ``suspend()``: a
+        parked loop processes no commands.)"""
+        done = threading.Event()
+        if self._thread is None or not self._thread.is_alive():
+            # loop not running (tests, pre-start staging): apply inline
+            self.engine.update_weights(params)
+            self.staged_weight_updates += 1
+            done.set()
+            return done
+        self._commands.put(("UPDATE", (params, done)))
+        return done
 
     def resume(self) -> None:
         """Weight-sync phase 3."""
@@ -184,10 +228,36 @@ class LLMProxy:
                 req = self._active.pop(rid, None)
                 if req is None:
                     continue
+                if req.stream_cb is not None:
+                    self._num_streaming -= 1
+                    # flush the final decode step's tokens — the request is
+                    # no longer active, so _publish_streams won't see it.
+                    if len(tokens) > req.streamed:
+                        req.stream_cb(list(tokens[req.streamed:]))
+                        req.streamed = len(tokens)
                 self.requests_completed += 1
                 req.callback(GenerationResult(
                     request_id=rid, task=req.task, tokens=tokens,
                     logprobs=logprobs, version_started=req.version_started))
+            if self._num_streaming > 0:
+                self._publish_streams()
+
+    def _publish_streams(self) -> None:
+        """Push NEWLY decoded tokens (a delta per call) of stream-subscribed
+        active requests — engines expose ``peek_tokens(rid, start)``;
+        without it, subscribers only see per-leg chunks from the client
+        layer.  The per-request cursor keeps this O(new tokens), not
+        O(decoded), per step."""
+        peek = getattr(self.engine, "peek_tokens", None)
+        if peek is None:
+            return
+        for rid, req in list(self._active.items()):
+            if req.stream_cb is None:
+                continue
+            delta = peek(rid, req.streamed)
+            if delta:
+                req.streamed += len(delta)
+                req.stream_cb(delta)
 
     def _process_commands(self) -> None:
         while True:
@@ -217,10 +287,17 @@ class LLMProxy:
                 release = getattr(self.engine, "release_retained", None)
                 if release is not None:
                     release(arg)
+            elif op == "UPDATE":
+                params, done = arg
+                self.engine.update_weights(params)
+                self.staged_weight_updates += 1
+                done.set()
 
     def _do_abort(self, request_id: int, retain: bool = False) -> None:
         req = self._active.pop(request_id, None)
         if req is not None:
+            if req.stream_cb is not None:
+                self._num_streaming -= 1
             retain = retain and getattr(self.engine, "supports_retain", False)
             if retain:
                 partial = self.engine.abort(request_id, retain=True)
@@ -235,24 +312,35 @@ class LLMProxy:
                 aborted=True, partial=True,
                 resumable=getattr(partial, "resumable", False)))
         else:
-            # not yet admitted: drop from pending — and free the retained
-            # pages of a dropped resume request (nobody else will).
+            # not yet admitted: drop from pending — free the retained pages
+            # of a dropped resume request (nobody else will) and still fire
+            # the callback with an empty aborted result so handle-layer
+            # consumers always resolve.
             release = getattr(self.engine, "release_retained", None)
-            for entry in self._pending:
-                for r in self._entry_requests(entry):
-                    if (r.request_id == request_id and r.resume_from is not None
-                            and release is not None):
-                        release(r.resume_from)
+            dropped: List[GenerationRequest] = []
             kept: collections.deque = collections.deque()
             for entry in self._pending:
                 if isinstance(entry, _PendingGroup):
+                    hit = [r for r in entry.requests
+                           if r.request_id == request_id]
                     entry.requests = [r for r in entry.requests
                                       if r.request_id != request_id]
+                    dropped.extend(hit)
                     if entry.requests:
                         kept.append(entry)
-                elif entry.request_id != request_id:
+                elif entry.request_id == request_id:
+                    dropped.append(entry)
+                else:
                     kept.append(entry)
             self._pending = kept
+            for r in dropped:
+                if r.resume_from is not None and release is not None:
+                    release(r.resume_from)
+                self.requests_aborted += 1
+                r.callback(GenerationResult(
+                    request_id=r.request_id, task=r.task, tokens=None,
+                    logprobs=None, version_started=r.version_started,
+                    aborted=True, partial=True))
 
     @staticmethod
     def _entry_requests(entry) -> List[GenerationRequest]:
@@ -310,6 +398,11 @@ class LLMProxy:
                          t.max_new_tokens)
         return True
 
+    def _activate(self, req: GenerationRequest) -> None:
+        self._active[req.request_id] = req
+        if req.stream_cb is not None:
+            self._num_streaming += 1
+
     def _admit_pending(self) -> None:
         while self._pending and self.engine.num_free_slots > 0:
             entry = self._pending[0]
@@ -324,11 +417,11 @@ class LLMProxy:
                 if verdict:
                     self._pending.popleft()
                     for r in entry.requests:
-                        self._active[r.request_id] = r
+                        self._activate(r)
                     continue
             elif self._try_admit(entry):
                 self._pending.popleft()
-                self._active[entry.request_id] = entry
+                self._activate(entry)
                 continue
             # Head is blocked (e.g. page-starved).  Resume requests further
             # back MUST be allowed to bypass it: they re-attach pages that
@@ -341,7 +434,7 @@ class LLMProxy:
                 if (isinstance(e, GenerationRequest) and e.resume_from is not None
                         and self._try_admit(e)):
                     self._pending.remove(e)
-                    self._active[e.request_id] = e
+                    self._activate(e)
                     admitted_any = True
             if not admitted_any:
                 break

@@ -131,12 +131,18 @@ class SampleBuffer:
             self._samples.sort(key=lambda s: s.version_started)
             batch, self._samples = self._samples[:n], self._samples[n:]
             self.total_consumed += len(batch)
+            # capture the version INSIDE the critical section: a concurrent
+            # advance_version between releasing the lock and the strict
+            # re-check below must not fail a batch that was admissible at
+            # the moment it was consumed.
+            version_at_consume = self._version
             self._can_produce.notify_all()
         if self.strict:
             for s in batch:
-                if self._version - s.version_started > self.alpha:
+                if version_at_consume - s.version_started > self.alpha:
                     raise StaleSampleError(
-                        f"consumed sample from v{s.version_started} at v{self._version}")
+                        f"consumed sample from v{s.version_started} "
+                        f"at v{version_at_consume}")
         return batch
 
     def advance_version(self) -> int:

@@ -1,10 +1,12 @@
 """Queue scheduling + prompt replication + dynamic filtering (§5.1).
 
-Two entry points:
+Two entry points, both thin consumers of the handle-based RolloutClient
+(`repro.core.rollout_client`) — abort→resume continuation, token stitching
+and budget clamping live in the client layer, never here:
 
 * ``collect_rollout`` — one synchronous rollout step under queue scheduling:
   stream group completions, reward immediately, filter, top up redundant
-  prompts, ABORT leftovers once the batch qualifies.  (Sync-ROLL mode.)
+  prompts, cancel leftovers once the batch qualifies.  (Sync-ROLL mode.)
 * ``RolloutProducer`` — the continuous producer thread for the asynchronous
   architecture: keeps the SampleBuffer saturated subject to the freshness
   capacity (1+alpha)B, assembling GRPO groups before publishing.
@@ -13,11 +15,14 @@ from __future__ import annotations
 
 import collections
 import threading
-from typing import Callable, Dict, Iterator, List, Optional
+import time
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.llm_proxy import LLMProxy
+from repro.core.rollout_client import (GenerationHandle, GroupHandle,
+                                       RolloutClient)
 from repro.core.sample_buffer import SampleBuffer
 from repro.core.types import GenerationResult, RolloutTask, Sample, next_uid
 
@@ -26,7 +31,9 @@ def expand_tasks(prompt_id: int, prompt_tokens, group_size: int,
                  max_new_tokens: int, *, replicate: bool) -> List[RolloutTask]:
     """Prompt replication (`num_return_sequences_expand`): one prompt with G
     candidates becomes G independently schedulable tasks; without it the
-    whole group is a single task (one engine request decoding G sequences)."""
+    whole group is a single task (one submission decoding G sequences —
+    realized by the client/proxy as a group expansion, COW-shared where the
+    engine supports it)."""
     gid = next_uid()
     if replicate:
         return [RolloutTask(task_id=next_uid(), prompt_id=prompt_id,
@@ -39,8 +46,26 @@ def expand_tasks(prompt_id: int, prompt_tokens, group_size: int,
                         meta={"num_return_sequences": group_size})]
 
 
+def _make_sample(result: GenerationResult) -> Sample:
+    """A finished handle result (already stitched + clamped) as a Sample."""
+    task = result.task
+    meta = dict(task.meta)
+    if result.legs:
+        meta["legs"] = list(result.legs)   # per-leg (version, ntokens) tags
+    return Sample(
+        sample_id=next_uid(), prompt_id=task.prompt_id,
+        replica_idx=task.replica_idx,
+        prompt_tokens=np.asarray(task.prompt_tokens, np.int32),
+        response_tokens=np.asarray(result.tokens, np.int32),
+        logprobs=np.asarray(result.logprobs, np.float32),
+        version_started=result.version_started, group_id=task.group_id,
+        meta=meta)
+
+
 class _GroupCollector:
-    """Assemble per-prompt groups, reward on completion, apply the filter."""
+    """Assemble per-prompt groups, reward on completion, apply the filter.
+
+    Consumers wait on the collector's condition — no polling."""
 
     def __init__(self, group_size: int, reward_fn: Callable,
                  filter_fn: Optional[Callable] = None):
@@ -50,34 +75,51 @@ class _GroupCollector:
         self._partial: Dict[int, List[Sample]] = collections.defaultdict(list)
         self.done_groups: "collections.deque[List[Sample]]" = collections.deque()
         self.filtered_groups = 0
-        self.lock = threading.Lock()
-        self.event = threading.Event()
+        self._cond = threading.Condition()
 
-    def add(self, result: GenerationResult, version: int) -> None:
+    def add(self, result: GenerationResult) -> None:
+        """Handle done-callback: samples carry result.version_started."""
         if result.aborted:
+            with self._cond:
+                self._cond.notify_all()
             return
-        task = result.task
-        sample = Sample(
-            sample_id=next_uid(), prompt_id=task.prompt_id,
-            replica_idx=task.replica_idx, prompt_tokens=task.prompt_tokens,
-            response_tokens=np.asarray(result.tokens),
-            logprobs=np.asarray(result.logprobs),
-            version_started=result.version_started, group_id=task.group_id,
-            meta=dict(task.meta),
-        )
+        sample = _make_sample(result)
         # reward immediately on completion (overlaps with ongoing generation)
         sample.reward = float(self.reward_fn(sample))
         sample.is_positive = sample.reward > 0
-        with self.lock:
-            group = self._partial[task.group_id]
+        with self._cond:
+            group = self._partial[result.task.group_id]
             group.append(sample)
             if len(group) == self.group_size:
-                del self._partial[task.group_id]
+                del self._partial[result.task.group_id]
                 if self.filter_fn is not None and not self.filter_fn(group):
                     self.filtered_groups += 1
                 else:
                     self.done_groups.append(group)
-        self.event.set()
+            self._cond.notify_all()
+
+    def wait(self, timeout: float) -> None:
+        """Park until the next completion/filter event (or timeout)."""
+        with self._cond:
+            if self.done_groups or self.filtered_groups:
+                return
+            self._cond.wait(timeout)
+
+    def take_filtered(self) -> int:
+        with self._cond:
+            n, self.filtered_groups = self.filtered_groups, 0
+            return n
+
+    def pop_groups(self, max_samples: int) -> List[Sample]:
+        out: List[Sample] = []
+        with self._cond:
+            while self.done_groups and len(out) < max_samples:
+                out.extend(self.done_groups.popleft())
+        return out
+
+    def has_ready(self) -> bool:
+        with self._cond:
+            return bool(self.done_groups)
 
 
 def variance_filter(group: List[Sample]) -> bool:
@@ -87,7 +129,7 @@ def variance_filter(group: List[Sample]) -> bool:
 
 
 def collect_rollout(
-    proxy: LLMProxy,
+    proxy,
     prompts: Iterator[tuple[int, np.ndarray]],
     *,
     num_groups: int,
@@ -102,21 +144,22 @@ def collect_rollout(
     group_submit: bool = True,
 ) -> List[Sample]:
     """One rollout step (queue scheduling): returns num_groups qualifying
-    groups, flattened. Extra in-flight generations are ABORTed on return.
+    groups, flattened.  Extra in-flight generations are cancelled on return.
 
-    With ``group_submit`` (default) the G replicated candidates of a prompt
-    go to the proxy as ONE group submission: COW engines prefill the prompt
-    once and fork G lanes sharing its KV pages; other engines degrade to G
-    independent requests inside the proxy.
+    ``proxy`` may be a raw ``LLMProxy`` (wrapped in a RolloutClient
+    internally) or an existing ``RolloutClient``.  With ``group_submit``
+    (default) the G replicated candidates of a prompt go down as ONE group
+    submission (COW prefix sharing on engines that support it); with
+    ``replicate=False`` the single group task is expanded by the client, so
+    both configurations yield exactly G samples per prompt.
 
     A finite prompt stream may exhaust mid-step (e.g. during filtered-group
     top-up at the end of an epoch): the step then returns the qualifying
     groups it could assemble (possibly fewer than ``num_groups``) instead of
     raising or spinning until the timeout."""
+    client = RolloutClient.ensure(proxy, version_fn=lambda: version)
     collector = _GroupCollector(group_size, reward_fn, filter_fn)
-    submitted: List[int] = []
-    finished_ids: set = set()
-    ids_lock = threading.Lock()
+    handles: List[GenerationHandle] = []
     exhausted = False
 
     def submit_one_prompt() -> bool:
@@ -130,216 +173,177 @@ def collect_rollout(
             return False
         tasks = expand_tasks(pid, toks, group_size, max_new_tokens,
                              replicate=replicate)
-        submitted.extend(t.task_id for t in tasks)
-
-        def cb(r: GenerationResult) -> None:
-            if not r.aborted:
-                with ids_lock:
-                    finished_ids.add(r.request_id)
-            collector.add(r, version)
-
-        if group_submit and replicate and len(tasks) > 1:
-            proxy.generate_group(tasks, version, cb)
+        if replicate and group_submit and len(tasks) > 1:
+            new = client.submit_group(tasks, version=version).handles
         else:
+            new = []
             for task in tasks:
-                proxy.generate(task, version, cb)
+                h = client.submit(task, version=version)
+                new.extend(h.handles if isinstance(h, GroupHandle) else [h])
+        for h in new:
+            h.add_done_callback(collector.add)
+        handles.extend(new)
         return True
 
     for _ in range(num_groups + max_additional_running_prompts):
         if not submit_one_prompt():
             break
 
+    want = num_groups * group_size
     out: List[Sample] = []
-    import time as _time
-    deadline = _time.monotonic() + timeout
-    while len(out) < num_groups * group_size:
-        collector.event.wait(timeout=0.05)
-        collector.event.clear()
-        while collector.done_groups and len(out) < num_groups * group_size:
-            out.extend(collector.done_groups.popleft())
-        # top up for filtered-out groups so the step always completes
-        with collector.lock:
-            need_more = collector.filtered_groups
-            collector.filtered_groups = 0
-        for _ in range(need_more):
-            if not submit_one_prompt():
+    deadline = time.monotonic() + timeout
+    try:
+        while len(out) < want:
+            out.extend(collector.pop_groups(want - len(out)))
+            if len(out) >= want:
                 break
-        if exhausted:
-            with ids_lock:
-                all_done = len(finished_ids) >= len(submitted)
-            if all_done and not collector.done_groups:
-                break          # nothing in flight, no prompts left: partial
-        if _time.monotonic() > deadline:
-            raise TimeoutError("collect_rollout timed out")
-    while collector.done_groups and len(out) < num_groups * group_size:
-        out.extend(collector.done_groups.popleft())
-    # ABORT only what is still running — the step has what it needs
-    with ids_lock:
-        running = [tid for tid in submitted if tid not in finished_ids]
-    for tid in running:
-        proxy.abort(tid)
+            # top up for filtered-out groups so the step always completes
+            for _ in range(collector.take_filtered()):
+                if not submit_one_prompt():
+                    break
+            if exhausted and all(h.done() for h in handles) \
+                    and not collector.has_ready():
+                break      # nothing in flight, no prompts left: partial
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError("collect_rollout timed out")
+            collector.wait(min(remaining, 1.0))
+        out.extend(collector.pop_groups(want - len(out)))
+    finally:
+        # cancel whatever is still running — on the normal exit the step
+        # has what it needs; on the timeout exit the leftovers must not
+        # keep decoding (and rewarding into an abandoned collector) on a
+        # shared proxy.
+        for h in handles:
+            if not h.done():
+                h.abort()
     return out
 
 
+class _GroupAssembler:
+    """Prompt-aligned group assembly over a (pid, tokens) stream.
+
+    Owns the two pieces of cross-group state the producer used to thread by
+    hand: the *held prompt* (a pull that crossed a prompt boundary during
+    partial-group assembly seeds the next group, keeping grouping aligned
+    with the stream) and the *group uid* (consecutive pulls of one prompt
+    share a fresh ``next_uid()`` until group_size is reached, so a
+    capacity-pinch partial flush stays one logical group while a prompt
+    repeated in a later epoch never collides with its earlier group)."""
+
+    def __init__(self, prompts: Iterator[tuple], group_size: int):
+        self.prompts = prompts
+        self.group_size = group_size
+        self.held: Optional[tuple] = None
+        self._uid: Optional[int] = None
+        self._pid: Optional[int] = None
+        self._count = 0
+
+    def pull(self, group_pid: Optional[int]) -> Tuple[str, Optional[int], Optional[np.ndarray]]:
+        """Next prompt for a group anchored at ``group_pid``: ("ok", pid,
+        toks), ("boundary", ...) when the stream crossed into the next
+        prompt (held back to seed the next group), or ("exhausted", ...)."""
+        if self.held is not None:
+            pid, toks = self.held
+            self.held = None
+        else:
+            try:
+                pid, toks = next(self.prompts)
+            except StopIteration:
+                return "exhausted", None, None
+        if group_pid is not None and pid != group_pid:
+            self.held = (pid, toks)
+            return "boundary", None, None
+        return "ok", pid, toks
+
+    def group_id(self, pid: int) -> int:
+        if (self._uid is None or pid != self._pid
+                or self._count >= self.group_size):
+            self._uid = next_uid()
+            self._pid = pid
+            self._count = 0
+        self._count += 1
+        return self._uid
+
+
 class RolloutProducer(threading.Thread):
-    """Continuous RLVR producer for the async architecture.
+    """Continuous RLVR producer for the async architecture — a thin consumer
+    of RolloutClient handles.
 
     Each candidate generation claims a freshness slot from the buffer before
     starting (begin_generation), guaranteeing occupancy <= (1+alpha)B.
-    Completed groups are rewarded and published sample-by-sample.
-    """
+    Completed handles are rewarded and published sample-by-sample; an
+    in-flight generation interrupted by a weight sync is transparently
+    resumed BY THE CLIENT under the new version (the producer only ever
+    sees final results)."""
 
-    def __init__(self, proxy: LLMProxy, buffer: SampleBuffer,
+    def __init__(self, proxy, buffer: SampleBuffer,
                  prompts: Iterator[tuple[int, np.ndarray]], *,
                  group_size: int, max_new_tokens: int,
                  reward_fn: Callable[[Sample], float],
                  replicate: bool = True, name: str = "rollout_producer"):
         super().__init__(name=name, daemon=True)
-        self.proxy = proxy
         self.buffer = buffer
-        self.prompts = prompts
         self.group_size = group_size
         self.max_new_tokens = max_new_tokens
         self.reward_fn = reward_fn
         self.replicate = replicate
         self._stop = threading.Event()
-        # prompt pulled past a group boundary during partial-group assembly;
-        # it seeds the next group so grouping stays aligned with the stream.
-        self._held_prompt: Optional[tuple] = None
-        # current group uid: one fresh next_uid() per assembled group.  Using
-        # the prompt id would collide a prompt repeated across epochs with
-        # its earlier group in downstream assembly/GRPO grouping.
-        self._group_uid: Optional[int] = None
-        self._group_pid: Optional[int] = None
-        self._group_count = 0
+        self._owns_client = not isinstance(proxy, RolloutClient)
+        self.client = RolloutClient.ensure(
+            proxy, version_fn=lambda: self.buffer.version,
+            resume_gate=lambda: not (self.buffer.closed
+                                     or self._stop.is_set()))
+        self.proxy = self.client.proxy
+        self._groups = _GroupAssembler(prompts, group_size)
 
     def stop(self) -> None:
         self._stop.set()
+        if self._owns_client:
+            # a caller-provided (possibly shared) client is left open —
+            # other consumers may still rely on its continuations.
+            self.client.close()
 
-    def _next_group_id(self, pid: int) -> int:
-        """Group uid for the next pull of prompt ``pid``: consecutive pulls
-        of the same prompt share one uid until group_size is reached (so a
-        capacity-pinch partial flush stays one logical group), then a fresh
-        uid starts — a prompt repeated in a later epoch never collides with
-        its earlier group."""
-        if (self._group_uid is None or pid != self._group_pid
-                or self._group_count >= self.group_size):
-            self._group_uid = next_uid()
-            self._group_pid = pid
-            self._group_count = 0
-        self._group_count += 1
-        return self._group_uid
-
-    def _publish(self, task: RolloutTask, response: np.ndarray,
-                 logprobs: np.ndarray, version_started: int) -> None:
-        """Reward and publish a finished sample.  The response is clamped to
-        the ORIGINAL generation budget — abort→resume legs must never let
-        the concatenated response exceed it."""
-        opl = task.meta.get("orig_prompt_len",
-                            len(np.asarray(task.prompt_tokens)))
-        budget = task.meta.get("orig_max_new_tokens", task.max_new_tokens)
-        sample = Sample(
-            sample_id=next_uid(), prompt_id=task.prompt_id,
-            replica_idx=task.replica_idx,
-            prompt_tokens=np.asarray(task.prompt_tokens, np.int32)[:opl],
-            response_tokens=np.asarray(response, np.int32)[:budget],
-            logprobs=np.asarray(logprobs, np.float32)[:budget],
-            version_started=version_started, group_id=task.group_id)
+    def _publish(self, result: GenerationResult) -> None:
+        """Handle done-callback: reward + publish, or release the freshness
+        slot of a cancelled/shutdown generation."""
+        if result.aborted:
+            self.buffer.reclaim(1)
+            return
+        sample = _make_sample(result)
         sample.reward = float(self.reward_fn(sample))
         sample.is_positive = sample.reward > 0
-        self.buffer.put(sample)
+        try:
+            self.buffer.put(sample)
+        except Exception:
+            self.buffer.reclaim(1)
 
-    def _on_result(self, result: GenerationResult) -> None:
-        task = result.task
-        if result.aborted:
-            if self.buffer.closed or self._stop.is_set():
-                self.buffer.reclaim(1)
-                if result.resumable:
-                    # the engine parked this request's pages; nobody will
-                    # resume it, so hand them back to the pool.
-                    self.proxy.release_retained(result.request_id)
-                return
-            # ABORT -> resume: the partial response is NOT wasted.  Its
-            # behaviour-policy logprobs are kept — exactly what IS-based
-            # correctors need (new-policy logprobs are recomputed by the
-            # trainer's forward where the correctors consume them, never
-            # here) — and the sample is re-initiated at the current
-            # version, keeping the already-claimed freshness slot.
-            partial = np.asarray(result.tokens) if result.tokens is not None \
-                else np.zeros((0,), np.int32)
-            done = task.meta.get("resumed_tokens", np.zeros((0,), np.int32))
-            lps = task.meta.get("resumed_logprobs", np.zeros((0,), np.float32))
-            plp = np.asarray(result.logprobs) if result.logprobs is not None \
-                else np.zeros((0,), np.float32)
-            budget = task.meta.get("orig_max_new_tokens", task.max_new_tokens)
-            all_tokens = np.concatenate([done, partial])
-            all_lps = np.concatenate([lps, plp])
-            remaining = budget - len(all_tokens)
-            if remaining <= 0:
-                # the budget is already spent: resuming would decode >= 1
-                # extra token per resume cycle (budget overrun).  The sample
-                # is complete — publish it and drop any retained pages.
-                if result.resumable:
-                    self.proxy.release_retained(result.request_id)
-                self._publish(task, all_tokens, all_lps,
-                              result.version_started)
-                return
-            carried_meta = {
-                **{k: v for k, v in task.meta.items()
-                   if not k.startswith("resumed_")},
-                "orig_prompt_len": task.meta.get(
-                    "orig_prompt_len", len(np.asarray(task.prompt_tokens))),
-                "orig_max_new_tokens": budget,
-                "resumed_tokens": all_tokens,
-                "resumed_logprobs": all_lps,
-            }
-            if result.resumable:
-                # Paged engine retained the prefix's KV pages: resume
-                # re-attaches them — zero prefix recomputation.  The prompt
-                # stays the ORIGINAL prompt; the decoded prefix lives in
-                # the retained pages and in resumed_tokens meta.
-                resumed = RolloutTask(
-                    task_id=next_uid(), prompt_id=task.prompt_id,
-                    replica_idx=task.replica_idx,
-                    prompt_tokens=np.asarray(task.prompt_tokens, np.int32),
-                    max_new_tokens=remaining,
-                    group_id=task.group_id, meta=carried_meta)
-                self.proxy.generate_resumed(resumed, self.buffer.version,
-                                            self._on_result,
-                                            resume_from=result.request_id)
-                return
-            # Slot engine fallback: the decoded prefix becomes part of the
-            # prompt of a resumed task (KV recomputed at prefill).
-            resumed = RolloutTask(
-                task_id=next_uid(), prompt_id=task.prompt_id,
-                replica_idx=task.replica_idx,
-                prompt_tokens=np.concatenate(
-                    [np.asarray(task.prompt_tokens, np.int32),
-                     partial.astype(np.int32)]),
-                max_new_tokens=remaining,
-                group_id=task.group_id, meta=carried_meta)
-            self.proxy.generate(resumed, self.buffer.version, self._on_result)
+    def _submit(self, tasks: List[RolloutTask], version: int) -> None:
+        if not tasks:
             return
-        prefix_t = task.meta.get("resumed_tokens", np.zeros((0,), np.int32))
-        prefix_l = task.meta.get("resumed_logprobs", np.zeros((0,), np.float32))
-        self._publish(
-            task,
-            np.concatenate([prefix_t.astype(np.int32),
-                            np.asarray(result.tokens, np.int32)]),
-            np.concatenate([prefix_l.astype(np.float32),
-                            np.asarray(result.logprobs, np.float32)]),
-            result.version_started)
+        if not self.replicate and len(tasks) > 1:
+            # non-replicated group: ONE submission decoding k sequences
+            # (client expands it; COW group sharing where supported)
+            t0 = tasks[0]
+            handle = self.client.submit(RolloutTask(
+                task_id=t0.task_id, prompt_id=t0.prompt_id, replica_idx=0,
+                prompt_tokens=t0.prompt_tokens,
+                max_new_tokens=t0.max_new_tokens, group_id=t0.group_id,
+                meta={"num_return_sequences": len(tasks)}), version=version)
+        elif len(tasks) > 1:
+            handle = self.client.submit_group(tasks, version=version)
+        else:
+            handle = self.client.submit(tasks[0], version=version)
+        handle.add_done_callback(self._publish)
 
     def _produce_group(self) -> bool:
         """Claim up to group_size freshness slots and submit them as ONE
         group (prompt_stream repeats each prompt group_size times, so
         consecutive pulls are replicas of the same prompt).  A capacity
         pinch flushes a partial group — COW sharing degrades for that group,
-        correctness doesn't: assembly downstream keys on group_id, not on
-        submission batching.  Groups always cut at prompt boundaries: a pull
-        that crosses into the next prompt is held back to seed the next
-        group, so one partial flush never de-aligns the rest of the run.
-        Returns False to stop the producer."""
+        correctness doesn't: assembly downstream keys on group_id.  Groups
+        always cut at prompt boundaries (see _GroupAssembler).  Returns
+        False to stop the producer."""
         tasks: List[RolloutTask] = []
         version = 0
         exhausted = False
@@ -352,51 +356,22 @@ class RolloutProducer(threading.Thread):
                 if tasks:
                     break  # freshness capacity pinch: flush a partial group
                 continue
-            if self._held_prompt is not None:
-                pid, toks = self._held_prompt
-                self._held_prompt = None
-            else:
-                try:
-                    pid, toks = next(self.prompts)
-                except StopIteration:
-                    self.buffer.reclaim(1)
-                    exhausted = True
-                    break
-            if tasks and pid != tasks[0].prompt_id:
-                # crossed a prompt boundary (a previous partial flush left
-                # the stream mid-prompt): hold it for the next group.
-                self._held_prompt = (pid, toks)
+            status, pid, toks = self._groups.pull(
+                tasks[0].prompt_id if tasks else None)
+            if status != "ok":
                 self.buffer.reclaim(1)
+                exhausted = status == "exhausted"
                 break
             version = max(version, v)
             tasks.append(RolloutTask(task_id=next_uid(), prompt_id=pid,
                                      replica_idx=len(tasks),
                                      prompt_tokens=toks,
                                      max_new_tokens=self.max_new_tokens,
-                                     group_id=self._next_group_id(pid)))
-        if len(tasks) > 1:
-            self.proxy.generate_group(tasks, version, self._on_result)
-        elif tasks:
-            self.proxy.generate(tasks[0], version, self._on_result)
+                                     group_id=self._groups.group_id(pid)))
+        self._submit(tasks, version)
         return not exhausted
 
     def run(self) -> None:
-        if self.replicate and self.group_size > 1:
-            while not self._stop.is_set() and not self.buffer.closed:
-                if not self._produce_group():
-                    return
-            return
         while not self._stop.is_set() and not self.buffer.closed:
-            version = self.buffer.begin_generation(timeout=0.1)
-            if version is None:
-                continue
-            try:
-                pid, toks = next(self.prompts)
-            except StopIteration:
-                self.buffer.reclaim(1)
+            if not self._produce_group():
                 return
-            task = RolloutTask(task_id=next_uid(), prompt_id=pid,
-                               replica_idx=0, prompt_tokens=toks,
-                               max_new_tokens=self.max_new_tokens,
-                               group_id=self._next_group_id(pid))
-            self.proxy.generate(task, version, self._on_result)

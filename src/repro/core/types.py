@@ -27,6 +27,21 @@ class RolloutTask:
     meta: dict = dataclasses.field(default_factory=dict)
 
 
+def expand_replicas(task: "RolloutTask", n: int) -> "List[RolloutTask]":
+    """Expand a non-replicated group task (meta ``num_return_sequences=G``)
+    into G schedulable candidates sharing its group id.  Used by both the
+    LLMProxy (raw callers) and the RolloutClient (handle callers) — engines
+    decode one sequence per request, so the group is realized as a group
+    submission."""
+    meta = {k: v for k, v in task.meta.items() if k != "num_return_sequences"}
+    return [RolloutTask(task_id=task.task_id if i == 0 else next_uid(),
+                        prompt_id=task.prompt_id, replica_idx=i,
+                        prompt_tokens=task.prompt_tokens,
+                        max_new_tokens=task.max_new_tokens,
+                        group_id=task.group_id, meta=dict(meta))
+            for i in range(n)]
+
+
 @dataclasses.dataclass
 class Sample:
     """A finished (prompt, response) pair flowing through the SampleBuffer."""
@@ -95,6 +110,11 @@ class GenerationRequest:
     # set on a resumed request: the retained (aborted) request_id whose
     # KV pages the engine re-attaches instead of prefilling the prompt.
     resume_from: Optional[int] = None
+    # incremental-token subscriber: called from the proxy loop with the
+    # request's NEWLY decoded tokens (a delta, this leg only) whenever
+    # they grow.  None = no streaming overhead for this request.
+    stream_cb: Optional[Callable[[Any], None]] = None
+    streamed: int = 0                # tokens already pushed to stream_cb
 
 
 @dataclasses.dataclass
@@ -109,3 +129,8 @@ class GenerationResult:
     # ABORT with retained KV pages: the engine can resume this request
     # (by its request_id) without re-prefilling the decoded prefix.
     resumable: bool = False
+    # filled by the RolloutClient on handle resolution: one (version,
+    # num_tokens) entry per abort->resume leg the response was decoded
+    # under.  None for raw engine/proxy results (single-leg, version ==
+    # version_started).
+    legs: Optional[List[tuple]] = None

@@ -62,6 +62,11 @@ class PipelineSettings:
     # resubmits the growing conversation every turn, which the prefix cache
     # turns into incremental prefill (only the new suffix is computed).
     agentic_context: str = "turn"          # turn | full
+    # weight synchronization (async modes only; alpha=0 always uses the
+    # 3-phase suspend barrier): "overlapped" stages a per-proxy parameter
+    # swap between engine steps — rollout never stops; "blocking" is the
+    # 3-phase suspend -> update -> resume barrier.
+    weight_sync: str = "overlapped"        # overlapped | blocking
 
 
 def make_rollout_engine(api, params, s: PipelineSettings) -> RolloutEngine:
@@ -94,6 +99,11 @@ class RLVRPipeline:
     buffer: SampleBuffer
     producer: RolloutProducer
     controller: AsyncController
+
+    @property
+    def client(self):
+        """The handle-issuing RolloutClient over this pipeline's proxy."""
+        return self.producer.client
 
     def run(self, num_steps: int, timeout: float = 600.0):
         self.proxy.start()
@@ -135,7 +145,8 @@ def build_rlvr_pipeline(model_cfg: ModelConfig, s: PipelineSettings,
         max_new_tokens=s.max_new_tokens, reward_fn=reward_fn,
         replicate=s.is_num_return_sequences_expand)
     controller = AsyncController(buffer, [proxy], trainer.train_on_samples,
-                                 trainer.get_weights, alpha=alpha)
+                                 trainer.get_weights, alpha=alpha,
+                                 weight_sync=s.weight_sync)
     return RLVRPipeline(s, trainer, engine, proxy, buffer, producer, controller)
 
 
@@ -147,6 +158,11 @@ class AgenticPipeline:
     buffer: SampleBuffer
     pool: EnvManagerPool
     controller: AsyncController
+
+    @property
+    def client(self):
+        """The handle-issuing RolloutClient shared by the env-manager pool."""
+        return self.pool.client
 
     def run(self, num_steps: int, timeout: float = 600.0):
         self.proxy.start()
@@ -184,5 +200,6 @@ def build_agentic_pipeline(model_cfg: ModelConfig, s: PipelineSettings, *,
                           max_context_tokens=s.max_seq_len - s.max_new_tokens)
     controller = AsyncController(buffer, [proxy], trainer.train_on_samples,
                                  trainer.get_weights,
-                                 alpha=s.async_generation_ratio)
+                                 alpha=s.async_generation_ratio,
+                                 weight_sync=s.weight_sync)
     return AgenticPipeline(trainer, engine, proxy, buffer, pool, controller)

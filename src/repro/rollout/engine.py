@@ -151,6 +151,13 @@ class DecodeEngine:
         self.slots[slot] = st
         self.req_to_slot[request_id] = slot
 
+    def peek_tokens(self, request_id: int, start: int = 0) -> List[int]:
+        """Decoded tokens[start:] of an active request (streaming hook)."""
+        slot = self.req_to_slot.get(request_id)
+        if slot is None:
+            return []
+        return list(self.slots[slot].tokens[start:])
+
     def abort(self, request_id: int) -> GenerationResult:
         slot = self.req_to_slot.pop(request_id)
         st = self.slots.pop(slot)

@@ -502,6 +502,13 @@ class PagedDecodeEngine:
                                      pages[:full])
         self.pool.release(pages)
 
+    def peek_tokens(self, request_id: int, start: int = 0) -> List[int]:
+        """Decoded tokens[start:] of an active request (streaming hook)."""
+        slot = self.req_to_slot.get(request_id)
+        if slot is None:
+            return []
+        return list(self.slots[slot].tokens[start:])
+
     # --------------------------------------------------- retain / resume
     def abort(self, request_id: int, *, retain: bool = False) -> GenerationResult:
         slot = self.req_to_slot.pop(request_id)

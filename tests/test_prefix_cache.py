@@ -440,20 +440,34 @@ def test_multi_turn_incremental_prefill(setup):
 
 # ----------------------------------------------- rollout-path regressions
 class _RecordingProxy:
+    """Quacks like LLMProxy; captures callbacks so tests can inject abort
+    legs into the client-layer continuation."""
+
     def __init__(self):
         self.groups, self.singles, self.resumed, self.released = [], [], [], []
+        self.callbacks = {}
 
-    def generate_group(self, tasks, version, cb):
+    def generate_group(self, tasks, version, cb, **kw):
         self.groups.append(list(tasks))
+        for t in tasks:
+            self.callbacks[t.task_id] = cb
+        return [t.task_id for t in tasks]
 
-    def generate(self, task, version, cb):
+    def generate(self, task, version, cb, **kw):
         self.singles.append(task)
+        self.callbacks[task.task_id] = cb
+        return task.task_id
 
-    def generate_resumed(self, task, version, cb, resume_from):
+    def generate_resumed(self, task, version, cb, resume_from, **kw):
         self.resumed.append((task, resume_from))
+        self.callbacks[task.task_id] = cb
+        return task.task_id
 
     def release_retained(self, request_id):
         self.released.append(request_id)
+
+    def abort(self, request_id, retain=False):
+        pass
 
 
 def test_producer_fresh_group_uid_per_epoch():
@@ -496,9 +510,9 @@ def test_producer_partial_flush_keeps_one_uid():
     assert proxy.groups[1][0].group_id != gid_a
 
 
-def _abort_result(task, tokens, request_id=500, resumable=True):
+def _abort_result(task, tokens, resumable=True):
     return GenerationResult(
-        request_id=request_id, task=task,
+        request_id=task.task_id, task=task,
         tokens=np.asarray(tokens, np.int32),
         logprobs=np.zeros((len(tokens),), np.float32),
         version_started=0, aborted=True, partial=True, resumable=resumable)
@@ -507,7 +521,8 @@ def _abort_result(task, tokens, request_id=500, resumable=True):
 def test_budget_exhausted_abort_finishes_instead_of_resuming():
     """An abort arriving with the generation budget fully spent must publish
     the sample (clamped) and release the retained pages — resuming would
-    decode >= 1 extra token per cycle."""
+    decode >= 1 extra token per cycle.  The continuation lives in the
+    CLIENT layer now: the producer only sees the final handle result."""
     buf = SampleBuffer(batch_size=4, alpha=0)
     proxy = _RecordingProxy()
     prod = RolloutProducer(proxy, buf, iter([]), group_size=1,
@@ -516,34 +531,41 @@ def test_budget_exhausted_abort_finishes_instead_of_resuming():
     task = RolloutTask(task_id=next_uid(), prompt_id=0, replica_idx=0,
                        prompt_tokens=np.asarray([1, 2, 3], np.int32),
                        max_new_tokens=4, group_id=7)
-    prod._on_result(_abort_result(task, [5, 6, 7, 8]))    # budget spent
-    assert not proxy.resumed and not proxy.singles, "must not resume"
-    assert proxy.released == [500], "retained pages must be freed"
+    prod._submit([task], version=0)
+    proxy.callbacks[task.task_id](_abort_result(task, [5, 6, 7, 8]))
+    assert not proxy.resumed and len(proxy.singles) == 1, "must not resume"
+    assert proxy.released == [task.task_id], "retained pages must be freed"
     batch = buf.get_batch(1, block=False)
     assert list(batch[0].response_tokens) == [5, 6, 7, 8]
     assert len(batch[0].logprobs) == 4
 
 
 def test_budget_exhausted_multi_leg_resume_clamps():
-    """Second leg: 3 tokens already resumed + 2 more decoded overruns the
-    4-token budget — finish and clamp to exactly max_new_tokens."""
+    """Second leg: 3 tokens from leg one + 2 more decoded overruns the
+    4-token budget — finish and clamp to exactly max_new_tokens.  The
+    stitched state lives in the handle, not in task meta."""
     buf = SampleBuffer(batch_size=4, alpha=0)
     proxy = _RecordingProxy()
     prod = RolloutProducer(proxy, buf, iter([]), group_size=1,
                            max_new_tokens=4, reward_fn=lambda s: 1.0)
     buf.begin_generation()
-    task = RolloutTask(
-        task_id=next_uid(), prompt_id=0, replica_idx=0,
-        prompt_tokens=np.asarray([1, 2, 3], np.int32),
-        max_new_tokens=1, group_id=7,
-        meta={"orig_prompt_len": 3, "orig_max_new_tokens": 4,
-              "resumed_tokens": np.asarray([5, 6, 7], np.int32),
-              "resumed_logprobs": np.zeros((3,), np.float32)})
-    prod._on_result(_abort_result(task, [8, 9]))
-    assert not proxy.resumed
+    task = RolloutTask(task_id=next_uid(), prompt_id=0, replica_idx=0,
+                       prompt_tokens=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=4, group_id=7)
+    prod._submit([task], version=0)
+    proxy.callbacks[task.task_id](_abort_result(task, [5, 6, 7]))
+    (leg2, resume_from), = proxy.resumed       # transparent resume, leg 2
+    assert resume_from == task.task_id and leg2.max_new_tokens == 1
+    assert "resumed_tokens" not in leg2.meta, \
+        "no abort->resume meta threading outside the client layer"
+    proxy.callbacks[leg2.task_id](_abort_result(leg2, [8, 9]))
+    assert len(proxy.resumed) == 1, "budget spent: must not resume again"
+    assert leg2.task_id in proxy.released
     batch = buf.get_batch(1, block=False)
     assert list(batch[0].response_tokens) == [5, 6, 7, 8]
     assert len(batch[0].logprobs) == 4
+    assert batch[0].meta["legs"] == [(0, 3), (0, 1)], \
+        "per-leg tags are budget-clamped: they exactly segment the arrays"
 
 
 def test_partial_budget_abort_still_resumes_with_exact_remainder():
@@ -555,12 +577,40 @@ def test_partial_budget_abort_still_resumes_with_exact_remainder():
     task = RolloutTask(task_id=next_uid(), prompt_id=0, replica_idx=0,
                        prompt_tokens=np.asarray([1, 2, 3], np.int32),
                        max_new_tokens=6, group_id=7)
-    prod._on_result(_abort_result(task, [5, 6]))
+    prod._submit([task], version=0)
+    proxy.callbacks[task.task_id](_abort_result(task, [5, 6]))
     (resumed, resume_from), = proxy.resumed
-    assert resume_from == 500
+    assert resume_from == task.task_id
     assert resumed.max_new_tokens == 4, "remainder, never max(1, ...) padding"
-    assert resumed.meta["orig_max_new_tokens"] == 6
-    assert list(resumed.meta["resumed_tokens"]) == [5, 6]
+    # retained-page resume keeps the ORIGINAL prompt
+    np.testing.assert_array_equal(resumed.prompt_tokens, [1, 2, 3])
+
+
+def test_non_resumable_abort_reprefills_concatenated_prefix():
+    """Slot-engine fallback: no retained pages, so the continuation
+    re-prefills original prompt + decoded prefix as the new prompt."""
+    buf = SampleBuffer(batch_size=4, alpha=0)
+    proxy = _RecordingProxy()
+    prod = RolloutProducer(proxy, buf, iter([]), group_size=1,
+                           max_new_tokens=6, reward_fn=lambda s: 1.0)
+    buf.begin_generation()
+    task = RolloutTask(task_id=next_uid(), prompt_id=0, replica_idx=0,
+                       prompt_tokens=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=6, group_id=7)
+    prod._submit([task], version=0)
+    proxy.callbacks[task.task_id](_abort_result(task, [5, 6], resumable=False))
+    assert not proxy.resumed and len(proxy.singles) == 2
+    leg2 = proxy.singles[-1]
+    assert list(leg2.prompt_tokens) == [1, 2, 3, 5, 6]
+    assert leg2.max_new_tokens == 4
+    proxy.callbacks[leg2.task_id](GenerationResult(
+        request_id=leg2.task_id, task=leg2,
+        tokens=np.asarray([7, 8], np.int32),
+        logprobs=np.zeros((2,), np.float32), version_started=2))
+    batch = buf.get_batch(1, block=False)
+    assert list(batch[0].response_tokens) == [5, 6, 7, 8]
+    assert list(batch[0].prompt_tokens) == [1, 2, 3], "original prompt only"
+    assert batch[0].version_started == 2, "tagged with the final leg version"
 
 
 def test_collect_rollout_stream_exhaustion_returns_partial(setup):

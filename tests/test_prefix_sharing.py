@@ -329,7 +329,7 @@ def test_producer_groups_stay_prompt_aligned_after_partial_flush():
     assert proxy.groups == [[0, 0, 0]]
     buf.reclaim(3)
     prod._produce_group()   # last A, then B crosses the boundary -> held
-    assert proxy.singles == [0] and prod._held_prompt is not None
+    assert proxy.singles == [0] and prod._groups.held is not None
     buf.reclaim(1)
     prod._produce_group()                           # held B seeds the group
     assert proxy.groups[-1] == [1, 1, 1]

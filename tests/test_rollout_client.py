@@ -1,0 +1,612 @@
+"""RolloutClient handle/session API: proxy-owned abort→resume continuation,
+streaming, group handles, first-class agentic sessions, and the
+non-blocking (overlapped) weight-sync path.
+
+Acceptance-criteria coverage:
+
+* no ``resumed_tokens`` meta threading outside the client layer — resumes
+  are transparent and handles resolve exactly once;
+* an agentic EnvManager run on the paged engine resumes retained pages
+  across a weight sync (asserted via prefill counters);
+* ``weight_sync="overlapped"`` keeps rollout stepping during
+  ``update_weights`` (no suspend) with greedy parity vs blocking mode.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.llm_proxy import LLMProxy
+from repro.core.async_controller import AsyncController
+from repro.core.rollout_client import GroupHandle, RolloutClient
+from repro.core.sample_buffer import SampleBuffer, StaleSampleError
+from repro.core.scheduler import RolloutProducer, collect_rollout, expand_tasks
+from repro.core.types import GenerationResult, RolloutTask, next_uid
+from repro.models import get_api
+from repro.rollout.paged_engine import PagedDecodeEngine
+
+
+class FakeEngine:
+    """Deterministic engine: each request emits 0,1,2,... one per step."""
+
+    def __init__(self, slots=2):
+        self.slots = slots
+        self.active = {}
+        self.weights_version = 0
+        self.update_count = 0
+
+    @property
+    def num_free_slots(self):
+        return self.slots - len(self.active)
+
+    def add_request(self, rid, prompt, max_new):
+        assert self.num_free_slots > 0
+        self.active[rid] = {"left": int(max_new), "toks": []}
+
+    def peek_tokens(self, rid, start=0):
+        st = self.active.get(rid)
+        return [] if st is None else list(st["toks"][start:])
+
+    def abort(self, rid):
+        st = self.active.pop(rid)
+        return GenerationResult(request_id=rid, task=None,
+                                tokens=np.asarray(st["toks"], np.int32),
+                                logprobs=np.zeros(len(st["toks"]), np.float32),
+                                version_started=-1, aborted=True, partial=True)
+
+    def step(self):
+        time.sleep(0.001)
+        done = []
+        for rid, st in list(self.active.items()):
+            st["toks"].append(len(st["toks"]))
+            st["left"] -= 1
+            if st["left"] <= 0:
+                done.append((rid, np.asarray(st["toks"], np.int32),
+                             np.zeros(len(st["toks"]), np.float32)))
+                del self.active[rid]
+        return done
+
+    def update_weights(self, params):
+        self.weights_version = params
+        self.update_count += 1
+
+
+def _task(n=3, prompt=(1, 2)):
+    return RolloutTask(task_id=next_uid(), prompt_id=0, replica_idx=0,
+                       prompt_tokens=np.asarray(prompt, np.int32),
+                       max_new_tokens=n)
+
+
+# ------------------------------------------------------------------ handles
+def test_handle_result_blocks_until_done():
+    proxy = LLMProxy(FakeEngine()).start()
+    client = RolloutClient(proxy)
+    h = client.submit(_task(4))
+    res = h.result(timeout=10)
+    proxy.stop()
+    assert h.done() and not res.aborted
+    assert list(res.tokens) == [0, 1, 2, 3]
+    assert res.legs == [(0, 4)]
+    assert res.version_started == 0
+
+
+def test_handle_result_timeout():
+    proxy = LLMProxy(FakeEngine()).start()
+    client = RolloutClient(proxy)
+    h = client.submit(_task(100_000))
+    with pytest.raises(TimeoutError):
+        h.result(timeout=0.05)
+    h.abort()
+    proxy.stop()
+
+
+def test_handle_abort_cancels_and_resolves_aborted():
+    proxy = LLMProxy(FakeEngine(slots=1)).start()
+    client = RolloutClient(proxy)
+    h = client.submit(_task(100_000))
+    time.sleep(0.05)
+    h.abort()                       # retain=False => cancel for good
+    res = h.result(timeout=10)
+    proxy.stop()
+    assert res.aborted and res.partial
+    assert len(res.tokens) > 0
+    assert client.num_inflight == 0
+
+
+def test_abort_of_pending_unadmitted_request_still_resolves():
+    """Cancelling a handle whose request is queued behind a full engine
+    (never admitted) must still resolve it — the proxy fires an empty
+    aborted result for pending drops."""
+    proxy = LLMProxy(FakeEngine(slots=1)).start()
+    client = RolloutClient(proxy)
+    h1 = client.submit(_task(100_000))
+    h2 = client.submit(_task(10))          # queued: the only slot is busy
+    time.sleep(0.05)
+    h2.abort()
+    res2 = h2.result(timeout=10)
+    h1.abort()
+    h1.result(timeout=10)
+    proxy.stop()
+    assert res2.aborted and len(res2.tokens) == 0
+
+
+def test_handle_resolves_exactly_once_across_continuation_legs():
+    """abort_stale interrupts; the client transparently re-admits; the
+    handle's done-callback fires exactly once, with the stitched result."""
+    proxy = LLMProxy(FakeEngine(slots=1)).start()
+    client = RolloutClient(proxy, version_fn=lambda: 7)
+    h = client.submit(_task(50), version=0)
+    fired = []
+    h.add_done_callback(fired.append)
+    time.sleep(0.02)                # a few tokens decode
+    proxy.abort_stale(min_version=5)
+    res = h.result(timeout=10)
+    time.sleep(0.05)
+    proxy.stop()
+    assert len(fired) == 1 and fired[0] is res
+    assert not res.aborted
+    # FakeEngine restarts its counter per leg: stitched = 0..k-1, 0, 1, ...
+    toks = list(res.tokens)
+    assert len(toks) == 50 and toks[0] == 0 and 0 in toks[1:]
+    assert len(res.legs) >= 2, "multi-leg result"
+    assert res.legs[0][0] == 0 and res.legs[-1][0] == 7, \
+        "legs carry their policy versions"
+    assert res.version_started == 7, "final result tagged with last leg"
+    assert sum(n for _, n in res.legs) == 50
+    assert client.reprefills >= 1   # FakeEngine has no retain support
+
+
+def test_handle_abort_retain_readmits_transparently():
+    """handle.abort(retain=True) is an interrupt, not a cancel: the request
+    is re-admitted and the handle resolves once with the full response."""
+    proxy = LLMProxy(FakeEngine(slots=1)).start()
+    client = RolloutClient(proxy)
+    h = client.submit(_task(30))
+    time.sleep(0.02)
+    h.abort(retain=True)
+    res = h.result(timeout=10)
+    proxy.stop()
+    assert not res.aborted and len(res.tokens) == 30
+    assert len(res.legs) >= 2
+
+
+def test_group_handle_results():
+    proxy = LLMProxy(FakeEngine(slots=4)).start()
+    client = RolloutClient(proxy)
+    tasks = expand_tasks(0, np.asarray([1, 2], np.int32), 3, 5,
+                         replicate=True)
+    gh = client.submit_group(tasks)
+    results = gh.results(timeout=10)
+    proxy.stop()
+    assert gh.done() and len(results) == 3
+    assert all(list(r.tokens) == [0, 1, 2, 3, 4] for r in results)
+    assert len({r.task.replica_idx for r in results}) == 3
+
+
+def test_stream_yields_incremental_chunks():
+    proxy = LLMProxy(FakeEngine(slots=2)).start()
+    client = RolloutClient(proxy)
+    h = client.submit(_task(20), stream=True)
+    chunks = list(h.stream())
+    res = h.result(timeout=10)
+    proxy.stop()
+    assert len(chunks) >= 2, "tokens must arrive incrementally"
+    assert list(np.concatenate(chunks)) == list(res.tokens)
+
+
+def test_stream_after_resolution_returns_final_chunk():
+    proxy = LLMProxy(FakeEngine()).start()
+    client = RolloutClient(proxy)
+    h = client.submit(_task(4))
+    h.result(timeout=10)
+    chunks = list(h.stream())
+    proxy.stop()
+    assert len(chunks) == 1 and list(chunks[0]) == [0, 1, 2, 3]
+
+
+def test_stream_after_resolution_clamps_to_budget_and_consumes():
+    """Regression: a budget-overrun multi-leg handle must stream exactly
+    the clamped tokens, once (second stream() yields nothing new)."""
+    class _P:
+        def __init__(self):
+            self.cbs = {}
+
+        def generate(self, task, version, cb, **kw):
+            self.cbs[task.task_id] = cb
+            return task.task_id
+
+        def generate_resumed(self, task, version, cb, resume_from, **kw):
+            self.cbs[task.task_id] = cb
+            return task.task_id
+
+        def release_retained(self, rid):
+            pass
+
+    p = _P()
+    client = RolloutClient(p)
+    t = _task(4)
+    h = client.submit(t, version=0)
+    p.cbs[t.task_id](GenerationResult(
+        request_id=t.task_id, task=t, tokens=np.asarray([5, 6, 7], np.int32),
+        logprobs=np.zeros(3, np.float32), version_started=0, aborted=True,
+        partial=True, resumable=True))
+    leg2_rid = next(r for r in p.cbs if r != t.task_id)
+    p.cbs[leg2_rid](GenerationResult(
+        request_id=leg2_rid, task=t, tokens=np.asarray([8, 9], np.int32),
+        logprobs=np.zeros(2, np.float32), version_started=0, aborted=True,
+        partial=True, resumable=True))          # 5 decoded > budget 4
+    res = h.result(0)
+    assert list(res.tokens) == [5, 6, 7, 8]
+    assert [list(c) for c in h.stream()] == [[5, 6, 7, 8]]
+    assert list(h.stream()) == [], "stream is consumed, not replayed"
+
+
+def test_stream_rejected_for_expanded_tasks():
+    client = RolloutClient(proxy=None)
+    task, = expand_tasks(0, np.asarray([1, 2], np.int32), 3, 4,
+                         replicate=False)
+    with pytest.raises(ValueError, match="stream"):
+        client.submit(task, stream=True)
+    proxy = LLMProxy(FakeEngine(slots=4))
+    with pytest.raises(ValueError, match="stream_cb"):
+        proxy.generate(task, 0, lambda r: None, stream_cb=lambda t: None)
+
+
+# --------------------------------------------- num_return_sequences parity
+def test_client_expands_num_return_sequences_to_group_handle():
+    proxy = LLMProxy(FakeEngine(slots=4)).start()
+    client = RolloutClient(proxy)
+    task, = expand_tasks(0, np.asarray([1, 2], np.int32), 3, 4,
+                         replicate=False)
+    assert task.meta["num_return_sequences"] == 3
+    h = client.submit(task)
+    assert isinstance(h, GroupHandle)
+    results = h.results(timeout=10)
+    proxy.stop()
+    assert len(results) == 3
+    assert len({r.task.task_id for r in results}) == 3
+    assert all(r.task.group_id == task.group_id for r in results)
+    assert all("num_return_sequences" not in r.task.meta for r in results)
+
+
+def test_proxy_honors_num_return_sequences():
+    """The raw proxy also expands the non-replicated encoding: one ADD
+    yields G results keyed to one group id."""
+    proxy = LLMProxy(FakeEngine(slots=4)).start()
+    task, = expand_tasks(0, np.asarray([1, 2], np.int32), 3, 4,
+                         replicate=False)
+    results = []
+    lock = threading.Lock()
+
+    def cb(r):
+        with lock:
+            results.append(r)
+
+    rids = proxy.generate(task, version=0, callback=cb)
+    assert isinstance(rids, list) and len(rids) == 3
+    deadline = time.monotonic() + 10
+    while len(results) < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    proxy.stop()
+    assert len(results) == 3
+    assert {r.task.replica_idx for r in results} == {0, 1, 2}
+    assert all(r.task.group_id == task.group_id for r in results)
+
+
+@pytest.mark.timeout(240)
+def test_non_replicate_end_to_end_parity_paged():
+    """replicate=False must yield exactly G samples per prompt through the
+    paged engine, byte-identical (greedy) to the replicate=True path."""
+    cfg = tiny("qwen3-4b", vocab_size=32)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    prompts = [(i, rng.integers(1, 30, 6).astype(np.int32)) for i in range(2)]
+
+    def run(replicate):
+        eng = PagedDecodeEngine(api, params, num_slots=8, max_total_len=32,
+                                page_size=8, prefill_chunk=8, eos_id=99,
+                                temperature=0.0)
+        proxy = LLMProxy(eng).start()
+        out = collect_rollout(proxy, iter(prompts), num_groups=2,
+                              group_size=3, max_new_tokens=4,
+                              reward_fn=lambda s: 1.0, replicate=replicate,
+                              timeout=120)
+        proxy.stop()
+        return out
+
+    a, b = run(True), run(False)
+    assert len(a) == len(b) == 6
+    for out in (a, b):
+        gids = {}
+        for s in out:
+            gids.setdefault(s.group_id, []).append(s)
+        assert all(len(g) == 3 for g in gids.values()), \
+            "every group must assemble exactly G samples"
+    key = lambda s: (s.prompt_id, s.replica_idx)
+    for sa, sb in zip(sorted(a, key=key), sorted(b, key=key)):
+        assert list(sa.response_tokens) == list(sb.response_tokens)
+
+
+# ------------------------------------------------------ paged continuation
+@pytest.fixture(scope="module")
+def paged_setup():
+    cfg = tiny("qwen3-4b", vocab_size=32)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _paged(api, params, **kw):
+    base = dict(num_slots=4, max_total_len=64, page_size=8, prefill_chunk=8,
+                eos_id=99, temperature=0.0)
+    base.update(kw)
+    return PagedDecodeEngine(api, params, **base)
+
+
+@pytest.mark.timeout(240)
+def test_paged_resume_across_weight_sync_zero_reprefill(paged_setup):
+    """A client-submitted request aborted-with-retain across a staged
+    weight sync re-attaches its pages: ZERO additional prefill tokens and
+    the greedy output equals the uninterrupted run."""
+    cfg, api, params = paged_setup
+    prompt = np.asarray([2, 9, 4, 3], np.int32)
+    budget = 40
+
+    ref = _paged(api, params)
+    ref.add_request(0, prompt, budget)
+    base = None
+    while base is None:
+        for rid, toks, _ in ref.step():
+            base = list(toks)
+
+    eng = _paged(api, params)
+    proxy = LLMProxy(eng).start()
+    client = RolloutClient(proxy, version_fn=lambda: 1)
+    h = client.submit(_task(budget, prompt), version=0)
+    deadline = time.monotonic() + 30
+    while eng.total_tokens_decoded < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    prefill_before = eng.total_prefill_tokens
+    ev = proxy.update_weights_async(params)      # overlapped sync, no suspend
+    assert ev.wait(30)
+    proxy.abort_stale(min_version=1, retain=True)
+    res = h.result(timeout=60)
+    proxy.stop()
+    assert not res.aborted
+    assert list(res.tokens) == base, "resume must preserve greedy output"
+    assert client.resumes == 1 and client.reprefills == 0
+    assert eng.total_prefill_tokens == prefill_before, \
+        "retained-page resume must not re-prefill anything"
+    assert proxy.suspend_count == 0
+    assert not eng.retained
+    eng.audit_pages()
+
+
+@pytest.mark.timeout(240)
+def test_env_manager_session_resumes_across_weight_sync(paged_setup):
+    """Acceptance: an agentic EnvManager run on the paged engine resumes
+    retained pages across a weight sync — the trajectory survives, nothing
+    re-prefills, and the turn's legs span both policy versions."""
+    from repro.core.env_manager import EnvManagerPool
+    from repro.envs.base import BaseEnv
+
+    class OneStepEnv(BaseEnv):
+        def __init__(self, env_id):
+            pass
+
+        def reset(self):
+            return np.asarray([11, 12, 13, 14, 15, 16, 17, 18], np.int32)
+
+        def step(self, action):
+            return np.asarray([21] * 8, np.int32), 1.0, True, {}
+
+    cfg, api, params = paged_setup
+    eng = _paged(api, params, num_slots=2)
+    proxy = LLMProxy(eng).start()
+    buf = SampleBuffer(batch_size=1, alpha=4)
+    pool = EnvManagerPool(OneStepEnv, proxy, buf, num_env_groups=1,
+                          group_size=1, max_steps=2, max_new_tokens=32,
+                          target_trajectories=1)
+    pool.start()
+    deadline = time.monotonic() + 60
+    while eng.total_tokens_decoded < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert eng.total_tokens_decoded >= 2, "turn never started decoding"
+    prefill_before = eng.total_prefill_tokens
+    # the controller's overlapped sync: staged swap, version++, abort stale
+    ev = proxy.update_weights_async(params)
+    assert ev.wait(30)
+    new_v = buf.advance_version()
+    proxy.abort_stale(min_version=new_v, retain=True)
+    batch = buf.get_batch(1, timeout=120)
+    pool.stop()
+    proxy.stop()
+    assert len(batch) == 1, "trajectory must survive the weight sync"
+    assert pool.client.resumes >= 1, "retained pages must be re-attached"
+    assert eng.total_prefill_tokens == prefill_before, \
+        "the in-flight turn must not re-prefill after the sync"
+    mgr = pool.managers[0]
+    assert mgr.client is pool.client
+
+
+# --------------------------------------------------------------- sessions
+def test_session_context_and_version_tags():
+    proxy = LLMProxy(FakeEngine(slots=2)).start()
+    versions = [3]
+    client = RolloutClient(proxy, version_fn=lambda: versions[0])
+    sess = client.session(max_new_tokens=4, context_mode="full",
+                          max_context_tokens=48)
+    r1 = sess.turn(np.asarray([5, 6], np.int32)).result(timeout=10)
+    versions[0] = 4
+    r2 = sess.turn(np.asarray([7, 8], np.int32)).result(timeout=10)
+    proxy.stop()
+    assert sess.turn_versions == [3, 4]
+    assert len(sess.context) == 4            # obs, action, obs, action
+    np.testing.assert_array_equal(sess.context[0], [5, 6])
+    np.testing.assert_array_equal(sess.context[1], r1.tokens)
+    # turn 2's prompt is the full conversation + the new observation
+    assert r2.task.meta["turn"] == 1
+    np.testing.assert_array_equal(
+        r2.task.prompt_tokens,
+        np.concatenate([np.asarray([5, 6]), np.asarray(r1.tokens),
+                        np.asarray([7, 8])]))
+
+
+def test_session_validation():
+    client = RolloutClient(proxy=None)
+    with pytest.raises(ValueError, match="context_mode"):
+        client.session(max_new_tokens=4, context_mode="bogus")
+    with pytest.raises(ValueError, match="max_context_tokens"):
+        client.session(max_new_tokens=4, context_mode="full")
+
+
+def test_session_turn_mode_prompt_is_bare_observation():
+    proxy = LLMProxy(FakeEngine(slots=2)).start()
+    client = RolloutClient(proxy)
+    sess = client.session(max_new_tokens=3, context_mode="turn")
+    sess.turn(np.asarray([5, 6], np.int32)).result(timeout=10)
+    r2 = sess.turn(np.asarray([9], np.int32)).result(timeout=10)
+    proxy.stop()
+    np.testing.assert_array_equal(r2.task.prompt_tokens, [9])
+    assert len(sess.context) == 4, "context is tracked even in turn mode"
+
+
+# ------------------------------------------------- overlapped weight sync
+def test_overlapped_weight_sync_never_suspends_and_keeps_stepping():
+    eng = FakeEngine(slots=2)
+    proxy = LLMProxy(eng).start()
+    client = RolloutClient(proxy)
+    h = client.submit(_task(100_000))
+    time.sleep(0.05)
+    steps_before = proxy.steps_executed
+    ev = proxy.update_weights_async("v1")
+    assert ev.wait(10)
+    time.sleep(0.05)
+    steps_after = proxy.steps_executed
+    h.abort()
+    proxy.stop()
+    assert eng.weights_version == "v1"
+    assert proxy.suspend_count == 0, "overlapped sync must not suspend"
+    assert steps_after > steps_before, "rollout must keep advancing"
+    assert proxy.staged_weight_updates == 1
+
+
+def _controller_fixture(weight_sync, alpha=1):
+    eng = FakeEngine(slots=8)
+    proxy = LLMProxy(eng).start()
+    buf = SampleBuffer(batch_size=4, alpha=alpha)
+
+    def prompts():
+        i = 0
+        while True:
+            yield i, np.asarray([1, 2], np.int32)
+            i += 1
+
+    prod = RolloutProducer(proxy, buf, prompts(), group_size=1,
+                           max_new_tokens=3, reward_fn=lambda s: 1.0)
+    prod.start()
+    ctrl = AsyncController(buf, [proxy], lambda batch: {},
+                           lambda: "weights", alpha=alpha,
+                           weight_sync=weight_sync)
+    return eng, proxy, buf, prod, ctrl
+
+
+@pytest.mark.parametrize("weight_sync", ["blocking", "overlapped"])
+def test_controller_weight_sync_modes(weight_sync):
+    eng, proxy, buf, prod, ctrl = _controller_fixture(weight_sync)
+    try:
+        stats = ctrl.train(3, timeout=60)
+    finally:
+        prod.stop()
+        buf.close()
+        proxy.stop()
+    assert len(stats) == 3
+    assert all(s.staleness_max <= 1 for s in stats), \
+        "staleness accounting must hold in both modes"
+    assert eng.update_count == 3 and eng.weights_version == "weights"
+    if weight_sync == "overlapped":
+        assert proxy.suspend_count == 0, "no global suspend barrier"
+    else:
+        assert proxy.suspend_count == 3
+
+
+def test_controller_rejects_unknown_weight_sync():
+    with pytest.raises(ValueError, match="weight_sync"):
+        AsyncController(SampleBuffer(1), [], lambda b: {}, lambda: None,
+                        weight_sync="bogus")
+
+
+@pytest.mark.timeout(240)
+def test_overlapped_vs_blocking_greedy_parity(paged_setup):
+    """Same params swapped mid-flight by either mode: greedy outputs are
+    identical (the staged swap happens between engine steps, exactly like
+    the barrier — it just doesn't stop the world)."""
+    cfg, api, params = paged_setup
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
+
+    def run(mode):
+        eng = _paged(api, params, num_slots=2)
+        proxy = LLMProxy(eng).start()
+        client = RolloutClient(proxy)
+        h = client.submit(_task(24, prompt))
+        deadline = time.monotonic() + 30
+        while eng.total_tokens_decoded < 2 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        if mode == "blocking":
+            proxy.suspend()
+            proxy.update_weights(params)
+            proxy.resume()
+        else:
+            assert proxy.update_weights_async(params).wait(30)
+        res = h.result(timeout=60)
+        proxy.stop()
+        return list(res.tokens), proxy.suspend_count
+
+    toks_b, susp_b = run("blocking")
+    toks_o, susp_o = run("overlapped")
+    assert toks_b == toks_o
+    assert susp_b == 1 and susp_o == 0
+
+
+# ------------------------------------------------------- buffer lock fix
+def test_get_batch_strict_check_uses_consume_time_version():
+    """Regression (lock-dropped staleness check): a concurrent
+    advance_version between consumption and the strict re-check must not
+    fail a batch that was admissible when consumed.  Eviction by an
+    advance that wins the race (TimeoutError) is fine; StaleSampleError
+    for an admissible batch is the bug."""
+    from repro.core.types import Sample
+
+    for _ in range(30):
+        buf = SampleBuffer(batch_size=1, alpha=0, strict=True)
+        buf.try_begin_generation()
+        buf.put(Sample(sample_id=0, prompt_id=0, replica_idx=0,
+                       prompt_tokens=np.zeros(1, np.int32),
+                       response_tokens=np.zeros(1, np.int32),
+                       logprobs=np.zeros(1, np.float32), version_started=0))
+        start = threading.Barrier(3)
+        errors = []
+
+        def consume():
+            start.wait()
+            try:
+                buf.get_batch(1, timeout=0.05)
+            except StaleSampleError as e:
+                errors.append(e)
+            except TimeoutError:
+                pass               # advance won the race and evicted: fine
+
+        def advance():
+            start.wait()
+            buf.advance_version()
+
+        t1 = threading.Thread(target=consume)
+        t2 = threading.Thread(target=advance)
+        t1.start(), t2.start()
+        start.wait()
+        t1.join(), t2.join()
+        assert not errors, f"admissible batch failed the strict check: {errors}"

@@ -113,33 +113,30 @@ def jax_leaves(tree):
 
 
 def test_abort_resume_preserves_partial_response():
-    """ABORT -> resume: the partial response survives as a prompt-prefix and
-    the published sample stitches tokens+logprobs back together (no waste)."""
+    """ABORT -> resume: the partial response survives and the published
+    sample stitches tokens+logprobs back together (no waste).  The
+    continuation is owned by the RolloutClient — the producer is a thin
+    handle consumer and never sees the intermediate legs."""
     import numpy as np
 
     from repro.core.llm_proxy import LLMProxy
     from repro.core.sample_buffer import SampleBuffer
     from repro.core.scheduler import RolloutProducer
-    from repro.core.types import RolloutTask, next_uid
     from test_proxy_engine import FakeEngine
 
     eng = FakeEngine(slots=1)
     proxy = LLMProxy(eng).start()
     buffer = SampleBuffer(batch_size=1, alpha=3)
-
+    prompt = np.asarray([7, 8], np.int32)
     producer = RolloutProducer(
-        proxy, buffer, iter([]), group_size=1, max_new_tokens=40,
+        proxy, buffer, iter([(0, prompt)]), group_size=1, max_new_tokens=40,
         reward_fn=lambda s: 1.0)
-    # hand-feed one task through the producer's callback machinery
-    v = buffer.try_begin_generation()
-    task = RolloutTask(task_id=next_uid(), prompt_id=0, replica_idx=0,
-                       prompt_tokens=np.asarray([7, 8], np.int32),
-                       max_new_tokens=40)
-    proxy.generate(task, v, producer._on_result)
+    producer.start()
     import time
     time.sleep(0.012)             # let a few (not all 40) tokens decode
     proxy.abort_stale(min_version=99)  # force ABORT of the in-flight request
     batch = buffer.get_batch(1, timeout=10)
+    producer.stop()
     proxy.stop()
     if proxy.requests_aborted == 0:
         import pytest
@@ -148,9 +145,10 @@ def test_abort_resume_preserves_partial_response():
     # FakeEngine emits 0,1,2,...: a resumed request restarts its counter, so
     # a successful resume shows the stitched prefix then a fresh 0,1,2,...
     toks = list(np.asarray(s.response_tokens))
-    assert len(toks) == len(np.asarray(s.logprobs))
+    assert len(toks) == len(np.asarray(s.logprobs)) == 40
     assert toks[0] == 0 and 0 in toks[1:], "expected stitched partial + resume"
     assert list(np.asarray(s.prompt_tokens)) == [7, 8]  # original prompt only
+    assert len(s.meta["legs"]) >= 2, "per-leg version tags on the sample"
 
 
 def test_multi_proxy_fleet():
