@@ -1,0 +1,178 @@
+"""Queue scheduling vs static partitioning on a multi-replica rollout fleet.
+
+The paper's §4.3 claim: dispatching each prompt individually to the
+least-loaded inference worker (queue scheduling) eliminates the long-tail
+straggler problem of statically partitioning the batch across workers.
+This benchmark reproduces that comparison on the REAL rollout stack — N
+``PagedDecodeEngine`` + ``LLMProxy`` replicas, the submission path going
+through ``ProxyRouter`` (queue scheduling) or a fixed round-robin
+pre-assignment (static partitioning) — under a long-tail mixed-length
+workload (a few generations are ~7x longer than the median).
+
+Replicas are driven in deterministic lockstep via ``LLMProxy.step_once``:
+every round, each replica with admitted work executes exactly one fused
+engine step.  Makespan in *rounds* is therefore the fleet's parallel
+hardware time (what wall-clock would measure on N real accelerators),
+independent of how many CPU cores this host happens to have.  Greedy
+decoding additionally lets us assert the outputs are placement-invariant.
+
+Emits BENCH_queue_scheduling.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, flush_json
+from repro.configs import REGISTRY
+from repro.core.llm_proxy import LLMProxy
+from repro.core.router import ProxyRouter
+from repro.core.rollout_client import RolloutClient
+from repro.core.types import RolloutTask, next_uid
+from repro.models import get_api
+from repro.rollout.paged_engine import PagedDecodeEngine
+
+NUM_REQUESTS = 48
+SLOTS_PER_REPLICA = 2
+PAGE_SIZE = 16
+PREFILL_CHUNK = 16
+MAX_TOTAL_LEN = 80
+# long-tail budget mix (median 2, tail 24x): the tail carries ~75% of the
+# total decode work (the paper's think-mode regime), so which replica a
+# tail request queues on decides the makespan — the regime where dispatch
+# policy matters (§4.3).  The queue is deep relative to the slots (48
+# requests on 2-slot replicas) so placement determines waiting time, not
+# just decode time.
+BUDGETS = [2] * 32 + [8] * 8 + [48] * 8
+PROMPT_LENGTHS = [8, 12, 16, 20]
+SEEDS = (0, 1, 2)
+
+
+def _workload(seed: int):
+    rng = np.random.default_rng(seed)
+    budgets = np.array(BUDGETS)
+    rng.shuffle(budgets)
+    prompts = [rng.integers(1, 60, PROMPT_LENGTHS[i % len(PROMPT_LENGTHS)])
+               .astype(np.int32) for i in range(NUM_REQUESTS)]
+    return [(prompts[i], int(budgets[i])) for i in range(NUM_REQUESTS)]
+
+
+def _fleet(api, params, n):
+    engines = [PagedDecodeEngine(api, params, num_slots=SLOTS_PER_REPLICA,
+                                 max_total_len=MAX_TOTAL_LEN,
+                                 page_size=PAGE_SIZE,
+                                 prefill_chunk=PREFILL_CHUNK, eos_id=9999,
+                                 temperature=0.0)
+               for _ in range(n)]
+    return engines, [LLMProxy(e, name=f"bench_proxy_{i}")
+                     for i, e in enumerate(engines)]
+
+
+def _run(api, params, workload, n, *, mode: str):
+    """Run the workload under one placement policy, driving the fleet in
+    lockstep.  ``static`` pre-partitions the batch round-robin across the
+    replicas (the baseline the paper's queue scheduling replaces);
+    ``queue`` dispatches each prompt through the ProxyRouter only when the
+    fleet has a free slot, landing it on the least-loaded replica AT THAT
+    MOMENT — the straggler replica chewing on long-tail generations keeps
+    its slots busy and stops receiving new work.  Returns
+    (makespan_rounds, per-replica busy steps, wall, outputs by index)."""
+    engines, proxies = _fleet(api, params, n)
+    handles = {}
+    rounds = 0
+    busy = [0] * n
+    t0 = time.perf_counter()
+    if mode == "queue":
+        client = RolloutClient(ProxyRouter(proxies))
+        todo = list(enumerate(workload))
+        while todo or not all(h.done() for h in handles.values()):
+            # dispatch gate: keep at most one request per fleet slot in
+            # flight, so every placement sees the loads as they are NOW
+            submitted = False
+            while todo and (sum(not h.done() for h in handles.values())
+                            < n * SLOTS_PER_REPLICA):
+                i, (prompt, budget) = todo.pop(0)
+                handles[i] = client.submit(RolloutTask(
+                    task_id=next_uid(), prompt_id=i, replica_idx=0,
+                    prompt_tokens=prompt, max_new_tokens=budget))
+                submitted = True
+            stepped = False
+            for j, p in enumerate(proxies):
+                if p.step_once():
+                    busy[j] += 1
+                    stepped = True
+            assert stepped or submitted, \
+                "fleet idle with undone handles (lost request?)"
+            rounds += 1
+    else:                           # static round-robin partitioning
+        clients = [RolloutClient(p) for p in proxies]
+        for i, (prompt, budget) in enumerate(workload):
+            handles[i] = clients[i % n].submit(RolloutTask(
+                task_id=next_uid(), prompt_id=i, replica_idx=0,
+                prompt_tokens=prompt, max_new_tokens=budget))
+        while not all(h.done() for h in handles.values()):
+            stepped = False
+            for j, p in enumerate(proxies):
+                if p.step_once():
+                    busy[j] += 1
+                    stepped = True
+            assert stepped, "fleet idle with undone handles (lost request?)"
+            rounds += 1
+    wall = time.perf_counter() - t0
+    for e in engines:
+        e.audit_pages()
+    outputs = {i: list(h.result(0).tokens) for i, h in handles.items()}
+    return rounds, busy, wall, outputs
+
+
+def run() -> None:
+    cfg = dataclasses.replace(
+        REGISTRY["qwen3-4b"].smoke(), num_layers=2, d_model=128, num_heads=4,
+        head_dim=32, num_kv_heads=2, d_ff=256, vocab_size=64)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+
+    results = {"workload": {
+        "num_requests": NUM_REQUESTS, "budgets": BUDGETS,
+        "prompt_lengths": PROMPT_LENGTHS, "slots_per_replica":
+        SLOTS_PER_REPLICA, "seeds": list(SEEDS),
+    }}
+    for n in (2, 4, 8):
+        static_rounds, queue_rounds = [], []
+        imbalance = {"static": [], "queue": []}
+        identical = True
+        for seed in SEEDS:
+            workload = _workload(seed)
+            rs, busy_s, _, out_s = _run(api, params, workload, n,
+                                        mode="static")
+            rq, busy_q, _, out_q = _run(api, params, workload, n,
+                                        mode="queue")
+            static_rounds.append(rs)
+            queue_rounds.append(rq)
+            imbalance["static"].append(max(busy_s) / max(1, min(busy_s)))
+            imbalance["queue"].append(max(busy_q) / max(1, min(busy_q)))
+            identical &= out_s == out_q
+        mean_s = float(np.mean(static_rounds))
+        mean_q = float(np.mean(queue_rounds))
+        speedup = mean_s / mean_q
+        results[f"replicas_{n}"] = {
+            "static_makespan_rounds": static_rounds,
+            "queue_makespan_rounds": queue_rounds,
+            "static_makespan_mean": mean_s,
+            "queue_makespan_mean": mean_q,
+            "queue_over_static_speedup": speedup,
+            "busy_imbalance_static": imbalance["static"],
+            "busy_imbalance_queue": imbalance["queue"],
+            "outputs_identical": bool(identical),
+        }
+        emit(f"queue_scheduling.n{n}.static_makespan_rounds", mean_s, "")
+        emit(f"queue_scheduling.n{n}.queue_makespan_rounds", mean_q,
+             f"speedup={speedup:.2f} identical={identical}")
+    flush_json("BENCH_queue_scheduling.json", results)
+
+
+if __name__ == "__main__":
+    run()

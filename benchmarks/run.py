@@ -11,7 +11,7 @@ import argparse
 import time
 
 from benchmarks import (bench_engine, bench_paged_engine, bench_prefix_cache,
-                        bench_prefix_sharing,
+                        bench_prefix_sharing, bench_queue_scheduling,
                         fig1b_throughput_scaling,
                         fig3_allocation_and_rollout, fig4_offpolicy_stability,
                         fig7_queue_scheduling, fig8_prompt_replication,
@@ -33,6 +33,7 @@ MODULES = [
     ("paged_engine", bench_paged_engine),
     ("prefix_sharing", bench_prefix_sharing),
     ("prefix_cache", bench_prefix_cache),
+    ("queue_scheduling", bench_queue_scheduling),
     ("roofline", roofline),
 ]
 

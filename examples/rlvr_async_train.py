@@ -29,14 +29,19 @@ from repro.launch.pipeline import PipelineSettings, build_rlvr_pipeline
 from repro.launch.train import PRESETS, build_model_cfg
 
 
-def run_mode(alpha, steps, preset, seed=0, weight_sync="overlapped"):
+def run_mode(alpha, steps, preset, seed=0, weight_sync="overlapped",
+             replicas=1):
     model = build_model_cfg("qwen3-4b", preset)
     task = ArithmeticTask(max_operand=4, ops=("+",), seed=seed)
     settings = PipelineSettings(
         async_generation_ratio=alpha, pg_variant="tis",
         rollout_batch_size=16, num_return_sequences_in_group=8,
         num_slots=16, max_new_tokens=4, max_seq_len=16,
-        weight_sync=weight_sync, learning_rate=5e-3, seed=seed)
+        weight_sync=weight_sync, learning_rate=5e-3, seed=seed,
+        # --replicas N shards the 16 slots across N proxy/engine replicas
+        # behind a ProxyRouter (queue scheduling + co-located groups);
+        # N=1 is the plain single-proxy path.
+        num_rollout_replicas=replicas)
     pipe = build_rlvr_pipeline(model, settings, task=task)
     t0 = time.time()
     stats = pipe.run(num_steps=steps, timeout=1800)
@@ -51,11 +56,14 @@ def main():
     ap.add_argument("--preset", default="demo", choices=sorted(PRESETS))
     ap.add_argument("--weight-sync", default="overlapped",
                     choices=["overlapped", "blocking"])
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="rollout fleet size (num_rollout_replicas)")
     args = ap.parse_args()
 
     for name, alpha in (("sync (alpha=0)", 0), ("async (alpha=2)", 2)):
         rewards, wall, stale = run_mode(alpha, args.steps, args.preset,
-                                        weight_sync=args.weight_sync)
+                                        weight_sync=args.weight_sync,
+                                        replicas=args.replicas)
         k = max(2, len(rewards) // 5)
         print(f"{name:16s}: {wall:6.1f}s  reward {np.mean(rewards[:k]):.3f} "
               f"-> {np.mean(rewards[-k:]):.3f}  max_staleness={stale}")

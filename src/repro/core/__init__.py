@@ -10,6 +10,7 @@ from repro.core.sample_buffer import SampleBuffer, StaleSampleError  # noqa: F40
 from repro.core.llm_proxy import LLMProxy, InferenceEngine  # noqa: F401
 from repro.core.rollout_client import (  # noqa: F401
     GenerationHandle, GroupHandle, RolloutClient, Session)
+from repro.core.router import MultiEvent, ProxyRouter  # noqa: F401
 from repro.core.async_controller import AsyncController, StepStats  # noqa: F401
 from repro.core.types import (  # noqa: F401
     GenerationRequest, GenerationResult, RolloutTask, Sample, Trajectory, Turn)

@@ -82,11 +82,59 @@ class LLMProxy:
         self._thread: Optional[threading.Thread] = None
         self._idle_sleep = 0.0005
         self._num_streaming = 0          # active requests with a stream_cb
+        # cheap load metric for fleet routers: outstanding decode work in
+        # tokens (unprefilled prompt + unspent budget), updated at SUBMIT
+        # time on the caller thread so a router sees its own placements
+        # immediately (the command queue only drains on the loop thread).
+        self._load_lock = threading.Lock()
+        self._load_by_rid: Dict[int, int] = {}
+        self._outstanding_tokens = 0
         self.steps_executed = 0
         self.requests_completed = 0
         self.requests_aborted = 0
         self.suspend_count = 0
         self.staged_weight_updates = 0   # non-blocking (overlapped) swaps
+
+    # ------------------------------------------------------------- load
+    def _load_add(self, request_id: int, tokens: int) -> None:
+        with self._load_lock:
+            self._load_by_rid[request_id] = tokens
+            self._outstanding_tokens += tokens
+
+    def _load_drop(self, request_id: int) -> None:
+        with self._load_lock:
+            self._outstanding_tokens -= self._load_by_rid.pop(request_id, 0)
+
+    def _load_add_group(self, reqs: List[GenerationRequest]) -> None:
+        """COW sharing prefills the prompt once: charge it to the leader
+        only, so fleet load stays comparable across engine types."""
+        for i, r in enumerate(reqs):
+            self._load_add(r.request_id, r.task.max_new_tokens
+                           + (len(r.task.prompt_tokens) if i == 0 else 0))
+
+    def load(self) -> int:
+        """Outstanding decode work admitted to this proxy, in tokens
+        (prompt prefill + generation budget of every pending/active
+        request).  Routers dispatch each request to the least-loaded
+        replica (queue scheduling)."""
+        with self._load_lock:
+            return self._outstanding_tokens
+
+    def can_accept(self, prompt_len: int, max_new_tokens: int) -> bool:
+        """Static admission feedback for routers: whether this replica
+        could EVER take one request of this shape (sequence / page-pool
+        capacity), independent of current load.  A request failing this
+        must be routed elsewhere — queued here it would block the pending
+        queue forever.  Group size doesn't enter: a group that fits only
+        as singles is expanded by the admission path."""
+        eng = self.engine
+        max_total = getattr(eng, "max_total_len", None)
+        if max_total is not None and prompt_len + max_new_tokens > max_total:
+            return False
+        fits = getattr(eng, "group_fits_pool", None)
+        if fits is not None and not fits(prompt_len, 1, max_new_tokens):
+            return False
+        return True
 
     # ------------------------------------------------------------- commands
     def generate(self, task: RolloutTask, version: int,
@@ -110,11 +158,14 @@ class LLMProxy:
                                       version_started=version,
                                       callback=callback)
                     for t in expand_replicas(task, n)]
+            self._load_add_group(reqs)
             self._commands.put(("ADD_GROUP", _PendingGroup(reqs)))
             return [r.request_id for r in reqs]
         req = GenerationRequest(request_id=task.task_id, task=task,
                                 version_started=version, callback=callback,
                                 stream_cb=stream_cb)
+        self._load_add(req.request_id,
+                       len(task.prompt_tokens) + task.max_new_tokens)
         self._commands.put(("ADD", req))
         return req.request_id
 
@@ -134,6 +185,7 @@ class LLMProxy:
         reqs = [GenerationRequest(request_id=t.task_id, task=t,
                                   version_started=version, callback=callback)
                 for t in tasks]
+        self._load_add_group(reqs)
         self._commands.put(("ADD_GROUP", _PendingGroup(reqs)))
         return [r.request_id for r in reqs]
 
@@ -146,6 +198,8 @@ class LLMProxy:
         req = GenerationRequest(request_id=task.task_id, task=task,
                                 version_started=version, callback=callback,
                                 resume_from=resume_from, stream_cb=stream_cb)
+        # no prefill work: the retained pages re-attach
+        self._load_add(req.request_id, task.max_new_tokens)
         self._commands.put(("ADD", req))
         return req.request_id
 
@@ -217,30 +271,41 @@ class LLMProxy:
                 self._suspended.clear()
             if self._stop.is_set():
                 break
-            self._process_commands()
-            self._admit_pending()
-            if not self._active:
+            if not self.step_once():
                 time.sleep(self._idle_sleep)
+
+    def step_once(self) -> bool:
+        """One proxy iteration: drain commands, admit, and — if anything is
+        active — run one engine step and dispatch completions.  ``run_loop``
+        is exactly this under the suspend handshake; calling it directly
+        (proxy thread NOT started) drives the proxy deterministically, which
+        is what lockstep fleet benchmarks and parity tests need.  Returns
+        True iff an engine step ran."""
+        self._process_commands()
+        self._admit_pending()
+        if not self._active:
+            return False
+        finished = self.engine.step()
+        self.steps_executed += 1
+        for rid, tokens, logprobs in finished:
+            req = self._active.pop(rid, None)
+            if req is None:
                 continue
-            finished = self.engine.step()
-            self.steps_executed += 1
-            for rid, tokens, logprobs in finished:
-                req = self._active.pop(rid, None)
-                if req is None:
-                    continue
-                if req.stream_cb is not None:
-                    self._num_streaming -= 1
-                    # flush the final decode step's tokens — the request is
-                    # no longer active, so _publish_streams won't see it.
-                    if len(tokens) > req.streamed:
-                        req.stream_cb(list(tokens[req.streamed:]))
-                        req.streamed = len(tokens)
-                self.requests_completed += 1
-                req.callback(GenerationResult(
-                    request_id=rid, task=req.task, tokens=tokens,
-                    logprobs=logprobs, version_started=req.version_started))
-            if self._num_streaming > 0:
-                self._publish_streams()
+            if req.stream_cb is not None:
+                self._num_streaming -= 1
+                # flush the final decode step's tokens — the request is
+                # no longer active, so _publish_streams won't see it.
+                if len(tokens) > req.streamed:
+                    req.stream_cb(list(tokens[req.streamed:]))
+                    req.streamed = len(tokens)
+            self.requests_completed += 1
+            self._load_drop(rid)
+            req.callback(GenerationResult(
+                request_id=rid, task=req.task, tokens=tokens,
+                logprobs=logprobs, version_started=req.version_started))
+        if self._num_streaming > 0:
+            self._publish_streams()
+        return True
 
     def _publish_streams(self) -> None:
         """Push NEWLY decoded tokens (a delta per call) of stream-subscribed
@@ -304,6 +369,7 @@ class LLMProxy:
             else:
                 partial = self.engine.abort(request_id)
             self.requests_aborted += 1
+            self._load_drop(request_id)
             req.callback(GenerationResult(
                 request_id=request_id, task=req.task,
                 tokens=getattr(partial, "tokens", None),
@@ -337,6 +403,7 @@ class LLMProxy:
                 if r.resume_from is not None and release is not None:
                     release(r.resume_from)
                 self.requests_aborted += 1
+                self._load_drop(r.request_id)
                 r.callback(GenerationResult(
                     request_id=r.request_id, task=r.task, tokens=None,
                     logprobs=None, version_started=r.version_started,
@@ -446,7 +513,28 @@ class LLMProxy:
 
     @property
     def num_pending(self) -> int:
-        return sum(len(self._entry_requests(e)) for e in self._pending)
+        # metrics readers run off-thread while the loop mutates _pending;
+        # retry the lock-free snapshot instead of serializing the hot path
+        # (mutation windows are a few appends/pops — retries are rare).
+        while True:
+            try:
+                return sum(len(self._entry_requests(e))
+                           for e in tuple(self._pending))
+            except RuntimeError:
+                continue
+
+    @property
+    def oldest_active_version(self) -> Optional[int]:
+        """Policy version of the stalest in-flight request (None when
+        idle) — per-replica staleness for fleet dashboards."""
+        while True:
+            try:
+                versions = [r.version_started
+                            for r in list(self._active.values())]
+                break
+            except RuntimeError:     # loop thread resized _active mid-copy
+                continue
+        return min(versions) if versions else None
 
     @property
     def cache_hit_tokens(self) -> int:

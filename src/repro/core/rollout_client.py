@@ -23,7 +23,10 @@ plain handles:
 version (``LLMProxy.abort_stale``, or ``handle.abort(retain=True)``) is
 transparently re-admitted by the client: paged engines re-attach the
 retained KV pages (zero prefix re-prefill), slot engines re-prefill the
-concatenated prefix.  The handle resolves EXACTLY once, with the
+concatenated prefix.  Behind a ``ProxyRouter`` fleet, a retained request
+whose home replica is draining or overloaded migrates to another replica
+instead (pages are released, the concatenated prefix re-prefills there).
+The handle resolves EXACTLY once, with the
 budget-clamped, logprob-stitched final result; ``result.legs`` tags each
 leg with the policy version it was decoded under (what IS-based off-policy
 correctors need).  Behaviour-policy logprobs of every leg are kept;
@@ -370,6 +373,7 @@ class RolloutClient:
         self._closed = False
         self.resumes = 0                 # retained-page re-attach legs
         self.reprefills = 0              # slot-engine concatenated-prefix legs
+        self.migrations = 0              # cross-replica re-admission legs
 
     @classmethod
     def ensure(cls, proxy_or_client, **kwargs) -> "RolloutClient":
@@ -497,7 +501,11 @@ class RolloutClient:
                   remaining: int) -> None:
         """Re-admit an interrupted request (caller holds the lock).  Paged
         engines re-attach the retained pages (zero prefix re-prefill);
-        others re-prefill the concatenated prefix."""
+        others re-prefill the concatenated prefix.  Behind a fleet router,
+        a resumable request whose home replica is draining or overloaded
+        (``prefer_resume`` → False) MIGRATES instead: its parked pages are
+        released and the concatenated prefix re-admits on another replica
+        (incremental there wherever the radix cache has seen it)."""
         new_rid = next_uid()
         version = self._version_fn()
         h._cur_rid = new_rid
@@ -505,6 +513,27 @@ class RolloutClient:
         t = h.task
         stream = {"stream_cb": h._on_leg_tokens} if h._streaming else {}
         if res.resumable:
+            prefer = getattr(self.proxy, "prefer_resume", None)
+            if prefer is not None and not prefer(res.request_id, remaining):
+                concat = RolloutTask(
+                    task_id=new_rid, prompt_id=t.prompt_id,
+                    replica_idx=t.replica_idx,
+                    prompt_tokens=np.concatenate([h.orig_prompt,
+                                                  h._stitched_tokens()]),
+                    max_new_tokens=remaining, group_id=t.group_id,
+                    meta=dict(t.meta))
+                self._inflight[new_rid] = h
+                try:
+                    self.proxy.generate_migrated(
+                        concat, version, self._dispatch,
+                        release_from=res.request_id, **stream)
+                    self.migrations += 1
+                    return
+                except Exception:
+                    # no replica can take the grown concatenated prompt;
+                    # the pages are still parked (the router releases only
+                    # after placing) — resume in place instead.
+                    self._inflight.pop(new_rid, None)
             self.resumes += 1
             resumed = RolloutTask(
                 task_id=new_rid, prompt_id=t.prompt_id,
@@ -513,7 +542,8 @@ class RolloutClient:
                 meta=dict(t.meta))
             self._inflight[new_rid] = h
             self.proxy.generate_resumed(resumed, version, self._dispatch,
-                                        resume_from=res.request_id, **stream)
+                                        resume_from=res.request_id,
+                                        **stream)
             return
         self.reprefills += 1
         resumed = RolloutTask(

@@ -1,0 +1,414 @@
+"""ProxyRouter: queue scheduling across a fleet of rollout replicas (§4.3).
+
+The paper's headline rollout mechanism is *queue scheduling*: instead of
+statically partitioning a batch across inference workers (and waiting for
+the slowest partition — the long-tail straggler problem), every prompt is
+dispatched individually to the least-loaded worker the moment it is
+submitted.  This module scales the single proxy/engine rollout path to N
+replicas behind one object that speaks the exact ``LLMProxy`` protocol, so
+``RolloutClient``, ``RolloutProducer``, ``EnvManagerPool`` and the
+``AsyncController`` consume a fleet without changes:
+
+* **Queue scheduling** — ``generate`` routes each request to the replica
+  with the least outstanding decode work (``LLMProxy.load()``, in tokens),
+  subject to static admission feedback (``can_accept``: a request that can
+  never fit a replica's page pool is not queued there).
+* **Co-location** — the G candidates of a GRPO group land on ONE replica
+  (COW prefix sharing is per-replica), and every turn of an agentic
+  ``Session`` follows its predecessors (the radix prefix cache holding the
+  conversation history is per-replica too).  Placement pins are LRU-capped.
+* **Cross-replica abort→resume migration** — retained KV pages cannot move
+  between replicas.  ``prefer_resume`` tells the RolloutClient whether an
+  aborted-with-retain request should re-attach in place (the cheap default)
+  or migrate; ``generate_migrated`` frees the parked pages on the home
+  replica and routes the client-built concatenated re-prefill to a
+  less-loaded one.  Migration triggers when the home replica is draining
+  (``drain()``) or overloaded past ``migrate_factor``/``migrate_margin``.
+* **Fleet-wide weight sync** — ``update_weights[_async]`` fan out to every
+  replica; the staged variant returns an aggregate event that is set once
+  ALL replicas acknowledge, so the controller advances the policy version
+  exactly when the whole fleet holds the new weights.
+* **Aggregated observability** — ``cache_stats``/``load``/``queue_depth``
+  sum across replicas; ``replica_stats`` exposes the per-replica view
+  (load, active/pending, staleness, cache hits, draining).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core.llm_proxy import LLMProxy
+from repro.core.types import GenerationResult, RolloutTask
+
+# group/session placement memory; old pins evict LRU (a group whose pin
+# evicted mid-flight merely loses co-location for later members, never
+# correctness — assembly keys on group_id, not placement).
+_MAX_PINS = 8192
+
+
+class MultiEvent:
+    """Aggregate of the per-replica staged weight-sync events: ``wait``
+    returns True once EVERY replica has acknowledged its swap."""
+
+    def __init__(self, events: List[threading.Event]):
+        self._events = list(events)
+
+    def is_set(self) -> bool:
+        return all(e.is_set() for e in self._events)
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        for e in self._events:
+            left = (None if deadline is None
+                    else max(0.0, deadline - time.monotonic()))
+            if not e.wait(left):
+                return False
+        return True
+
+
+class ProxyRouter:
+    """N proxy/engine replicas behind the single-proxy protocol.
+
+    ``migrate_factor`` / ``migrate_margin_tokens`` bound when an
+    aborted-with-retain request migrates instead of resuming in place: the
+    home replica must carry more than ``factor * min_load + margin``
+    outstanding tokens (or be draining).  In-place resume re-attaches
+    retained pages at zero prefill cost, so migration has to buy real
+    rebalancing to be worth a concatenated re-prefill.
+    """
+
+    def __init__(self, proxies: List[LLMProxy], *,
+                 migrate_factor: float = 2.0,
+                 migrate_margin_tokens: int = 128):
+        assert proxies, "router needs at least one replica"
+        self.proxies = list(proxies)
+        self.migrate_factor = migrate_factor
+        self.migrate_margin_tokens = migrate_margin_tokens
+        self._lock = threading.RLock()
+        self._home: Dict[int, int] = {}        # request_id -> replica idx
+        # requests whose callback resolved BEFORE _register could record
+        # them (submit→resolve race on the proxy loop thread): _register
+        # must not re-insert a mapping nobody will ever remove.
+        self._early_resolved: set = set()
+        self._group_home: "collections.OrderedDict[int, int]" = \
+            collections.OrderedDict()
+        self._session_home: "collections.OrderedDict[int, int]" = \
+            collections.OrderedDict()
+        self._draining: set = set()
+        self.routed = 0
+        self.migrations = 0
+
+    # ---------------------------------------------------------- placement
+    def _alive(self) -> List[int]:
+        idxs = [i for i in range(len(self.proxies)) if i not in self._draining]
+        return idxs or list(range(len(self.proxies)))
+
+    @staticmethod
+    def _pin(pins: "collections.OrderedDict", key, idx: int) -> None:
+        pins[key] = idx
+        pins.move_to_end(key)
+        while len(pins) > _MAX_PINS:
+            pins.popitem(last=False)
+
+    def _place(self, task: RolloutTask, *,
+               exclude: Optional[int] = None) -> int:
+        """Pick the replica for a new submission: sessions stay where
+        their radix-cached history lives, GRPO groups stay co-located,
+        everything else goes least-outstanding-tokens.  A pin is honored
+        only while the pinned replica can still EVER take the request —
+        a session whose conversation outgrew its home's capacity re-places
+        (and re-pins) instead of queueing there forever."""
+        plen = len(task.prompt_tokens)
+        with self._lock:
+            sid = task.meta.get("session_id")
+            if sid is not None:
+                idx = self._session_home.get(sid)
+                if idx is not None and idx not in self._draining \
+                        and idx != exclude \
+                        and self.proxies[idx].can_accept(
+                            plen, task.max_new_tokens):
+                    self.routed += 1
+                    return idx
+            gid = task.group_id
+            if gid is not None and gid >= 0:
+                idx = self._group_home.get(gid)
+                if idx is not None and idx not in self._draining \
+                        and idx != exclude \
+                        and self.proxies[idx].can_accept(
+                            plen, task.max_new_tokens):
+                    self.routed += 1
+                    return idx
+            cands = [i for i in self._alive()
+                     if self.proxies[i].can_accept(plen,
+                                                   task.max_new_tokens)]
+            if exclude is not None and len(cands) > 1:
+                cands = [i for i in cands if i != exclude]
+            if not cands:
+                raise ValueError(
+                    f"no replica can accept prompt_len={plen} "
+                    f"max_new_tokens={task.max_new_tokens} (fleet of "
+                    f"{len(self.proxies)}; shard capacity too small?)")
+            idx = min(cands, key=lambda i: (self.proxies[i].load(), i))
+            if sid is not None:
+                self._pin(self._session_home, sid, idx)
+            if gid is not None and gid >= 0:
+                self._pin(self._group_home, gid, idx)
+            self.routed += 1
+            return idx
+
+    def _register(self, idx: int, rids) -> None:
+        with self._lock:
+            for rid in (rids if isinstance(rids, list) else [rids]):
+                if rid in self._early_resolved:
+                    self._early_resolved.discard(rid)   # already resolved
+                else:
+                    self._home[rid] = idx
+
+    def _tracked(self, idx: int, callback: Callable) -> Callable:
+        """Wrap the consumer callback so the rid→replica map follows each
+        request's life: dropped on resolution, kept while retained pages
+        park on the replica (resume/release must find them).  A request
+        resolving before ``_register`` runs (the proxy loop won the race)
+        is remembered so registration doesn't leave a stale entry."""
+        def cb(res: GenerationResult) -> None:
+            with self._lock:
+                if res.aborted and res.resumable:
+                    self._home[res.request_id] = idx
+                elif self._home.pop(res.request_id, None) is None:
+                    self._early_resolved.add(res.request_id)
+            callback(res)
+        return cb
+
+    # ------------------------------------------------------ proxy protocol
+    def generate(self, task: RolloutTask, version: int,
+                 callback: Callable[[GenerationResult], None],
+                 stream_cb: Optional[Callable] = None):
+        idx = self._place(task)
+        kw = {"stream_cb": stream_cb} if stream_cb is not None else {}
+        rids = self.proxies[idx].generate(task, version,
+                                          self._tracked(idx, callback), **kw)
+        self._register(idx, rids)
+        return rids
+
+    def generate_group(self, tasks: List[RolloutTask], version: int,
+                       callback: Callable[[GenerationResult], None]) -> List[int]:
+        assert tasks, "empty group"
+        idx = self._place(tasks[0])
+        rids = self.proxies[idx].generate_group(tasks, version,
+                                                self._tracked(idx, callback))
+        self._register(idx, rids)
+        return rids
+
+    def generate_resumed(self, task: RolloutTask, version: int,
+                         callback: Callable[[GenerationResult], None],
+                         resume_from: int,
+                         stream_cb: Optional[Callable] = None) -> int:
+        """Resume ALWAYS lands on the replica holding the retained pages —
+        they cannot re-attach anywhere else, so an unknown ``resume_from``
+        is a caller bug and fails loudly (routed blind, the request would
+        pend forever on a replica whose ``can_resume`` never passes).
+        (Migration goes through ``generate_migrated`` instead.)"""
+        with self._lock:
+            idx = self._home.get(resume_from)
+        if idx is None:
+            raise ValueError(f"resume_from={resume_from} has no retained "
+                             "pages on any replica known to this router")
+        kw = {"stream_cb": stream_cb} if stream_cb is not None else {}
+        rid = self.proxies[idx].generate_resumed(
+            task, version, self._tracked(idx, callback),
+            resume_from=resume_from, **kw)
+        with self._lock:
+            self._home.pop(resume_from, None)
+        self._register(idx, rid)
+        return rid
+
+    # ------------------------------------------------- resume migration
+    def prefer_resume(self, resume_from: int, remaining: int) -> bool:
+        """Continuation-placement feedback for the RolloutClient: True →
+        resume in place (retained pages re-attach, zero re-prefill);
+        False → the home replica is draining or overloaded enough that a
+        concatenated re-prefill on another replica wins."""
+        with self._lock:
+            idx = self._home.get(resume_from)
+            if idx is None or len(self.proxies) == 1:
+                return True
+            if idx in self._draining:
+                return False
+            others = [i for i in self._alive() if i != idx]
+        if not others:
+            return True
+        home_load = self.proxies[idx].load()
+        low = min(self.proxies[i].load() for i in others)
+        return home_load <= self.migrate_factor * low + self.migrate_margin_tokens
+
+    def generate_migrated(self, task: RolloutTask, version: int,
+                          callback: Callable[[GenerationResult], None],
+                          release_from: int,
+                          stream_cb: Optional[Callable] = None) -> int:
+        """Cross-replica abort→resume migration.  Retained KV pages cannot
+        move between replicas: free them on the home replica and route the
+        client-built concatenated re-prefill (original prompt + decoded
+        prefix) to a less-loaded one.  The target's radix cache makes any
+        prefix it has seen before incremental.  A migrated session re-pins
+        to the target so its later turns find the freshly cached context.
+
+        Placement is confirmed BEFORE the parked pages are released: when
+        no replica can take the (grown) concatenated prompt this raises
+        with the pages still retained, and the RolloutClient falls back to
+        resuming in place."""
+        with self._lock:
+            home = self._home.get(release_from)
+        idx = self._place(task, exclude=home)     # may raise: nothing freed
+        with self._lock:
+            self._home.pop(release_from, None)
+        if home is not None:
+            self.proxies[home].release_retained(release_from)
+        with self._lock:
+            sid = task.meta.get("session_id")
+            if sid is not None:
+                self._pin(self._session_home, sid, idx)
+            gid = task.group_id
+            if gid is not None and gid >= 0:
+                self._pin(self._group_home, gid, idx)
+            self.migrations += 1
+        kw = {"stream_cb": stream_cb} if stream_cb is not None else {}
+        rid = self.proxies[idx].generate(task, version,
+                                         self._tracked(idx, callback), **kw)
+        self._register(idx, rid)
+        return rid
+
+    # ------------------------------------------------------------- control
+    def abort(self, request_id: int, retain: bool = False) -> None:
+        with self._lock:
+            idx = self._home.get(request_id)
+        if idx is not None:
+            self.proxies[idx].abort(request_id, retain=retain)
+            return
+        for p in self.proxies:     # unknown rid: broadcast (no-op on misses)
+            p.abort(request_id, retain=retain)
+
+    def abort_stale(self, min_version: int, retain: bool = False) -> None:
+        for p in self.proxies:
+            p.abort_stale(min_version, retain=retain)
+
+    def release_retained(self, request_id: int) -> None:
+        with self._lock:
+            idx = self._home.pop(request_id, None)
+        for p in (self.proxies if idx is None else [self.proxies[idx]]):
+            p.release_retained(request_id)
+
+    def suspend(self) -> None:
+        for p in self.proxies:
+            p.suspend()
+
+    def resume(self) -> None:
+        for p in self.proxies:
+            p.resume()
+
+    def update_weights(self, params) -> None:
+        for p in self.proxies:
+            p.update_weights(params)
+
+    def update_weights_async(self, params) -> MultiEvent:
+        """Stage the swap on EVERY replica; the aggregate event is set
+        once all of them acknowledge (fleet-wide overlapped sync)."""
+        return MultiEvent([p.update_weights_async(params)
+                           for p in self.proxies])
+
+    def drain(self, idx: int) -> None:
+        """Mark a replica as draining: no new placements land on it and
+        its retained abort victims migrate instead of resuming in place.
+        In-flight requests run to completion."""
+        with self._lock:
+            self._draining.add(idx)
+
+    def undrain(self, idx: int) -> None:
+        with self._lock:
+            self._draining.discard(idx)
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "ProxyRouter":
+        for p in self.proxies:
+            p.start()
+        return self
+
+    def stop(self) -> None:
+        for p in self.proxies:
+            p.stop()
+
+    # -------------------------------------------------------------- metrics
+    def load(self) -> int:
+        return sum(p.load() for p in self.proxies)
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self.proxies)
+
+    @property
+    def num_active(self) -> int:
+        return sum(p.num_active for p in self.proxies)
+
+    @property
+    def num_pending(self) -> int:
+        return sum(p.num_pending for p in self.proxies)
+
+    @property
+    def queue_depth(self) -> int:
+        """Fleet-wide submitted-but-unadmitted requests."""
+        return self.num_pending
+
+    @property
+    def steps_executed(self) -> int:
+        return sum(p.steps_executed for p in self.proxies)
+
+    @property
+    def requests_completed(self) -> int:
+        return sum(p.requests_completed for p in self.proxies)
+
+    @property
+    def requests_aborted(self) -> int:
+        return sum(p.requests_aborted for p in self.proxies)
+
+    @property
+    def suspend_count(self) -> int:
+        return sum(p.suspend_count for p in self.proxies)
+
+    @property
+    def staged_weight_updates(self) -> int:
+        return sum(p.staged_weight_updates for p in self.proxies)
+
+    @property
+    def oldest_active_version(self) -> Optional[int]:
+        versions = [v for v in (p.oldest_active_version for p in self.proxies)
+                    if v is not None]
+        return min(versions) if versions else None
+
+    @property
+    def cache_hit_tokens(self) -> int:
+        return sum(p.cache_hit_tokens for p in self.proxies)
+
+    @property
+    def cache_stats(self) -> Dict[str, int]:
+        agg: Dict[str, int] = {}
+        for p in self.proxies:
+            for k, v in p.cache_stats.items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    def replica_stats(self) -> List[Dict]:
+        """Per-replica load/occupancy/staleness/cache view."""
+        with self._lock:
+            draining = set(self._draining)
+        return [{
+            "name": p.name,
+            "load_tokens": p.load(),
+            "active": p.num_active,
+            "pending": p.num_pending,
+            "completed": p.requests_completed,
+            "aborted": p.requests_aborted,
+            "oldest_active_version": p.oldest_active_version,
+            "cache_hit_tokens": p.cache_hit_tokens,
+            "draining": i in draining,
+        } for i, p in enumerate(self.proxies)]

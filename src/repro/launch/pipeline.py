@@ -1,14 +1,18 @@
-"""Pipeline assembly: wire models + engine + proxy + buffer + controller.
+"""Pipeline assembly: wire models + rollout fleet + buffer + controller.
 
 This is the host-level composition root used by `launch/train.py`, the
 examples, and the integration tests.  Everything is config-driven, mirroring
 the paper's appendix-A YAML (async_generation_ratio, pg_variant,
 rollout_batch_size, num_return_sequences, actor_train/actor_infer split...).
+``num_rollout_replicas`` sizes the rollout fleet: 1 (default) is the plain
+single proxy/engine path; >= 2 shards slots/pages across N replicas behind
+a ``ProxyRouter`` (queue scheduling, co-located groups/sessions,
+cross-replica abort-resume migration).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Union
+from typing import Callable, List, Optional, Tuple, Union
 
 import jax
 
@@ -16,6 +20,7 @@ from repro.algos import LossConfig
 from repro.core.async_controller import AsyncController
 from repro.core.env_manager import EnvManagerPool
 from repro.core.llm_proxy import LLMProxy
+from repro.core.router import ProxyRouter
 from repro.core.sample_buffer import SampleBuffer
 from repro.core.scheduler import RolloutProducer
 from repro.data.dataset import ArithmeticTask, EOS
@@ -67,6 +72,15 @@ class PipelineSettings:
     # swap between engine steps — rollout never stops; "blocking" is the
     # 3-phase suspend -> update -> resume barrier.
     weight_sync: str = "overlapped"        # overlapped | blocking
+    # max seconds to wait for every replica to acknowledge a staged
+    # (overlapped) weight swap before declaring the fleet stalled.
+    weight_sync_timeout: float = 60.0
+    # rollout fleet size.  1 (default) keeps the single proxy/engine path
+    # byte-identical to before; >= 2 shards num_slots/num_pages across N
+    # replicas behind a ProxyRouter (per-request least-loaded queue
+    # scheduling, GRPO-group/session co-location, cross-replica
+    # abort-resume migration).
+    num_rollout_replicas: int = 1
 
 
 def make_rollout_engine(api, params, s: PipelineSettings) -> RolloutEngine:
@@ -90,23 +104,59 @@ def make_rollout_engine(api, params, s: PipelineSettings) -> RolloutEngine:
                         max_total_len=s.max_seq_len, eos_id=EOS, seed=s.seed)
 
 
+def make_rollout_fleet(api, params, s: PipelineSettings,
+                       ) -> Tuple[List[RolloutEngine], List[LLMProxy],
+                                  Optional[ProxyRouter]]:
+    """Build ``s.num_rollout_replicas`` proxy/engine replicas.
+
+    N = 1 (default) returns exactly the single-engine construction of old
+    (no router — the producer talks straight to the proxy).  N >= 2 shards
+    the decode capacity: each replica gets ceil(num_slots / N) slots and
+    ceil(num_pages / N) pages (when pinned), and a ProxyRouter fronts the
+    fleet with least-outstanding-tokens queue scheduling."""
+    n = max(1, int(s.num_rollout_replicas))
+    if n == 1:
+        engine = make_rollout_engine(api, params, s)
+        return [engine], [LLMProxy(engine)], None
+    shard = dataclasses.replace(
+        s, num_slots=max(1, -(-s.num_slots // n)),
+        num_pages=None if s.num_pages is None else max(2, -(-s.num_pages // n)))
+    # per-replica sampler seeds: identical streams across replicas would
+    # silently duplicate stochastic rollouts (greedy is seed-invariant)
+    engines = [make_rollout_engine(api, params,
+                                   dataclasses.replace(shard, seed=s.seed + i))
+               for i in range(n)]
+    proxies = [LLMProxy(e, name=f"llm_proxy_{i}")
+               for i, e in enumerate(engines)]
+    return engines, proxies, ProxyRouter(proxies)
+
+
 @dataclasses.dataclass
 class RLVRPipeline:
     settings: PipelineSettings
     trainer: HostTrainer
-    engine: RolloutEngine
-    proxy: LLMProxy
+    engine: RolloutEngine          # primary replica (engines[0])
+    proxy: LLMProxy                # primary replica (proxies[0])
     buffer: SampleBuffer
     producer: RolloutProducer
     controller: AsyncController
+    engines: List[RolloutEngine] = dataclasses.field(default_factory=list)
+    proxies: List[LLMProxy] = dataclasses.field(default_factory=list)
+    router: Optional[ProxyRouter] = None    # None on a 1-replica fleet
 
     @property
     def client(self):
-        """The handle-issuing RolloutClient over this pipeline's proxy."""
+        """The handle-issuing RolloutClient over this pipeline's fleet."""
         return self.producer.client
 
+    @property
+    def rollout_target(self):
+        """What producers submit to: the router, or the lone proxy."""
+        return self.router if self.router is not None else self.proxy
+
     def run(self, num_steps: int, timeout: float = 600.0):
-        self.proxy.start()
+        for p in (self.proxies or [self.proxy]):
+            p.start()
         self.producer.start()
         try:
             return self.controller.train(num_steps, timeout=timeout)
@@ -116,7 +166,8 @@ class RLVRPipeline:
     def shutdown(self):
         self.producer.stop()
         self.buffer.close()
-        self.proxy.stop()
+        for p in (self.proxies or [self.proxy]):
+            p.stop()
 
 
 def build_rlvr_pipeline(model_cfg: ModelConfig, s: PipelineSettings,
@@ -134,38 +185,49 @@ def build_rlvr_pipeline(model_cfg: ModelConfig, s: PipelineSettings,
                          adv_estimator=s.adv_estimator)
     trainer = HostTrainer(api, jax.random.PRNGKey(s.seed), loss_cfg, opt_cfg, tcfg)
 
-    engine = make_rollout_engine(api, trainer.get_weights(), s)
-    proxy = LLMProxy(engine)
+    engines, proxies, router = make_rollout_fleet(api, trainer.get_weights(), s)
     alpha = s.async_generation_ratio
     buffer = SampleBuffer(batch_size=s.rollout_batch_size, alpha=alpha)
     producer = RolloutProducer(
-        proxy, buffer,
+        router if router is not None else proxies[0], buffer,
         task.prompt_stream(group_size=s.num_return_sequences_in_group),
         group_size=s.num_return_sequences_in_group,
         max_new_tokens=s.max_new_tokens, reward_fn=reward_fn,
         replicate=s.is_num_return_sequences_expand)
-    controller = AsyncController(buffer, [proxy], trainer.train_on_samples,
+    controller = AsyncController(buffer, proxies, trainer.train_on_samples,
                                  trainer.get_weights, alpha=alpha,
-                                 weight_sync=s.weight_sync)
-    return RLVRPipeline(s, trainer, engine, proxy, buffer, producer, controller)
+                                 weight_sync=s.weight_sync,
+                                 weight_sync_timeout=s.weight_sync_timeout)
+    return RLVRPipeline(s, trainer, engines[0], proxies[0], buffer, producer,
+                        controller, engines=engines, proxies=proxies,
+                        router=router)
 
 
 @dataclasses.dataclass
 class AgenticPipeline:
     trainer: HostTrainer
-    engine: RolloutEngine
-    proxy: LLMProxy
+    engine: RolloutEngine          # primary replica (engines[0])
+    proxy: LLMProxy                # primary replica (proxies[0])
     buffer: SampleBuffer
     pool: EnvManagerPool
     controller: AsyncController
+    engines: List[RolloutEngine] = dataclasses.field(default_factory=list)
+    proxies: List[LLMProxy] = dataclasses.field(default_factory=list)
+    router: Optional[ProxyRouter] = None    # None on a 1-replica fleet
 
     @property
     def client(self):
         """The handle-issuing RolloutClient shared by the env-manager pool."""
         return self.pool.client
 
+    @property
+    def rollout_target(self):
+        """What env managers submit to: the router, or the lone proxy."""
+        return self.router if self.router is not None else self.proxy
+
     def run(self, num_steps: int, timeout: float = 600.0):
-        self.proxy.start()
+        for p in (self.proxies or [self.proxy]):
+            p.start()
         self.pool.start()
         try:
             return self.controller.train(num_steps, timeout=timeout)
@@ -175,7 +237,8 @@ class AgenticPipeline:
     def shutdown(self):
         self.pool.stop(join=False)
         self.buffer.close()
-        self.proxy.stop()
+        for p in (self.proxies or [self.proxy]):
+            p.stop()
 
 
 def build_agentic_pipeline(model_cfg: ModelConfig, s: PipelineSettings, *,
@@ -188,18 +251,21 @@ def build_agentic_pipeline(model_cfg: ModelConfig, s: PipelineSettings, *,
                          minibatches=s.minibatches, ppo_epochs=s.ppo_epochs,
                          adv_estimator=s.adv_estimator)
     trainer = HostTrainer(api, jax.random.PRNGKey(s.seed), loss_cfg, opt_cfg, tcfg)
-    engine = make_rollout_engine(api, trainer.get_weights(), s)
-    proxy = LLMProxy(engine)
+    engines, proxies, router = make_rollout_fleet(api, trainer.get_weights(), s)
     buffer = SampleBuffer(batch_size=s.rollout_batch_size,
                           alpha=s.async_generation_ratio)
-    pool = EnvManagerPool(make_env, proxy, buffer,
+    pool = EnvManagerPool(make_env, router if router is not None else proxies[0],
+                          buffer,
                           num_env_groups=num_env_groups, group_size=group_size,
                           max_steps=max_env_steps,
                           max_new_tokens=s.max_new_tokens,
                           context_mode=s.agentic_context,
                           max_context_tokens=s.max_seq_len - s.max_new_tokens)
-    controller = AsyncController(buffer, [proxy], trainer.train_on_samples,
+    controller = AsyncController(buffer, proxies, trainer.train_on_samples,
                                  trainer.get_weights,
                                  alpha=s.async_generation_ratio,
-                                 weight_sync=s.weight_sync)
-    return AgenticPipeline(trainer, engine, proxy, buffer, pool, controller)
+                                 weight_sync=s.weight_sync,
+                                 weight_sync_timeout=s.weight_sync_timeout)
+    return AgenticPipeline(trainer, engines[0], proxies[0], buffer, pool,
+                           controller, engines=engines, proxies=proxies,
+                           router=router)

@@ -52,6 +52,10 @@ def main() -> None:
     ap.add_argument("--rollout-batch-size", type=int, default=16)
     ap.add_argument("--group-size", type=int, default=4)
     ap.add_argument("--num-slots", type=int, default=16)
+    ap.add_argument("--rollout-replicas", type=int, default=1,
+                    help="rollout fleet size: >=2 shards --num-slots across "
+                         "N proxy/engine replicas behind a ProxyRouter "
+                         "(queue scheduling)")
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--seed", type=int, default=0)
@@ -65,6 +69,7 @@ def main() -> None:
         rollout_batch_size=args.rollout_batch_size,
         num_return_sequences_in_group=args.group_size,
         num_slots=args.num_slots,
+        num_rollout_replicas=args.rollout_replicas,
         max_new_tokens=args.max_new_tokens,
         max_seq_len=32,
         learning_rate=args.lr,

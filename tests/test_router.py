@@ -1,0 +1,576 @@
+"""Multi-replica rollout fleet: ProxyRouter queue scheduling, GRPO-group /
+session co-location, cross-replica abort→resume migration, fleet-wide
+weight sync, and the fleet-aware AsyncController/pipeline surface.
+
+Acceptance-criteria coverage:
+
+* greedy parity — a 2-replica fleet produces byte-identical outputs to the
+  single-proxy path (placement is an optimization, never semantics);
+* GRPO groups land on ONE replica (COW prefix sharing is per-replica);
+* a cross-replica resume after a weight sync resolves its handle exactly
+  once with correctly stitched, version-tagged legs;
+* ``audit_pages`` is clean on every replica after a churn sweep.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.async_controller import AsyncController
+from repro.core.llm_proxy import LLMProxy
+from repro.core.rollout_client import RolloutClient
+from repro.core.router import MultiEvent, ProxyRouter
+from repro.core.sample_buffer import SampleBuffer
+from repro.core.scheduler import RolloutProducer, expand_tasks
+from repro.core.types import GenerationResult, RolloutTask, next_uid
+from repro.models import get_api
+from repro.rollout.paged_engine import PagedDecodeEngine
+
+
+class FakeEngine:
+    """Deterministic engine: each request emits 0,1,2,... one per step.
+    Supports abort-with-retain + resume so the continuation/migration
+    machinery can be exercised without a real model."""
+
+    supports_retain = True
+
+    def __init__(self, slots=2, max_total_len=10_000, step_sleep=0.001):
+        self.slots = slots
+        self.max_total_len = max_total_len
+        self.step_sleep = step_sleep
+        self.active = {}
+        self.retained = {}
+        self.added = []              # request ids seen by add_request
+        self.resumed = []
+        self.update_count = 0
+
+    @property
+    def num_free_slots(self):
+        return self.slots - len(self.active)
+
+    def add_request(self, rid, prompt, max_new):
+        assert self.num_free_slots > 0
+        self.added.append(rid)
+        self.active[rid] = {"left": int(max_new), "toks": []}
+
+    def abort(self, rid, retain=False):
+        st = self.active.pop(rid)
+        if retain:
+            self.retained[rid] = st
+        return GenerationResult(
+            request_id=rid, task=None,
+            tokens=np.asarray(st["toks"], np.int32),
+            logprobs=np.zeros(len(st["toks"]), np.float32),
+            version_started=-1, aborted=True, partial=True,
+            resumable=retain)
+
+    def can_resume(self, rid, max_new):
+        return rid in self.retained and self.num_free_slots > 0
+
+    def resume_request(self, old_rid, new_rid, max_new):
+        del self.retained[old_rid]
+        self.resumed.append(new_rid)
+        self.active[new_rid] = {"left": int(max_new), "toks": []}
+
+    def release_retained(self, rid):
+        self.retained.pop(rid, None)
+
+    def step(self):
+        if self.step_sleep:
+            time.sleep(self.step_sleep)
+        done = []
+        for rid, st in list(self.active.items()):
+            st["toks"].append(len(st["toks"]))
+            st["left"] -= 1
+            if st["left"] <= 0:
+                done.append((rid, np.asarray(st["toks"], np.int32),
+                             np.zeros(len(st["toks"]), np.float32)))
+                del self.active[rid]
+        return done
+
+    def update_weights(self, params):
+        self.update_count += 1
+
+
+def _task(n=3, prompt=(1, 2), gid=-1, meta=None):
+    return RolloutTask(task_id=next_uid(), prompt_id=0, replica_idx=0,
+                       prompt_tokens=np.asarray(prompt, np.int32),
+                       max_new_tokens=n, group_id=gid, meta=dict(meta or {}))
+
+
+def _fake_fleet(n=2, **kw):
+    engines = [FakeEngine(**kw) for _ in range(n)]
+    proxies = [LLMProxy(e, name=f"p{i}") for i, e in enumerate(engines)]
+    return engines, proxies, ProxyRouter(proxies)
+
+
+# ---------------------------------------------------------------- routing
+def test_least_loaded_placement():
+    """Queue scheduling: each submission lands on the replica with the
+    least outstanding decode tokens at that moment."""
+    engines, proxies, router = _fake_fleet(slots=8)
+    client = RolloutClient(router)
+    h_long = client.submit(_task(100, prompt=[1] * 4))    # load 104 -> p0
+    h_short = client.submit(_task(4, prompt=[1] * 4))     # load 8   -> p1
+    h_next = client.submit(_task(4, prompt=[1] * 4))      # p1 (8+8 < 104)
+    assert proxies[0].load() == 104
+    assert proxies[1].load() == 16
+    router.start()
+    assert h_short.result(10).tokens is not None
+    assert h_next.result(10).tokens is not None
+    h_long.abort()
+    h_long.result(10)
+    router.stop()
+    assert set(engines[1].added) >= {h_short.task.task_id,
+                                     h_next.task.task_id}
+    assert router.routed == 3
+    assert router.load() == 0, "all load returned on completion/abort"
+
+
+def test_load_accounting_lifecycle():
+    """load() rises at submit and returns to zero after completion, abort
+    (active AND never-admitted pending), and retained-release."""
+    eng = FakeEngine(slots=1)
+    proxy = LLMProxy(eng)
+    client = RolloutClient(proxy)
+    h1 = client.submit(_task(5, prompt=[1, 2, 3]))
+    h2 = client.submit(_task(7, prompt=[1, 2, 3, 4]))
+    assert proxy.load() == (3 + 5) + (4 + 7)
+    proxy.start()
+    h1.result(10)
+    h2.abort()                         # may be active or pending when it lands
+    h2.result(10)
+    proxy.stop()
+    assert proxy.load() == 0
+
+
+def test_group_colocation():
+    """All G candidates of a GRPO group land on ONE replica; distinct
+    groups spread across the fleet."""
+    engines, proxies, router = _fake_fleet(n=2, slots=8)
+    router.start()
+    client = RolloutClient(router)
+    g1 = client.submit_group(expand_tasks(0, np.asarray([1, 2], np.int32),
+                                          3, 20, replicate=True))
+    g2 = client.submit_group(expand_tasks(1, np.asarray([1, 2], np.int32),
+                                          3, 20, replicate=True))
+    g1.results(10), g2.results(10)
+    router.stop()
+    on1 = {i for i, e in enumerate(engines)
+           if any(h.task.task_id in e.added for h in g1.handles)}
+    on2 = {i for i, e in enumerate(engines)
+           if any(h.task.task_id in e.added for h in g2.handles)}
+    assert len(on1) == 1 and len(on2) == 1, "each group on exactly one replica"
+    assert on1 != on2, "groups spread across the fleet"
+
+
+def test_num_return_sequences_group_colocates():
+    """The non-replicated group encoding routes as ONE placement too."""
+    engines, proxies, router = _fake_fleet(n=2, slots=8)
+    router.start()
+    client = RolloutClient(router)
+    task, = expand_tasks(0, np.asarray([1, 2], np.int32), 3, 4,
+                         replicate=False)
+    gh = client.submit(task)
+    results = gh.results(10)
+    router.stop()
+    assert len(results) == 3
+    on = {i for i, e in enumerate(engines)
+          if any(r.request_id in e.added for r in results)}
+    assert len(on) == 1
+
+
+def test_session_turns_follow_replica():
+    """Agentic session turns stay co-located (the radix cache holding the
+    conversation history is per-replica)."""
+    engines, proxies, router = _fake_fleet(n=2, slots=4)
+    router.start()
+    client = RolloutClient(router)
+    # skew the load so the session would OTHERWISE prefer replica 1 later
+    sess = client.session(max_new_tokens=3, context_mode="turn")
+    r1 = sess.turn(np.asarray([5, 6], np.int32)).result(10)
+    ballast = client.submit(_task(500, prompt=[1] * 8))   # skews the loads
+    r2 = sess.turn(np.asarray([7], np.int32)).result(10)
+    r3 = sess.turn(np.asarray([8], np.int32)).result(10)
+    ballast.abort()
+    ballast.result(10)
+    router.stop()
+    turn_rids = {r.request_id for r in (r1, r2, r3)}
+    on = {i for i, e in enumerate(engines) if turn_rids & set(e.added)}
+    assert len(on) == 1, f"session turns split across replicas: {on}"
+    assert turn_rids <= set(engines[on.pop()].added)
+
+
+def test_can_accept_admission_feedback():
+    """A replica whose engine can never fit the request is skipped —
+    queued there it would block forever."""
+    small = FakeEngine(slots=4, max_total_len=8)
+    big = FakeEngine(slots=4, max_total_len=10_000)
+    proxies = [LLMProxy(small, name="small"), LLMProxy(big, name="big")]
+    router = ProxyRouter(proxies).start()
+    client = RolloutClient(router)
+    h = client.submit(_task(50, prompt=[1] * 6))   # 56 tokens > small's 8
+    res = h.result(10)
+    router.stop()
+    assert not res.aborted and len(res.tokens) == 50
+    assert h.task.task_id in big.added and h.task.task_id not in small.added
+    with pytest.raises(ValueError, match="no replica"):
+        ProxyRouter([LLMProxy(FakeEngine(max_total_len=4))]).generate(
+            _task(50, prompt=[1] * 6), 0, lambda r: None)
+
+
+# ----------------------------------------------------- migration (fakes)
+def test_drain_migrates_resume_to_other_replica():
+    """A retained abort victim on a DRAINING replica migrates: pages are
+    released at home, the concatenated re-prefill lands on the other
+    replica, and the handle resolves exactly once with stitched legs."""
+    engines, proxies, router = _fake_fleet(n=2, slots=2)
+    router.start()
+    versions = [0]
+    client = RolloutClient(router, version_fn=lambda: versions[0])
+    h = client.submit(_task(40, prompt=[1, 2, 3]), version=0)
+    fired = []
+    h.add_done_callback(fired.append)
+    deadline = time.monotonic() + 10
+    while not any(e.active for e in engines) and time.monotonic() < deadline:
+        time.sleep(0.005)
+    home = 0 if engines[0].active else 1
+    router.drain(home)
+    versions[0] = 1
+    router.abort_stale(min_version=1, retain=True)
+    res = h.result(10)
+    time.sleep(0.05)
+    router.stop()
+    assert len(fired) == 1 and fired[0] is res, "resolves exactly once"
+    assert not res.aborted and len(res.tokens) == 40
+    assert client.migrations == 1 and router.migrations == 1
+    assert client.resumes == 0
+    assert res.legs[0][0] == 0 and res.legs[-1][0] == 1, \
+        "legs carry their policy versions"
+    assert sum(n for _, n in res.legs) == 40
+    assert not engines[home].retained, "parked pages released at home"
+    other = 1 - home
+    assert engines[other].added, "continuation re-prefilled on the target"
+
+
+def test_resume_stays_home_when_balanced():
+    """Without drain/overload, a retained abort resumes IN PLACE (page
+    re-attach — the cheap path), never migrating."""
+    engines, proxies, router = _fake_fleet(n=2, slots=2)
+    router.start()
+    client = RolloutClient(router, version_fn=lambda: 1)
+    h = client.submit(_task(30, prompt=[1, 2]), version=0)
+    deadline = time.monotonic() + 10
+    while not any(e.active for e in engines) and time.monotonic() < deadline:
+        time.sleep(0.005)
+    home = 0 if engines[0].active else 1
+    router.abort_stale(min_version=1, retain=True)
+    res = h.result(10)
+    router.stop()
+    assert not res.aborted and len(res.tokens) == 30
+    assert client.resumes == 1 and client.migrations == 0
+    assert engines[home].resumed, "resumed on the home replica"
+
+
+def test_migration_without_viable_target_falls_back_to_in_place_resume():
+    """When no other replica can take the grown concatenated prompt, the
+    migration attempt must NOT release the parked pages — the continuation
+    falls back to resuming in place (even on a draining replica)."""
+    big = FakeEngine(slots=2, max_total_len=10_000)
+    small = FakeEngine(slots=2, max_total_len=4)   # can never take the concat
+    proxies = [LLMProxy(big, name="big"), LLMProxy(small, name="small")]
+    router = ProxyRouter(proxies).start()
+    client = RolloutClient(router, version_fn=lambda: 1)
+    h = client.submit(_task(30, prompt=[1] * 6), version=0)   # -> big
+    deadline = time.monotonic() + 10
+    while not big.active and time.monotonic() < deadline:
+        time.sleep(0.005)
+    router.drain(0)                        # force a migration attempt
+    router.abort_stale(min_version=1, retain=True)
+    res = h.result(10)
+    router.stop()
+    assert not res.aborted and len(res.tokens) == 30
+    assert client.migrations == 0 and client.resumes == 1
+    assert big.resumed, "fell back to the in-place page re-attach"
+    assert not big.retained and not small.added
+
+
+def test_prefer_resume_overload_threshold():
+    """prefer_resume flips only past migrate_factor * min_load + margin."""
+    engines, proxies, router = _fake_fleet(n=2, slots=8)
+    router.migrate_factor = 1.0
+    router.migrate_margin_tokens = 0
+    client = RolloutClient(router)          # not started: loads are static
+    h_home = client.submit(_task(100, prompt=[1] * 4))   # p0, load 104
+    rid = h_home.task.task_id
+    assert router.prefer_resume(rid, 10) is False, \
+        "home carries 104 outstanding tokens vs 0: migrate"
+    client.submit(_task(300, prompt=[1] * 4))            # p1, load 304
+    assert router.prefer_resume(rid, 10) is True, \
+        "home is now the less-loaded replica: resume in place"
+
+
+# --------------------------------------------------- fleet weight sync
+def test_fleet_staged_sync_acks_all_replicas():
+    engines, proxies, router = _fake_fleet(n=3, slots=2)
+    ev = router.update_weights_async("w")
+    assert isinstance(ev, MultiEvent)
+    assert ev.wait(5) and ev.is_set()
+    assert all(e.update_count == 1 for e in engines)
+    assert router.staged_weight_updates == 3
+
+
+def test_multi_event_partial_not_set():
+    e1, e2 = threading.Event(), threading.Event()
+    ev = MultiEvent([e1, e2])
+    e1.set()
+    assert not ev.wait(0.05) and not ev.is_set()
+    e2.set()
+    assert ev.wait(1) and ev.is_set()
+
+
+def test_controller_fleet_sync_and_stats():
+    """AsyncController over a 2-replica fleet: overlapped sync stages on
+    every replica before the version advances; StepStats records loss +
+    fleet queue depth + per-replica active counts; the ack timeout is
+    plumbed."""
+    engines, proxies, router = _fake_fleet(n=2, slots=8)
+    router.start()
+    buf = SampleBuffer(batch_size=4, alpha=1)
+
+    def prompts():
+        i = 0
+        while True:
+            yield i, np.asarray([1, 2], np.int32)
+            i += 1
+
+    prod = RolloutProducer(router, buf, prompts(), group_size=1,
+                           max_new_tokens=3, reward_fn=lambda s: 1.0)
+    prod.start()
+    ctrl = AsyncController(buf, proxies, lambda batch: {"loss": 1.5},
+                           lambda: "weights", alpha=1,
+                           weight_sync="overlapped",
+                           weight_sync_timeout=17.0)
+    try:
+        stats = ctrl.train(3, timeout=60)
+    finally:
+        prod.stop()
+        buf.close()
+        router.stop()
+    assert ctrl.weight_sync_timeout == 17.0
+    assert len(stats) == 3
+    assert all(s.loss == 1.5 for s in stats), "train_fn metrics recorded"
+    assert all(len(s.active_per_replica) == 2 for s in stats)
+    assert all(s.queue_depth >= 0 for s in stats)
+    assert all(e.update_count == 3 for e in engines), \
+        "every replica acked every staged sync"
+    assert router.suspend_count == 0
+    # both replicas actually served work under queue scheduling
+    assert all(p.requests_completed > 0 for p in proxies)
+
+
+# ------------------------------------------------------ real paged fleet
+@pytest.fixture(scope="module")
+def paged_setup():
+    cfg = tiny("qwen3-4b", vocab_size=32)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _paged(api, params, **kw):
+    base = dict(num_slots=4, max_total_len=64, page_size=8, prefill_chunk=8,
+                eos_id=99, temperature=0.0)
+    base.update(kw)
+    return PagedDecodeEngine(api, params, **base)
+
+
+def _paged_fleet(api, params, n, **kw):
+    engines = [_paged(api, params, **kw) for _ in range(n)]
+    proxies = [LLMProxy(e, name=f"paged_proxy_{i}")
+               for i, e in enumerate(engines)]
+    return engines, proxies, ProxyRouter(proxies)
+
+
+@pytest.mark.timeout(240)
+def test_fleet_greedy_parity_n2_vs_n1(paged_setup):
+    """Acceptance: a 2-replica fleet is byte-identical to the single-proxy
+    path under greedy decoding — routing is an optimization, never a
+    semantic change."""
+    cfg, api, params = paged_setup
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, 30, n).astype(np.int32)
+               for n in (4, 6, 9, 12, 5, 8)]
+
+    def run_single():
+        eng = _paged(api, params, num_slots=6)
+        proxy = LLMProxy(eng).start()
+        client = RolloutClient(proxy)
+        handles = [client.submit(_task(8, p)) for p in prompts]
+        out = [list(h.result(60).tokens) for h in handles]
+        proxy.stop()
+        eng.audit_pages()
+        return out
+
+    def run_fleet():
+        engines, proxies, router = _paged_fleet(api, params, 2, num_slots=3)
+        router.start()
+        client = RolloutClient(router)
+        handles = [client.submit(_task(8, p)) for p in prompts]
+        out = [list(h.result(60).tokens) for h in handles]
+        router.stop()
+        for e in engines:
+            e.audit_pages()
+        # queue scheduling actually used both replicas
+        assert all(p.requests_completed > 0 for p in proxies)
+        return out
+
+    assert run_single() == run_fleet()
+
+
+@pytest.mark.timeout(240)
+def test_cross_replica_resume_after_weight_sync(paged_setup):
+    """Acceptance: a request aborted-with-retain by a fleet-wide weight
+    sync on a DRAINING replica migrates to the other replica and resolves
+    exactly once — greedy output identical to the uninterrupted run, legs
+    version-tagged across the sync."""
+    cfg, api, params = paged_setup
+    prompt = np.asarray([2, 9, 4, 3, 7], np.int32)
+    budget = 40
+
+    ref = _paged(api, params)
+    ref.add_request(0, prompt, budget)
+    base = None
+    while base is None:
+        for rid, toks, _ in ref.step():
+            base = list(toks)
+
+    engines, proxies, router = _paged_fleet(api, params, 2, num_slots=2)
+    router.start()
+    versions = [0]
+    client = RolloutClient(router, version_fn=lambda: versions[0])
+    h = client.submit(_task(budget, prompt), version=0)
+    fired = []
+    h.add_done_callback(fired.append)
+    deadline = time.monotonic() + 30
+    while (sum(e.total_tokens_decoded for e in engines) < 2
+           and time.monotonic() < deadline):
+        time.sleep(0.01)
+    home = 0 if engines[0].slots else 1
+    other = 1 - home
+    prefill_other_before = engines[other].total_prefill_tokens
+    # fleet-wide overlapped sync: stage on ALL replicas, version++, abort
+    ev = router.update_weights_async(params)
+    assert ev.wait(30)
+    versions[0] = 1
+    router.drain(home)                       # force the migration path
+    router.abort_stale(min_version=1, retain=True)
+    res = h.result(timeout=60)
+    time.sleep(0.1)
+    router.stop()
+    assert len(fired) == 1 and fired[0] is res, "resolves exactly once"
+    assert not res.aborted
+    assert list(res.tokens) == base, \
+        "migrated resume must preserve the greedy output"
+    assert client.migrations == 1 and router.migrations == 1
+    assert len(res.legs) >= 2
+    assert res.legs[0][0] == 0 and res.legs[-1][0] == 1
+    assert sum(n for _, n in res.legs) == budget
+    assert engines[other].total_prefill_tokens > prefill_other_before, \
+        "target replica re-prefilled the concatenated prefix"
+    assert not engines[home].retained, "home released the parked pages"
+    for e in engines:
+        e.audit_pages()
+    assert proxies[home].load() == 0 and proxies[other].load() == 0
+
+
+# ------------------------------------------------------------- pipeline
+def test_pipeline_fleet_build_and_rollout():
+    """num_rollout_replicas=2 shards slots across replicas behind a router
+    and the producer rolls out through it end-to-end;
+    num_rollout_replicas=1 keeps the exact single-proxy construction."""
+    from repro.launch.pipeline import PipelineSettings, build_rlvr_pipeline
+    MODEL = tiny("qwen3-4b", vocab_size=32)
+    s1 = PipelineSettings(async_generation_ratio=1, rollout_batch_size=4,
+                          num_return_sequences_in_group=2, num_slots=4,
+                          max_new_tokens=4, max_seq_len=32, page_size=8,
+                          prefill_chunk=8)
+    pipe1 = build_rlvr_pipeline(MODEL, s1)
+    assert pipe1.router is None and len(pipe1.proxies) == 1
+    assert pipe1.rollout_target is pipe1.proxy
+    assert pipe1.producer.proxy is pipe1.proxy
+    pipe1.shutdown()
+
+    s2 = PipelineSettings(async_generation_ratio=1, rollout_batch_size=4,
+                          num_return_sequences_in_group=2, num_slots=4,
+                          max_new_tokens=4, max_seq_len=32, page_size=8,
+                          prefill_chunk=8, num_rollout_replicas=2,
+                          weight_sync_timeout=33.0)
+    pipe = build_rlvr_pipeline(MODEL, s2)
+    assert pipe.router is not None and len(pipe.engines) == 2
+    assert all(e.num_slots == 2 for e in pipe.engines), "slots sharded"
+    assert pipe.rollout_target is pipe.router
+    assert pipe.controller.proxies == pipe.proxies
+    assert pipe.controller.weight_sync_timeout == 33.0
+    for p in pipe.proxies:
+        p.start()
+    pipe.producer.start()
+    try:
+        batch = pipe.buffer.get_batch(4, timeout=120)
+    finally:
+        pipe.shutdown()
+    assert len(batch) == 4
+    for b in batch:
+        assert len(np.asarray(b.response_tokens)) > 0
+        assert b.reward is not None
+    for e in pipe.engines:
+        e.audit_pages()
+
+
+# ------------------------------------------------------------ slow sweep
+@pytest.mark.slow
+@pytest.mark.timeout(600)
+def test_fleet_churn_audit_pages_clean(paged_setup):
+    """Churn sweep over a 2-replica fleet: interleaved submits, retained
+    aborts (with in-place resumes AND drained migrations), fleet weight
+    syncs.  Every handle resolves exactly once and audit_pages is clean on
+    every replica at the end."""
+    cfg, api, params = paged_setup
+    engines, proxies, router = _paged_fleet(api, params, 2, num_slots=3,
+                                            prefix_cache=True)
+    router.start()
+    versions = [0]
+    client = RolloutClient(router, version_fn=lambda: versions[0])
+    rng = np.random.default_rng(3)
+    resolved = []
+    handles = []
+    for wave in range(6):
+        for _ in range(4):
+            p = rng.integers(1, 30, int(rng.integers(3, 12))).astype(np.int32)
+            h = client.submit(_task(int(rng.integers(6, 16)), p),
+                              version=versions[0])
+            h.add_done_callback(resolved.append)
+            handles.append(h)
+        time.sleep(0.05)
+        if wave % 2 == 0:
+            ev = router.update_weights_async(params)
+            assert ev.wait(30)
+            versions[0] += 1
+            if wave == 2:
+                router.drain(0)
+            router.abort_stale(min_version=versions[0], retain=True)
+            if wave == 4:
+                router.undrain(0)
+    for h in handles:
+        res = h.result(timeout=120)
+        assert sum(n for _, n in res.legs) == len(res.tokens)
+    time.sleep(0.2)
+    router.stop()
+    assert len(resolved) == len(handles), "every handle resolves exactly once"
+    for i, e in enumerate(engines):
+        assert not e.retained, f"replica {i} leaked retained pages"
+        e.audit_pages()
+    assert router.load() == 0
