@@ -1,0 +1,199 @@
+"""Fault tolerance: kill a replica mid-workload, measure what survives.
+
+At fleet scale, replica crashes are routine; the elastic ``ProxyRouter``
+answers them by failing every in-flight handle on the dead replica over
+through the client's abort→resume path (re-admit the concatenated prefix
+on a survivor).  This benchmark quantifies the cost of one crash on the
+REAL rollout stack — N ``PagedDecodeEngine`` + ``LLMProxy`` replicas
+behind ``FaultyProxy`` wrappers and a router, driven in deterministic
+lockstep (makespan in *rounds* = parallel hardware time):
+
+* run the long-tail workload crash-free → baseline makespan;
+* rerun it, killing 1 replica 25% into the baseline makespan → fault
+  makespan.  The kill round and victim are fixed per seed, so both runs
+  are exactly reproducible.
+
+Measured per seed:
+
+* **recovered vs lost work** — every handle must resolve with its full
+  budget and (greedy decoding) byte-identical output to the crash-free
+  run: completed samples lost = 0 by construction or the bench fails.
+  The only waste is ``lost_tokens`` — decode progress of the victim's
+  in-flight requests at the kill, re-computed on survivors.
+* **makespan degradation** — (fault − base) / base rounds.  Killing 1 of
+  N replicas a quarter of the way in re-spreads ~3/4 of the work over
+  N−1 replicas, so degradation should stay ≤ 2/N (the acceptance bound:
+  ~2x the victim's fair share of the remaining work).
+
+Emits BENCH_fault_tolerance.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, flush_json
+from repro.configs import REGISTRY
+from repro.core.faults import wrap_fleet
+from repro.core.llm_proxy import LLMProxy
+from repro.core.rollout_client import RolloutClient
+from repro.core.router import ProxyRouter
+from repro.core.types import RolloutTask, next_uid
+from repro.models import get_api
+from repro.rollout.paged_engine import PagedDecodeEngine
+
+NUM_REPLICAS = 4
+NUM_REQUESTS = 32
+SLOTS_PER_REPLICA = 2
+PAGE_SIZE = 16
+PREFILL_CHUNK = 16
+MAX_TOTAL_LEN = 80
+# same long-tail regime as bench_queue_scheduling: the tail carries most
+# of the decode work, so a crash that orphans a tail request is the
+# expensive case worth measuring.
+BUDGETS = [2] * 20 + [8] * 6 + [40] * 6
+PROMPT_LENGTHS = [8, 12, 16, 20]
+SEEDS = (0, 1)
+KILL_FRACTION = 0.25          # kill 25% into the baseline makespan
+DEGRADATION_BOUND = 2.0 / NUM_REPLICAS
+
+
+def _workload(seed: int):
+    rng = np.random.default_rng(seed)
+    budgets = np.array(BUDGETS)
+    rng.shuffle(budgets)
+    prompts = [rng.integers(1, 60, PROMPT_LENGTHS[i % len(PROMPT_LENGTHS)])
+               .astype(np.int32) for i in range(NUM_REQUESTS)]
+    return [(prompts[i], int(budgets[i])) for i in range(NUM_REQUESTS)]
+
+
+def _fleet(api, params):
+    engines = [PagedDecodeEngine(api, params, num_slots=SLOTS_PER_REPLICA,
+                                 max_total_len=MAX_TOTAL_LEN,
+                                 page_size=PAGE_SIZE,
+                                 prefill_chunk=PREFILL_CHUNK, eos_id=9999,
+                                 temperature=0.0)
+               for _ in range(NUM_REPLICAS)]
+    proxies = wrap_fleet([LLMProxy(e, name=f"ft_proxy_{i}")
+                          for i, e in enumerate(engines)])
+    return engines, proxies, ProxyRouter(proxies)
+
+
+def _run(api, params, workload, *, kill_round=None, victim=None):
+    """Drive the workload in lockstep; optionally crash ``victim`` at
+    ``kill_round``.  Queue-scheduled dispatch keeps at most one request
+    per LIVE fleet slot in flight.  Returns a result dict."""
+    engines, proxies, router = _fleet(api, params)
+    client = RolloutClient(router)
+    handles = {}
+    todo = list(enumerate(workload))
+    rounds = 0
+    busy = 0
+    completed_at_kill = None
+    t0 = time.perf_counter()
+    while todo or not all(h.done() for h in handles.values()):
+        if kill_round is not None and rounds == kill_round:
+            completed_at_kill = router.requests_completed
+            proxies[victim].kill()
+            router.probe_health()       # detect + fail over, this round
+        alive_slots = router.replicas_alive * SLOTS_PER_REPLICA
+        submitted = False
+        while todo and (sum(not h.done() for h in handles.values())
+                        < alive_slots):
+            i, (prompt, budget) = todo.pop(0)
+            handles[i] = client.submit(RolloutTask(
+                task_id=next_uid(), prompt_id=i, replica_idx=0,
+                prompt_tokens=prompt, max_new_tokens=budget))
+            submitted = True
+        stepped = False
+        for p in proxies:
+            if p.step_once():
+                busy += 1
+                stepped = True
+        assert stepped or submitted, \
+            "fleet idle with undone handles (lost request?)"
+        rounds += 1
+    wall = time.perf_counter() - t0
+    outputs = {}
+    for i, h in handles.items():
+        res = h.result(0)
+        assert not res.aborted, f"handle {i} surfaced an abort"
+        assert len(res.tokens) == workload[i][1], f"handle {i} short budget"
+        outputs[i] = list(res.tokens)
+    router.fleet_audit()
+    completed = router.requests_completed
+    router.stop()
+    return {
+        "rounds": rounds, "busy_steps": busy, "wall_s": wall,
+        "outputs": outputs, "completed": completed,
+        "completed_at_kill": completed_at_kill,
+        "failovers": router.failovers, "lost_tokens": router.lost_tokens,
+        "replicas_alive": router.replicas_alive,
+    }
+
+
+def run() -> None:
+    cfg = dataclasses.replace(
+        REGISTRY["qwen3-4b"].smoke(), num_layers=2, d_model=128, num_heads=4,
+        head_dim=32, num_kv_heads=2, d_ff=256, vocab_size=64)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+
+    results = {"workload": {
+        "num_replicas": NUM_REPLICAS, "num_requests": NUM_REQUESTS,
+        "budgets": BUDGETS, "prompt_lengths": PROMPT_LENGTHS,
+        "slots_per_replica": SLOTS_PER_REPLICA, "seeds": list(SEEDS),
+        "kill_fraction": KILL_FRACTION,
+        "degradation_bound": DEGRADATION_BOUND,
+    }}
+    degradations = []
+    for seed in SEEDS:
+        workload = _workload(seed)
+        base = _run(api, params, workload)
+        kill_round = max(1, int(base["rounds"] * KILL_FRACTION))
+        victim = int(np.random.default_rng(seed).integers(NUM_REPLICAS))
+        fault = _run(api, params, workload, kill_round=kill_round,
+                     victim=victim)
+        assert fault["replicas_alive"] == NUM_REPLICAS - 1
+        assert fault["failovers"] >= 1 or fault["lost_tokens"] == 0
+        identical = fault["outputs"] == base["outputs"]
+        assert identical, "failover must preserve greedy outputs"
+        # zero completed samples lost: everything finished before the kill
+        # stays finished; the total completes the whole workload.
+        samples_lost = NUM_REQUESTS - len(fault["outputs"])
+        degradation = (fault["rounds"] - base["rounds"]) / base["rounds"]
+        degradations.append(degradation)
+        results[f"seed_{seed}"] = {
+            "base_makespan_rounds": base["rounds"],
+            "fault_makespan_rounds": fault["rounds"],
+            "kill_round": kill_round, "victim": victim,
+            "completed_at_kill": fault["completed_at_kill"],
+            "failovers": fault["failovers"],
+            "lost_tokens_recomputed": fault["lost_tokens"],
+            "samples_lost": samples_lost,
+            "makespan_degradation": degradation,
+            "outputs_identical": bool(identical),
+            "extra_busy_steps": fault["busy_steps"] - base["busy_steps"],
+        }
+        emit(f"fault_tolerance.seed{seed}.base_makespan_rounds",
+             base["rounds"], "")
+        emit(f"fault_tolerance.seed{seed}.fault_makespan_rounds",
+             fault["rounds"],
+             f"degradation={degradation:.3f} failovers={fault['failovers']} "
+             f"lost_tokens={fault['lost_tokens']}")
+    mean_deg = float(np.mean(degradations))
+    within = mean_deg <= DEGRADATION_BOUND
+    results["makespan_degradation_mean"] = mean_deg
+    results["within_bound"] = bool(within)
+    emit("fault_tolerance.makespan_degradation_mean", mean_deg,
+         f"bound={DEGRADATION_BOUND:.2f} ok={within}")
+    assert within, (f"makespan degradation {mean_deg:.3f} exceeds "
+                    f"2/N={DEGRADATION_BOUND:.2f}")
+    flush_json("BENCH_fault_tolerance.json", results)
+
+
+if __name__ == "__main__":
+    run()

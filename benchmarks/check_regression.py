@@ -1,0 +1,109 @@
+"""Bench-regression gate: fast re-runs vs the checked-in BENCH_*.json.
+
+Re-executes the FAST configurations of the two headline rollout benchmarks
+(queue scheduling at N=2, prefix cache) and compares their key speedup
+metrics against the committed baselines:
+
+* ``BENCH_queue_scheduling.json`` → ``replicas_2.queue_over_static_speedup``
+* ``BENCH_prefix_cache.json``     → ``shared_preamble.prefill_tokens_ratio``
+                                    and ``agentic_multi_turn.prefill_tokens_ratio``
+
+All three metrics are DETERMINISTIC (lockstep makespan rounds / prefill
+token counts — never wall clock), so a fresh run should reproduce the
+baseline exactly; a drop > ``--threshold`` (default 15%) means a real
+behavioral regression in placement or caching, and the script exits 1.
+Run by the non-blocking ``bench-regression`` CI job:
+
+  PYTHONPATH=src:. python benchmarks/check_regression.py
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+import numpy as np
+
+from benchmarks import bench_prefix_cache as pc
+from benchmarks import bench_queue_scheduling as qs
+from repro.configs import REGISTRY
+from repro.models import get_api
+
+
+def _api_params():
+    cfg = dataclasses.replace(
+        REGISTRY["qwen3-4b"].smoke(), num_layers=2, d_model=128, num_heads=4,
+        head_dim=32, num_kv_heads=2, d_ff=256, vocab_size=64)
+    api = get_api(cfg)
+    return api, api.init(jax.random.PRNGKey(0))
+
+
+def fresh_queue_speedup() -> float:
+    """bench_queue_scheduling's N=2 point only (the fast config)."""
+    api, params = _api_params()
+    statics, queues = [], []
+    for seed in qs.SEEDS:
+        workload = qs._workload(seed)
+        rs, _, _, out_s = qs._run(api, params, workload, 2, mode="static")
+        rq, _, _, out_q = qs._run(api, params, workload, 2, mode="queue")
+        assert out_s == out_q, "placement changed greedy outputs"
+        statics.append(rs)
+        queues.append(rq)
+    return float(np.mean(statics) / np.mean(queues))
+
+
+def fresh_prefix_ratios() -> tuple:
+    """bench_prefix_cache's two prefill-reduction ratios (already fast)."""
+    api, params = _api_params()
+    rng = np.random.default_rng(0)
+    pre = rng.integers(1, 60, pc.PRE_LEN).astype(np.int32)
+    prompts = [np.concatenate([pre,
+                               rng.integers(1, 60, pc.SFX_LEN).astype(np.int32)])
+               for _ in range(pc.NUM_PROMPTS)]
+    on, _ = pc._shared_preamble(api, params, prompts, cached=True)
+    off, _ = pc._shared_preamble(api, params, prompts, cached=False)
+    a_on, _ = pc._agentic_sim(api, params, cached=True)
+    a_off, _ = pc._agentic_sim(api, params, cached=False)
+    return (off["prefill_tokens"] / on["prefill_tokens"],
+            a_off["prefill_tokens"] / a_on["prefill_tokens"])
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated fractional drop vs baseline")
+    args = ap.parse_args()
+
+    with open("BENCH_queue_scheduling.json") as f:
+        base_qs = json.load(f)
+    with open("BENCH_prefix_cache.json") as f:
+        base_pc = json.load(f)
+
+    queue_speedup = fresh_queue_speedup()
+    preamble_ratio, agentic_ratio = fresh_prefix_ratios()
+    checks = [
+        ("queue_scheduling.replicas_2.queue_over_static_speedup",
+         queue_speedup, base_qs["replicas_2"]["queue_over_static_speedup"]),
+        ("prefix_cache.shared_preamble.prefill_tokens_ratio",
+         preamble_ratio, base_pc["shared_preamble"]["prefill_tokens_ratio"]),
+        ("prefix_cache.agentic_multi_turn.prefill_tokens_ratio",
+         agentic_ratio, base_pc["agentic_multi_turn"]["prefill_tokens_ratio"]),
+    ]
+
+    failed = False
+    for name, fresh, baseline in checks:
+        drop = (baseline - fresh) / baseline if baseline else 0.0
+        ok = drop <= args.threshold
+        failed |= not ok
+        print(f"{'OK  ' if ok else 'FAIL'} {name}: fresh={fresh:.4f} "
+              f"baseline={baseline:.4f} drop={drop * 100:+.1f}% "
+              f"(threshold {args.threshold * 100:.0f}%)")
+    if failed:
+        print("bench regression detected: speedup dropped beyond threshold")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

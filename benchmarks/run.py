@@ -10,7 +10,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import (bench_engine, bench_paged_engine, bench_prefix_cache,
+from benchmarks import (bench_engine, bench_fault_tolerance,
+                        bench_paged_engine, bench_prefix_cache,
                         bench_prefix_sharing, bench_queue_scheduling,
                         fig1b_throughput_scaling,
                         fig3_allocation_and_rollout, fig4_offpolicy_stability,
@@ -34,6 +35,7 @@ MODULES = [
     ("prefix_sharing", bench_prefix_sharing),
     ("prefix_cache", bench_prefix_cache),
     ("queue_scheduling", bench_queue_scheduling),
+    ("fault_tolerance", bench_fault_tolerance),
     ("roofline", roofline),
 ]
 

@@ -1,0 +1,243 @@
+"""Fault injection for the rollout fleet: crashed replicas as data.
+
+At fleet scale, replica death is a *scheduling event*, not an error
+(Laminar's failure-isolated rollout workers; AsyncFlow's stall-tolerant
+decoupled stages).  This module provides the machinery the elastic
+``ProxyRouter`` is tested and benchmarked against:
+
+* ``FaultyProxy`` — a transparent wrapper speaking the exact ``LLMProxy``
+  protocol that can be ``kill()``-ed at any moment.  A killed replica
+  behaves like a crashed process: its loop stops mid-flight, every
+  callback it would have fired is suppressed (results die with the
+  process — delivering them post-mortem would hide real failure modes),
+  command submissions raise ``ReplicaDeadError``, and a snapshot of the
+  decode progress lost in flight is kept for the router's ``lost_tokens``
+  accounting.
+* ``FaultInjector`` — seeded chaos: a background thread that kills random
+  live replicas while a workload runs (the CI ``faults`` tier), bounded
+  by ``max_kills``/``min_alive`` so sweeps terminate.
+
+The router detects death through ``healthy()`` (heartbeat/health-probe
+hook) or by catching ``ReplicaDeadError`` at dispatch, then fails every
+in-flight handle on the dead replica over through the client's existing
+abort→resume migration path — see ``ProxyRouter.mark_dead``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+class ReplicaDeadError(RuntimeError):
+    """Raised when a command is submitted to a crashed replica."""
+
+
+class FaultyProxy:
+    """Crash-injectable wrapper around an ``LLMProxy``.
+
+    Every protocol method delegates to the wrapped proxy until ``kill()``;
+    afterwards command submissions raise ``ReplicaDeadError``, the inner
+    loop is stopped, and callbacks of in-flight requests never fire — the
+    router's failover (not the dead replica) must resolve their handles.
+    Metric reads keep returning the inner proxy's last (frozen) values so
+    observability never throws mid-probe.
+
+    ``kill_after_steps`` arms a self-destruct: the replica dies the first
+    time its step counter crosses the threshold (checked on the caller of
+    ``step_once`` — lockstep drivers — and by a watchdog when the
+    threaded loop is used).
+    """
+
+    def __init__(self, inner, *, kill_after_steps: Optional[int] = None):
+        self.inner = inner
+        self.kill_after_steps = kill_after_steps
+        self._dead = threading.Event()
+        self._guard_lock = threading.Lock()
+        self._decoded_at_death: Dict[int, int] = {}
+        self._watchdog: Optional[threading.Thread] = None
+        self.kills = 0                   # 0 or 1; counters survive the crash
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def name(self) -> str:
+        return self.inner.name
+
+    @property
+    def engine(self):
+        return self.inner.engine
+
+    def healthy(self) -> bool:
+        """Health-probe hook: False once killed (or the inner loop died)."""
+        return not self._dead.is_set() and self.inner.healthy()
+
+    def kill(self) -> None:
+        """Simulate a replica crash NOW: snapshot the decode progress that
+        dies with the process, stop the loop, suppress all callbacks."""
+        with self._guard_lock:
+            if self._dead.is_set():
+                return
+            # what a real crash loses: tokens decoded for requests that
+            # were active on this replica and not yet delivered.
+            counts: Dict[int, int] = {}
+            peek = getattr(self.inner.engine, "peek_tokens", None)
+            for rid in list(self.inner._active):
+                try:
+                    counts[rid] = len(peek(rid)) if peek is not None else 0
+                except Exception:
+                    counts[rid] = 0
+            self._decoded_at_death = counts
+            self._dead.set()
+            self.kills = 1
+        self.inner.stop()
+
+    def decoded_counts(self) -> Dict[int, int]:
+        """Per-request decode progress lost at death (empty while alive) —
+        the router sums this into its ``lost_tokens`` counter."""
+        return dict(self._decoded_at_death)
+
+    def start(self) -> "FaultyProxy":
+        if self._dead.is_set():
+            raise ReplicaDeadError(f"{self.name} is dead")
+        self.inner.start()
+        if self.kill_after_steps is not None and self._watchdog is None:
+            self._watchdog = threading.Thread(
+                target=self._watch, name=f"{self.name}:watchdog", daemon=True)
+            self._watchdog.start()
+        return self
+
+    def _watch(self) -> None:
+        while not self._dead.is_set():
+            if self.inner.steps_executed >= self.kill_after_steps:
+                self.kill()
+                return
+            time.sleep(0.001)
+
+    def stop(self) -> None:
+        # stopping a dead replica is a no-op (the crash already stopped it)
+        if not self._dead.is_set():
+            self.inner.stop()
+
+    def step_once(self) -> bool:
+        """Lockstep driving: a dead replica executes nothing.  The armed
+        self-destruct fires here for thread-less (deterministic) fleets."""
+        if self._dead.is_set():
+            return False
+        if (self.kill_after_steps is not None
+                and self.inner.steps_executed >= self.kill_after_steps):
+            self.kill()
+            return False
+        return self.inner.step_once()
+
+    # ------------------------------------------------------------- commands
+    def _check(self) -> None:
+        if self._dead.is_set():
+            raise ReplicaDeadError(f"replica {self.name} is dead")
+
+    def _guard(self, callback: Callable) -> Callable:
+        """Callbacks of a crashed replica must NEVER fire: the results died
+        with the process, and a post-mortem delivery would race the
+        router's synthesized failover abort into a double resolution."""
+        def cb(res):
+            if not self._dead.is_set():
+                callback(res)
+        return cb
+
+    def generate(self, task, version, callback, **kw):
+        self._check()
+        return self.inner.generate(task, version, self._guard(callback), **kw)
+
+    def generate_group(self, tasks, version, callback):
+        self._check()
+        return self.inner.generate_group(tasks, version, self._guard(callback))
+
+    def generate_resumed(self, task, version, callback, resume_from, **kw):
+        self._check()
+        return self.inner.generate_resumed(task, version,
+                                           self._guard(callback),
+                                           resume_from=resume_from, **kw)
+
+    def abort(self, request_id, retain=False):
+        self._check()
+        self.inner.abort(request_id, retain=retain)
+
+    def abort_stale(self, min_version, retain=False):
+        self._check()
+        self.inner.abort_stale(min_version, retain=retain)
+
+    def release_retained(self, request_id):
+        self._check()
+        self.inner.release_retained(request_id)
+
+    def suspend(self):
+        self._check()
+        self.inner.suspend()
+
+    def resume(self):
+        self._check()
+        self.inner.resume()
+
+    def update_weights(self, params):
+        self._check()
+        self.inner.update_weights(params)
+
+    def update_weights_async(self, params):
+        self._check()
+        return self.inner.update_weights_async(params)
+
+    # ------------------------------------------------------------- metrics
+    # (delegated reads — frozen post-mortem, never raising)
+    def __getattr__(self, item):
+        return getattr(self.inner, item)
+
+
+def wrap_fleet(proxies: List, **kw) -> List[FaultyProxy]:
+    """Wrap every replica of a fleet for fault injection."""
+    return [p if isinstance(p, FaultyProxy) else FaultyProxy(p, **kw)
+            for p in proxies]
+
+
+class FaultInjector(threading.Thread):
+    """Seeded chaos monkey: kill random live replicas while work runs.
+
+    ``seed`` makes the victim/delay SEQUENCE reproducible; the interleaving
+    with the workload is still real concurrency — chaos tests assert
+    outcome invariants (every handle resolves exactly once, survivors
+    audit clean), never timing.  ``min_alive`` keeps the fleet routable;
+    ``max_kills`` bounds the sweep.
+    """
+
+    def __init__(self, victims: List[FaultyProxy], *, seed: int = 0,
+                 min_delay: float = 0.01, max_delay: float = 0.05,
+                 max_kills: int = 1, min_alive: int = 1,
+                 on_kill: Optional[Callable[[int], None]] = None):
+        super().__init__(name="fault_injector", daemon=True)
+        self.victims = list(victims)
+        self.rng = np.random.default_rng(seed)
+        self.min_delay = min_delay
+        self.max_delay = max_delay
+        self.max_kills = max_kills
+        self.min_alive = min_alive
+        self.on_kill = on_kill           # e.g. router.probe_health
+        self.killed: List[int] = []
+        # NB: not named _stop — threading.Thread owns that attribute
+        self._halt = threading.Event()
+
+    def stop(self) -> None:
+        self._halt.set()
+
+    def run(self) -> None:
+        while not self._halt.is_set() and len(self.killed) < self.max_kills:
+            delay = float(self.rng.uniform(self.min_delay, self.max_delay))
+            if self._halt.wait(delay):
+                return
+            alive = [i for i, v in enumerate(self.victims) if v.healthy()]
+            if len(alive) <= self.min_alive:
+                continue
+            idx = int(self.rng.choice(alive))
+            self.victims[idx].kill()
+            self.killed.append(idx)
+            if self.on_kill is not None:
+                self.on_kill(idx)

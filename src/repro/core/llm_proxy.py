@@ -136,6 +136,25 @@ class LLMProxy:
             return False
         return True
 
+    def owns_request(self, request_id: int) -> bool:
+        """Whether this replica currently knows the request — active,
+        queued pending, or parked as retained pages.  Fleet audits use
+        this to prove the router's rid→replica map never leaks entries
+        for requests that already finished.  Commands still in the
+        submit queue are not visible: call at quiescence."""
+        if request_id in self._active:
+            return True
+        while True:     # lock-free snapshot, same idiom as num_pending
+            try:
+                pending = [r.request_id for e in tuple(self._pending)
+                           for r in self._entry_requests(e)]
+                break
+            except RuntimeError:
+                continue
+        if request_id in pending:
+            return True
+        return request_id in getattr(self.engine, "retained", {})
+
     # ------------------------------------------------------------- commands
     def generate(self, task: RolloutTask, version: int,
                  callback: Callable[[GenerationResult], None],
@@ -248,6 +267,15 @@ class LLMProxy:
         """Weight-sync phase 3."""
         self._suspended.clear()
         self._resumed.set()
+
+    def healthy(self) -> bool:
+        """Heartbeat/health-probe hook for fleet routers: True while the
+        proxy can still make progress (loop thread alive, or not started —
+        lockstep drivers step un-started proxies by hand)."""
+        if self._stop.is_set():
+            return False
+        t = self._thread
+        return t is None or t.is_alive()
 
     def stop(self) -> None:
         self._stop.set()

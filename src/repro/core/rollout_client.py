@@ -534,17 +534,24 @@ class RolloutClient:
                     # the pages are still parked (the router releases only
                     # after placing) — resume in place instead.
                     self._inflight.pop(new_rid, None)
-            self.resumes += 1
             resumed = RolloutTask(
                 task_id=new_rid, prompt_id=t.prompt_id,
                 replica_idx=t.replica_idx, prompt_tokens=h.orig_prompt,
                 max_new_tokens=remaining, group_id=t.group_id,
                 meta=dict(t.meta))
             self._inflight[new_rid] = h
-            self.proxy.generate_resumed(resumed, version, self._dispatch,
-                                        resume_from=res.request_id,
-                                        **stream)
-            return
+            try:
+                self.proxy.generate_resumed(resumed, version, self._dispatch,
+                                            resume_from=res.request_id,
+                                            **stream)
+                self.resumes += 1
+                return
+            except Exception:
+                # the replica holding the retained pages died between the
+                # abort and this resume (router raises: nothing left to
+                # re-attach) — fall through to re-prefilling the
+                # concatenated prefix on a live replica.
+                self._inflight.pop(new_rid, None)
         self.reprefills += 1
         resumed = RolloutTask(
             task_id=new_rid, prompt_id=t.prompt_id, replica_idx=t.replica_idx,

@@ -1,4 +1,4 @@
-"""ProxyRouter: queue scheduling across a fleet of rollout replicas (§4.3).
+"""ProxyRouter: queue scheduling across an elastic fleet of rollout replicas.
 
 The paper's headline rollout mechanism is *queue scheduling*: instead of
 statically partitioning a batch across inference workers (and waiting for
@@ -23,22 +23,43 @@ replicas behind one object that speaks the exact ``LLMProxy`` protocol, so
   or migrate; ``generate_migrated`` frees the parked pages on the home
   replica and routes the client-built concatenated re-prefill to a
   less-loaded one.  Migration triggers when the home replica is draining
-  (``drain()``) or overloaded past ``migrate_factor``/``migrate_margin``.
+  (``drain()``), overloaded past ``migrate_factor``/``migrate_margin``, or
+  DEAD (its parked pages died with it).
+* **Replica lifecycle & crash failover** — every replica carries a state
+  (``healthy``/``draining``/``dead``/``retired``).  Death is detected by
+  the ``healthy()`` heartbeat probe (``probe_health`` — poll it, or run
+  ``start_health_monitor``) or by catching ``ReplicaDeadError`` at
+  dispatch.  ``mark_dead`` then fails EVERY in-flight handle on the dead
+  replica over through the client's existing abort→resume continuation: a
+  synthesized non-resumable abort makes the client re-admit the request's
+  concatenated prefix (original prompt + all completed legs) on a live
+  replica — exactly-once handle resolution, leg/version tags preserved,
+  no completed sample ever lost.  Only the dead replica's un-delivered
+  current-leg decode progress is re-computed (``lost_tokens``).
+* **Elasticity** — ``add_replica`` grows the fleet mid-run (warmed with
+  the last-synced weights before taking traffic — the reverse of
+  ``drain``); an ``AutoscalePolicy`` drives load-triggered scaling from
+  the fleet's ``queue_depth``/``active_per_replica`` stats with
+  hysteresis + cooldown, retiring drained replicas on scale-down.
 * **Fleet-wide weight sync** — ``update_weights[_async]`` fan out to every
-  replica; the staged variant returns an aggregate event that is set once
-  ALL replicas acknowledge, so the controller advances the policy version
-  exactly when the whole fleet holds the new weights.
+  live replica; the staged variant returns an aggregate event that is set
+  once all LIVE replicas acknowledge — a replica dying mid-sync has its
+  ack waived instead of deadlocking the trainer.
 * **Aggregated observability** — ``cache_stats``/``load``/``queue_depth``
-  sum across replicas; ``replica_stats`` exposes the per-replica view
-  (load, active/pending, staleness, cache hits, draining).
+  sum across live replicas; ``replica_stats`` exposes the per-replica view
+  (state, load, active/pending, staleness, cache hits); ``fleet_audit``
+  asserts the rid→replica map is consistent (and empty at quiescence) and
+  runs every live engine's ``audit_pages``.
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
 import threading
 import time
 from typing import Callable, Dict, List, Optional
 
+from repro.core.faults import ReplicaDeadError
 from repro.core.llm_proxy import LLMProxy
 from repro.core.types import GenerationResult, RolloutTask
 
@@ -68,42 +89,323 @@ class MultiEvent:
         return True
 
 
+class FleetSyncEvent(MultiEvent):
+    """Fleet-wide staged sync that tolerates replica death: set once every
+    replica has acknowledged OR died — a crashed replica serves no traffic,
+    so waiting for its ack would only deadlock the trainer.  ``wait``
+    re-probes fleet health so death is detected even without a monitor
+    thread running."""
+
+    def __init__(self, pairs: List[tuple], router: "ProxyRouter"):
+        super().__init__([e for _, e in pairs])
+        self._pairs = list(pairs)
+        self._router = router
+
+    def is_set(self) -> bool:
+        down = self._router._down()
+        return all(e.is_set() or i in down for i, e in self._pairs)
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if self.is_set():
+                return True
+            if deadline is not None and time.monotonic() >= deadline:
+                return False
+            self._router.probe_health()
+            time.sleep(0.002)
+
+
+@dataclasses.dataclass
+class AutoscalePolicy:
+    """Load-triggered elasticity knobs (hysteresis by consecutive-tick
+    patience + post-action cooldown so load breathing doesn't flap).
+
+    Scale up when fleet queue depth exceeds ``queue_high`` pending requests
+    per live replica for ``up_patience`` consecutive ticks; scale down when
+    slot utilization sits below ``active_low`` with an empty queue for
+    ``down_patience`` ticks (the victim drains first, retiring only once
+    idle — in-flight work is never killed by the autoscaler)."""
+    min_replicas: int = 1
+    max_replicas: int = 8
+    queue_high: float = 4.0      # pending per live replica → scale up
+    active_low: float = 0.25     # active/slot utilization → scale down
+    up_patience: int = 2
+    down_patience: int = 3
+    cooldown: int = 2            # ticks after any action with no new action
+
+
+@dataclasses.dataclass
+class _Home:
+    """Per-request routing record: where it lives, and everything needed
+    to synthesize its failover abort if that replica dies."""
+    idx: int
+    callback: Callable[[GenerationResult], None]
+    version: int
+    retained: bool = False       # parked pages (abort-with-retain victim)
+
+
 class ProxyRouter:
     """N proxy/engine replicas behind the single-proxy protocol.
 
     ``migrate_factor`` / ``migrate_margin_tokens`` bound when an
     aborted-with-retain request migrates instead of resuming in place: the
     home replica must carry more than ``factor * min_load + margin``
-    outstanding tokens (or be draining).  In-place resume re-attaches
+    outstanding tokens (or be draining/dead).  In-place resume re-attaches
     retained pages at zero prefill cost, so migration has to buy real
     rebalancing to be worth a concatenated re-prefill.
+
+    ``replica_factory`` builds a fresh proxy for ``add_replica()`` /
+    autoscale scale-up; ``autoscale`` arms the load-triggered policy
+    (ticked by the health monitor, or manually via ``autoscale_tick``).
     """
 
     def __init__(self, proxies: List[LLMProxy], *,
                  migrate_factor: float = 2.0,
-                 migrate_margin_tokens: int = 128):
+                 migrate_margin_tokens: int = 128,
+                 replica_factory: Optional[Callable[[], LLMProxy]] = None,
+                 autoscale: Optional[AutoscalePolicy] = None):
         assert proxies, "router needs at least one replica"
         self.proxies = list(proxies)
         self.migrate_factor = migrate_factor
         self.migrate_margin_tokens = migrate_margin_tokens
+        self.replica_factory = replica_factory
+        self.autoscale = autoscale
         self._lock = threading.RLock()
-        self._home: Dict[int, int] = {}        # request_id -> replica idx
+        self._home: Dict[int, _Home] = {}      # request_id -> routing record
         # requests whose callback resolved BEFORE _register could record
         # them (submit→resolve race on the proxy loop thread): _register
         # must not re-insert a mapping nobody will ever remove.
         self._early_resolved: set = set()
+        # rids resolved by a synthesized failover abort: a late real
+        # callback from the (not-quite-dead-yet) replica must be dropped,
+        # not forwarded — the failover leg already owns the handle.
+        self._failed_over: set = set()
+        # retained rids whose parked pages died with their replica: the
+        # continuation must re-prefill elsewhere, never resume in place.
+        self._lost_retained: set = set()
         self._group_home: "collections.OrderedDict[int, int]" = \
             collections.OrderedDict()
         self._session_home: "collections.OrderedDict[int, int]" = \
             collections.OrderedDict()
         self._draining: set = set()
+        self._dead: set = set()                # crashed (failure counters)
+        self._retired: set = set()             # scaled down cleanly
+        self._scaledown_pending: set = set()   # draining toward retirement
+        self._started = False
+        self._last_weights = None              # warm-start for add_replica
+        self._monitor: Optional[threading.Thread] = None
+        self._monitor_stop = threading.Event()
+        self._up_streak = 0
+        self._down_streak = 0
+        self._cooldown = 0
         self.routed = 0
         self.migrations = 0
+        self.failovers = 0                     # handles failed over off dead replicas
+        self.lost_tokens = 0                   # decode progress lost to crashes
+        self.replicas_failed = 0
+        self.replicas_added = 0
+        self.scale_ups = 0
+        self.scale_downs = 0
+
+    # ---------------------------------------------------------- lifecycle
+    def _down(self) -> set:
+        with self._lock:
+            return self._dead | self._retired
+
+    def replica_state(self, idx: int) -> str:
+        with self._lock:
+            if idx in self._dead:
+                return "dead"
+            if idx in self._retired:
+                return "retired"
+            if idx in self._draining:
+                return "draining"
+            return "healthy"
+
+    @property
+    def replicas_alive(self) -> int:
+        with self._lock:
+            return len(self.proxies) - len(self._dead) - len(self._retired)
+
+    def _live(self) -> List[int]:
+        """Replicas that can still execute work (healthy or draining)."""
+        down = self._down()
+        return [i for i in range(len(self.proxies)) if i not in down]
+
+    def probe_health(self) -> List[int]:
+        """Heartbeat sweep: ask every live replica ``healthy()``; mark the
+        ones that fail (or raise) dead and fail their work over.  Returns
+        the newly dead indices."""
+        newly: List[int] = []
+        for i in self._live():
+            p = self.proxies[i]
+            probe = getattr(p, "healthy", None)
+            try:
+                ok = probe() if probe is not None else True
+            except Exception:
+                ok = False
+            if not ok:
+                self.mark_dead(i)
+                newly.append(i)
+        return newly
+
+    def mark_dead(self, idx: int) -> None:
+        """Crash handling — the paper's queue-scheduling gains assume the
+        dispatcher always has healthy workers; this is what keeps that true.
+
+        Every in-flight request homed on the dead replica fails over: its
+        consumer callback receives a synthesized non-resumable abort, which
+        the RolloutClient continuation answers by re-admitting the
+        concatenated prefix (original prompt + completed legs) on a live
+        replica — exactly-once resolution, nothing completed is lost.
+        Retained (parked-pages) victims are remembered in
+        ``_lost_retained`` so their continuation migrates instead of
+        resuming into pages that no longer exist."""
+        with self._lock:
+            if idx in self._dead or idx in self._retired:
+                return
+            self._dead.add(idx)
+            self._draining.discard(idx)
+            self._scaledown_pending.discard(idx)
+            self.replicas_failed += 1
+            fail: List[tuple] = []
+            for rid, rec in list(self._home.items()):
+                if rec.idx != idx:
+                    continue
+                del self._home[rid]
+                self._failed_over.add(rid)
+                if rec.retained:
+                    self._lost_retained.add(rid)
+                else:
+                    fail.append((rid, rec))
+        # decode progress that died with the replica (sim-measurable hook)
+        counts: Dict[int, int] = {}
+        dc = getattr(self.proxies[idx], "decoded_counts", None)
+        if dc is not None:
+            try:
+                counts = dc()
+            except Exception:
+                counts = {}
+        for rid, rec in fail:
+            self.lost_tokens += int(counts.get(rid, 0))
+            self.failovers += 1
+            rec.callback(GenerationResult(
+                request_id=rid, task=None, tokens=None, logprobs=None,
+                version_started=rec.version, aborted=True, partial=True,
+                resumable=False))
+
+    def add_replica(self, proxy: Optional[LLMProxy] = None, *,
+                    warm: bool = True) -> int:
+        """Grow the fleet mid-run (the reverse of ``drain``): append a
+        replica, warm it with the last-synced weights BEFORE it takes
+        traffic (a cold replica would serve the initial policy), and start
+        its loop if the fleet is running.  Returns the new index."""
+        if proxy is None:
+            if self.replica_factory is None:
+                raise RuntimeError("add_replica() needs a proxy or a "
+                                   "replica_factory")
+            proxy = self.replica_factory()
+        if warm and self._last_weights is not None:
+            # pre-start staging applies inline; a started proxy stages the
+            # swap and we wait for the ack so no request sees cold weights.
+            proxy.update_weights_async(self._last_weights).wait(timeout=30)
+        with self._lock:
+            idx = len(self.proxies)
+            self.proxies.append(proxy)
+            self.replicas_added += 1
+        if self._started:
+            proxy.start()
+        return idx
+
+    def _retire(self, idx: int) -> None:
+        """Finish a scale-down: the drained replica stops and leaves the
+        placement set for good (distinct from ``dead`` — not a failure)."""
+        with self._lock:
+            if idx in self._retired or idx in self._dead:
+                return
+            self._retired.add(idx)
+            self._draining.discard(idx)
+            self._scaledown_pending.discard(idx)
+            self.scale_downs += 1
+        self.proxies[idx].stop()
+
+    # --------------------------------------------------------- autoscaling
+    def autoscale_tick(self) -> Optional[str]:
+        """One observation of the load-triggered policy: retire drained
+        scale-down victims, then scale up/down when the patience streaks
+        cross their thresholds (no action during cooldown).  Returns
+        "up" | "down" | None for observability."""
+        pol = self.autoscale
+        if pol is None:
+            return None
+        with self._lock:
+            pending_retire = list(self._scaledown_pending)
+        for i in pending_retire:
+            p = self.proxies[i]
+            if p.num_active == 0 and p.num_pending == 0 and p.load() == 0:
+                self._retire(i)
+        live = self._live()
+        n = len(live)
+        queue = sum(self.proxies[i].num_pending for i in live)
+        active = sum(self.proxies[i].num_active for i in live)
+        capacity = sum(self.proxies[i].num_active
+                       + self.proxies[i].engine.num_free_slots for i in live)
+        util = active / capacity if capacity else 0.0
+        self._up_streak = (self._up_streak + 1
+                           if n and queue > pol.queue_high * n else 0)
+        self._down_streak = (self._down_streak + 1
+                             if queue == 0 and util < pol.active_low else 0)
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return None
+        placeable = [i for i in live if i not in self._draining]
+        if (self._up_streak >= pol.up_patience and n < pol.max_replicas
+                and self.replica_factory is not None):
+            self.add_replica()
+            self.scale_ups += 1
+            self._up_streak = 0
+            self._cooldown = pol.cooldown
+            return "up"
+        if (self._down_streak >= pol.down_patience
+                and len(placeable) > pol.min_replicas):
+            # drain the least-loaded placeable replica; it retires on a
+            # later tick once its in-flight work finishes.
+            victim = min(placeable, key=lambda i: (self.proxies[i].load(), -i))
+            with self._lock:
+                self._draining.add(victim)
+                self._scaledown_pending.add(victim)
+            self._down_streak = 0
+            self._cooldown = pol.cooldown
+            return "down"
+        return None
+
+    def start_health_monitor(self, interval: float = 0.02) -> None:
+        """Background heartbeat: probe fleet health (and tick the
+        autoscaler) every ``interval`` seconds until ``stop()``."""
+        if self._monitor is not None:
+            return
+
+        def loop():
+            while not self._monitor_stop.wait(interval):
+                self.probe_health()
+                self.autoscale_tick()
+        self._monitor = threading.Thread(target=loop, name="fleet_health",
+                                         daemon=True)
+        self._monitor.start()
 
     # ---------------------------------------------------------- placement
     def _alive(self) -> List[int]:
-        idxs = [i for i in range(len(self.proxies)) if i not in self._draining]
-        return idxs or list(range(len(self.proxies)))
+        down = self._down()
+        idxs = [i for i in range(len(self.proxies))
+                if i not in down and i not in self._draining]
+        if idxs:
+            return idxs
+        # every live replica draining: they can still run work
+        idxs = [i for i in range(len(self.proxies)) if i not in down]
+        if not idxs:
+            raise RuntimeError("no live replicas in the fleet")
+        return idxs
 
     @staticmethod
     def _pin(pins: "collections.OrderedDict", key, idx: int) -> None:
@@ -118,15 +420,16 @@ class ProxyRouter:
         their radix-cached history lives, GRPO groups stay co-located,
         everything else goes least-outstanding-tokens.  A pin is honored
         only while the pinned replica can still EVER take the request —
-        a session whose conversation outgrew its home's capacity re-places
-        (and re-pins) instead of queueing there forever."""
+        a session whose conversation outgrew its home's capacity (or whose
+        home died) re-places (and re-pins) instead of queueing there."""
         plen = len(task.prompt_tokens)
         with self._lock:
+            down = self._dead | self._retired
             sid = task.meta.get("session_id")
             if sid is not None:
                 idx = self._session_home.get(sid)
                 if idx is not None and idx not in self._draining \
-                        and idx != exclude \
+                        and idx not in down and idx != exclude \
                         and self.proxies[idx].can_accept(
                             plen, task.max_new_tokens):
                     self.routed += 1
@@ -135,7 +438,7 @@ class ProxyRouter:
             if gid is not None and gid >= 0:
                 idx = self._group_home.get(gid)
                 if idx is not None and idx not in self._draining \
-                        and idx != exclude \
+                        and idx not in down and idx != exclude \
                         and self.proxies[idx].can_accept(
                             plen, task.max_new_tokens):
                     self.routed += 1
@@ -158,24 +461,55 @@ class ProxyRouter:
             self.routed += 1
             return idx
 
-    def _register(self, idx: int, rids) -> None:
+    def _register(self, idx: int, rids, callback: Callable,
+                  version: int) -> None:
+        stranded: List[tuple] = []
         with self._lock:
+            down = self._dead | self._retired
             for rid in (rids if isinstance(rids, list) else [rids]):
                 if rid in self._early_resolved:
                     self._early_resolved.discard(rid)   # already resolved
+                elif rid in self._home:
+                    self._home[rid].idx = idx   # retained re-insert won race
                 else:
-                    self._home[rid] = idx
+                    rec = _Home(idx, callback, version)
+                    if idx in down:
+                        # the replica died between the dispatch liveness
+                        # check and this registration: mark_dead already
+                        # swept the map, so nobody else will fail this rid
+                        # over — do it here or the handle hangs forever.
+                        self._failed_over.add(rid)
+                        stranded.append((rid, rec))
+                    else:
+                        self._home[rid] = rec
+        for rid, rec in stranded:
+            self.failovers += 1
+            rec.callback(GenerationResult(
+                request_id=rid, task=None, tokens=None, logprobs=None,
+                version_started=rec.version, aborted=True, partial=True,
+                resumable=False))
 
-    def _tracked(self, idx: int, callback: Callable) -> Callable:
+    def _tracked(self, idx: int, callback: Callable,
+                 version: int = 0) -> Callable:
         """Wrap the consumer callback so the rid→replica map follows each
         request's life: dropped on resolution, kept while retained pages
         park on the replica (resume/release must find them).  A request
         resolving before ``_register`` runs (the proxy loop won the race)
-        is remembered so registration doesn't leave a stale entry."""
+        is remembered so registration doesn't leave a stale entry; a
+        result arriving AFTER the rid was failed over is dropped — the
+        synthesized failover abort already owns the handle."""
         def cb(res: GenerationResult) -> None:
             with self._lock:
+                if res.request_id in self._failed_over:
+                    self._failed_over.discard(res.request_id)
+                    return
                 if res.aborted and res.resumable:
-                    self._home[res.request_id] = idx
+                    rec = self._home.get(res.request_id)
+                    if rec is not None:
+                        rec.retained = True
+                    else:
+                        self._home[res.request_id] = _Home(
+                            idx, callback, res.version_started, retained=True)
                 elif self._home.pop(res.request_id, None) is None:
                     self._early_resolved.add(res.request_id)
             callback(res)
@@ -185,21 +519,32 @@ class ProxyRouter:
     def generate(self, task: RolloutTask, version: int,
                  callback: Callable[[GenerationResult], None],
                  stream_cb: Optional[Callable] = None):
-        idx = self._place(task)
         kw = {"stream_cb": stream_cb} if stream_cb is not None else {}
-        rids = self.proxies[idx].generate(task, version,
-                                          self._tracked(idx, callback), **kw)
-        self._register(idx, rids)
-        return rids
+        while True:
+            idx = self._place(task)
+            try:
+                rids = self.proxies[idx].generate(
+                    task, version, self._tracked(idx, callback, version),
+                    **kw)
+            except ReplicaDeadError:
+                self.mark_dead(idx)     # stale probe: detected at dispatch
+                continue
+            self._register(idx, rids, callback, version)
+            return rids
 
     def generate_group(self, tasks: List[RolloutTask], version: int,
                        callback: Callable[[GenerationResult], None]) -> List[int]:
         assert tasks, "empty group"
-        idx = self._place(tasks[0])
-        rids = self.proxies[idx].generate_group(tasks, version,
-                                                self._tracked(idx, callback))
-        self._register(idx, rids)
-        return rids
+        while True:
+            idx = self._place(tasks[0])
+            try:
+                rids = self.proxies[idx].generate_group(
+                    tasks, version, self._tracked(idx, callback, version))
+            except ReplicaDeadError:
+                self.mark_dead(idx)
+                continue
+            self._register(idx, rids, callback, version)
+            return rids
 
     def generate_resumed(self, task: RolloutTask, version: int,
                          callback: Callable[[GenerationResult], None],
@@ -209,32 +554,43 @@ class ProxyRouter:
         they cannot re-attach anywhere else, so an unknown ``resume_from``
         is a caller bug and fails loudly (routed blind, the request would
         pend forever on a replica whose ``can_resume`` never passes).
-        (Migration goes through ``generate_migrated`` instead.)"""
+        (Migration goes through ``generate_migrated`` instead.)  A home
+        replica found dead here raises ``ReplicaDeadError`` — the client
+        falls back to the concatenated re-prefill path."""
         with self._lock:
-            idx = self._home.get(resume_from)
-        if idx is None:
+            rec = self._home.get(resume_from)
+        if rec is None:
             raise ValueError(f"resume_from={resume_from} has no retained "
                              "pages on any replica known to this router")
+        idx = rec.idx
         kw = {"stream_cb": stream_cb} if stream_cb is not None else {}
-        rid = self.proxies[idx].generate_resumed(
-            task, version, self._tracked(idx, callback),
-            resume_from=resume_from, **kw)
+        try:
+            rid = self.proxies[idx].generate_resumed(
+                task, version, self._tracked(idx, callback, version),
+                resume_from=resume_from, **kw)
+        except ReplicaDeadError:
+            self.mark_dead(idx)
+            raise
         with self._lock:
             self._home.pop(resume_from, None)
-        self._register(idx, rid)
+        self._register(idx, rid, callback, version)
         return rid
 
     # ------------------------------------------------- resume migration
     def prefer_resume(self, resume_from: int, remaining: int) -> bool:
         """Continuation-placement feedback for the RolloutClient: True →
         resume in place (retained pages re-attach, zero re-prefill);
-        False → the home replica is draining or overloaded enough that a
-        concatenated re-prefill on another replica wins."""
+        False → the home replica is draining, dead, or overloaded enough
+        that a concatenated re-prefill on another replica wins."""
         with self._lock:
-            idx = self._home.get(resume_from)
-            if idx is None or len(self.proxies) == 1:
+            if resume_from in self._lost_retained:
+                return False            # pages died with the replica
+            rec = self._home.get(resume_from)
+            if rec is None or len(self.proxies) == 1:
                 return True
-            if idx in self._draining:
+            idx = rec.idx
+            if idx in self._draining or idx in self._dead \
+                    or idx in self._retired:
                 return False
             others = [i for i in self._alive() if i != idx]
         if not others:
@@ -257,14 +613,21 @@ class ProxyRouter:
         Placement is confirmed BEFORE the parked pages are released: when
         no replica can take the (grown) concatenated prompt this raises
         with the pages still retained, and the RolloutClient falls back to
-        resuming in place."""
+        resuming in place.  Pages that died with a crashed replica
+        (``_lost_retained``) have nothing left to release."""
         with self._lock:
-            home = self._home.get(release_from)
+            rec = self._home.get(release_from)
+            home = rec.idx if rec is not None else None
         idx = self._place(task, exclude=home)     # may raise: nothing freed
         with self._lock:
             self._home.pop(release_from, None)
-        if home is not None:
-            self.proxies[home].release_retained(release_from)
+            lost = release_from in self._lost_retained
+            self._lost_retained.discard(release_from)
+        if home is not None and not lost and home not in self._down():
+            try:
+                self.proxies[home].release_retained(release_from)
+            except ReplicaDeadError:
+                self.mark_dead(home)
         with self._lock:
             sid = task.meta.get("session_id")
             if sid is not None:
@@ -274,48 +637,84 @@ class ProxyRouter:
                 self._pin(self._group_home, gid, idx)
             self.migrations += 1
         kw = {"stream_cb": stream_cb} if stream_cb is not None else {}
-        rid = self.proxies[idx].generate(task, version,
-                                         self._tracked(idx, callback), **kw)
-        self._register(idx, rid)
-        return rid
+        while True:
+            try:
+                rid = self.proxies[idx].generate(
+                    task, version, self._tracked(idx, callback, version),
+                    **kw)
+            except ReplicaDeadError:
+                self.mark_dead(idx)
+                idx = self._place(task, exclude=home)
+                continue
+            self._register(idx, rid, callback, version)
+            return rid
 
     # ------------------------------------------------------------- control
     def abort(self, request_id: int, retain: bool = False) -> None:
         with self._lock:
-            idx = self._home.get(request_id)
-        if idx is not None:
-            self.proxies[idx].abort(request_id, retain=retain)
+            rec = self._home.get(request_id)
+        if rec is not None:
+            if rec.idx in self._down():
+                return                  # already failed over / pages gone
+            try:
+                self.proxies[rec.idx].abort(request_id, retain=retain)
+            except ReplicaDeadError:
+                self.mark_dead(rec.idx)
             return
-        for p in self.proxies:     # unknown rid: broadcast (no-op on misses)
-            p.abort(request_id, retain=retain)
+        for i in self._live():   # unknown rid: broadcast (no-op on misses)
+            try:
+                self.proxies[i].abort(request_id, retain=retain)
+            except ReplicaDeadError:
+                self.mark_dead(i)
 
     def abort_stale(self, min_version: int, retain: bool = False) -> None:
-        for p in self.proxies:
-            p.abort_stale(min_version, retain=retain)
+        for i in self._live():
+            try:
+                self.proxies[i].abort_stale(min_version, retain=retain)
+            except ReplicaDeadError:
+                self.mark_dead(i)
 
     def release_retained(self, request_id: int) -> None:
         with self._lock:
-            idx = self._home.pop(request_id, None)
-        for p in (self.proxies if idx is None else [self.proxies[idx]]):
-            p.release_retained(request_id)
+            rec = self._home.pop(request_id, None)
+            self._lost_retained.discard(request_id)
+        if rec is not None and rec.idx in self._down():
+            return                      # pages died with the replica
+        targets = [rec.idx] if rec is not None else self._live()
+        for i in targets:
+            try:
+                self.proxies[i].release_retained(request_id)
+            except ReplicaDeadError:
+                self.mark_dead(i)
 
     def suspend(self) -> None:
-        for p in self.proxies:
-            p.suspend()
+        for i in self._live():
+            self.proxies[i].suspend()
 
     def resume(self) -> None:
-        for p in self.proxies:
-            p.resume()
+        for i in self._live():
+            self.proxies[i].resume()
 
     def update_weights(self, params) -> None:
-        for p in self.proxies:
-            p.update_weights(params)
+        self._last_weights = params
+        for i in self._live():
+            try:
+                self.proxies[i].update_weights(params)
+            except ReplicaDeadError:
+                self.mark_dead(i)
 
     def update_weights_async(self, params) -> MultiEvent:
-        """Stage the swap on EVERY replica; the aggregate event is set
-        once all of them acknowledge (fleet-wide overlapped sync)."""
-        return MultiEvent([p.update_weights_async(params)
-                           for p in self.proxies])
+        """Stage the swap on EVERY live replica; the aggregate event is set
+        once all of them acknowledge or die (fleet-wide overlapped sync
+        that a mid-sync crash cannot deadlock)."""
+        self._last_weights = params
+        pairs = []
+        for i in self._live():
+            try:
+                pairs.append((i, self.proxies[i].update_weights_async(params)))
+            except ReplicaDeadError:
+                self.mark_dead(i)
+        return FleetSyncEvent(pairs, self)
 
     def drain(self, idx: int) -> None:
         """Mark a replica as draining: no new placements land on it and
@@ -327,20 +726,58 @@ class ProxyRouter:
     def undrain(self, idx: int) -> None:
         with self._lock:
             self._draining.discard(idx)
+            self._scaledown_pending.discard(idx)
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "ProxyRouter":
-        for p in self.proxies:
-            p.start()
+        self._started = True
+        for i in self._live():
+            try:
+                self.proxies[i].start()
+            except ReplicaDeadError:
+                self.mark_dead(i)   # died before launch: fail its work over
         return self
 
     def stop(self) -> None:
+        self._monitor_stop.set()
+        if self._monitor is not None:
+            self._monitor.join(timeout=10)
+            self._monitor = None
         for p in self.proxies:
-            p.stop()
+            p.stop()                    # dead/retired stops are no-ops
+        self._started = False
+
+    # ----------------------------------------------------------- auditing
+    def fleet_audit(self, *, require_empty: bool = True) -> None:
+        """``audit_pages``-style fleet invariant check (call at
+        quiescence).  Asserts the rid→replica map holds no entry for a
+        dead/retired replica and none the owning proxy doesn't know
+        (active, pending, or retained) — the map must not leak entries for
+        requests that already finished (e.g. via group-follower
+        promotion).  With ``require_empty`` (default) the map must be
+        EMPTY — nothing in flight, nothing parked; every live engine's
+        ``audit_pages`` runs too."""
+        with self._lock:
+            entries = {rid: rec.idx for rid, rec in self._home.items()}
+            down = self._dead | self._retired
+            lost = set(self._lost_retained)
+        assert not lost, f"lost-retained rids never reclaimed: {lost}"
+        for rid, idx in entries.items():
+            assert idx not in down, \
+                f"rid {rid} still homed on down replica {idx}"
+            owns = getattr(self.proxies[idx], "owns_request", None)
+            assert owns is None or owns(rid), \
+                f"rid {rid} leaked: replica {idx} does not know it"
+        if require_empty:
+            assert not entries, f"rid→replica map not empty: {entries}"
+        for i in self._live():
+            audit = getattr(self.proxies[i].engine, "audit_pages", None)
+            if audit is not None:
+                audit()
 
     # -------------------------------------------------------------- metrics
     def load(self) -> int:
-        return sum(p.load() for p in self.proxies)
+        return sum(self.proxies[i].load() for i in self._live())
 
     @property
     def num_replicas(self) -> int:
@@ -348,16 +785,20 @@ class ProxyRouter:
 
     @property
     def num_active(self) -> int:
-        return sum(p.num_active for p in self.proxies)
+        return sum(self.proxies[i].num_active for i in self._live())
 
     @property
     def num_pending(self) -> int:
-        return sum(p.num_pending for p in self.proxies)
+        return sum(self.proxies[i].num_pending for i in self._live())
 
     @property
     def queue_depth(self) -> int:
-        """Fleet-wide submitted-but-unadmitted requests."""
+        """Fleet-wide submitted-but-unadmitted requests (live replicas)."""
         return self.num_pending
+
+    @property
+    def active_per_replica(self) -> List[int]:
+        return [self.proxies[i].num_active for i in self._live()]
 
     @property
     def steps_executed(self) -> int:
@@ -381,7 +822,8 @@ class ProxyRouter:
 
     @property
     def oldest_active_version(self) -> Optional[int]:
-        versions = [v for v in (p.oldest_active_version for p in self.proxies)
+        versions = [v for v in (self.proxies[i].oldest_active_version
+                                for i in self._live())
                     if v is not None]
         return min(versions) if versions else None
 
@@ -398,11 +840,10 @@ class ProxyRouter:
         return agg
 
     def replica_stats(self) -> List[Dict]:
-        """Per-replica load/occupancy/staleness/cache view."""
-        with self._lock:
-            draining = set(self._draining)
+        """Per-replica state/load/occupancy/staleness/cache view."""
         return [{
             "name": p.name,
+            "state": self.replica_state(i),
             "load_tokens": p.load(),
             "active": p.num_active,
             "pending": p.num_pending,
@@ -410,5 +851,5 @@ class ProxyRouter:
             "aborted": p.requests_aborted,
             "oldest_active_version": p.oldest_active_version,
             "cache_hit_tokens": p.cache_hit_tokens,
-            "draining": i in draining,
+            "draining": self.replica_state(i) == "draining",
         } for i, p in enumerate(self.proxies)]

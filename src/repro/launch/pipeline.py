@@ -12,6 +12,7 @@ cross-replica abort-resume migration).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Callable, List, Optional, Tuple, Union
 
 import jax
@@ -20,7 +21,7 @@ from repro.algos import LossConfig
 from repro.core.async_controller import AsyncController
 from repro.core.env_manager import EnvManagerPool
 from repro.core.llm_proxy import LLMProxy
-from repro.core.router import ProxyRouter
+from repro.core.router import AutoscalePolicy, ProxyRouter
 from repro.core.sample_buffer import SampleBuffer
 from repro.core.scheduler import RolloutProducer
 from repro.data.dataset import ArithmeticTask, EOS
@@ -81,6 +82,17 @@ class PipelineSettings:
     # scheduling, GRPO-group/session co-location, cross-replica
     # abort-resume migration).
     num_rollout_replicas: int = 1
+    # elasticity: autoscale_max_replicas > num_rollout_replicas arms
+    # load-triggered scaling — the fleet grows toward the max under queue
+    # pressure and drains/retires idle replicas back toward the min
+    # (AutoscalePolicy hysteresis).  0 (default) disables the autoscaler.
+    autoscale_max_replicas: int = 0
+    autoscale_min_replicas: int = 1
+    # crash detection: > 0 runs the router's background heartbeat monitor
+    # at this period (seconds) — dead replicas are detected and their
+    # in-flight work failed over without waiting for a dispatch to hit
+    # them.  0 (default) relies on dispatch-time detection only.
+    health_probe_interval: float = 0.0
 
 
 def make_rollout_engine(api, params, s: PipelineSettings) -> RolloutEngine:
@@ -113,12 +125,18 @@ def make_rollout_fleet(api, params, s: PipelineSettings,
     (no router — the producer talks straight to the proxy).  N >= 2 shards
     the decode capacity: each replica gets ceil(num_slots / N) slots and
     ceil(num_pages / N) pages (when pinned), and a ProxyRouter fronts the
-    fleet with least-outstanding-tokens queue scheduling."""
+    fleet with least-outstanding-tokens queue scheduling.
+
+    With ``autoscale_max_replicas`` armed the router also gets a
+    ``replica_factory`` (same shard shape, fresh per-replica seed) so
+    ``add_replica``/scale-up can grow the fleet mid-run, plus the
+    hysteresis policy driving load-triggered elasticity."""
     n = max(1, int(s.num_rollout_replicas))
-    if n == 1:
+    elastic = s.autoscale_max_replicas > n
+    if n == 1 and not elastic:
         engine = make_rollout_engine(api, params, s)
         return [engine], [LLMProxy(engine)], None
-    shard = dataclasses.replace(
+    shard = s if n == 1 else dataclasses.replace(
         s, num_slots=max(1, -(-s.num_slots // n)),
         num_pages=None if s.num_pages is None else max(2, -(-s.num_pages // n)))
     # per-replica sampler seeds: identical streams across replicas would
@@ -128,7 +146,19 @@ def make_rollout_fleet(api, params, s: PipelineSettings,
                for i in range(n)]
     proxies = [LLMProxy(e, name=f"llm_proxy_{i}")
                for i, e in enumerate(engines)]
-    return engines, proxies, ProxyRouter(proxies)
+    counter = itertools.count(n)
+
+    def factory() -> LLMProxy:
+        i = next(counter)
+        e = make_rollout_engine(api, params,
+                                dataclasses.replace(shard, seed=s.seed + i))
+        return LLMProxy(e, name=f"llm_proxy_{i}")
+
+    policy = AutoscalePolicy(
+        min_replicas=max(1, s.autoscale_min_replicas),
+        max_replicas=s.autoscale_max_replicas) if elastic else None
+    return engines, proxies, ProxyRouter(proxies, replica_factory=factory,
+                                         autoscale=policy)
 
 
 @dataclasses.dataclass
@@ -155,8 +185,14 @@ class RLVRPipeline:
         return self.router if self.router is not None else self.proxy
 
     def run(self, num_steps: int, timeout: float = 600.0):
-        for p in (self.proxies or [self.proxy]):
-            p.start()
+        if self.router is not None:
+            self.router.start()
+            if self.settings.health_probe_interval > 0:
+                self.router.start_health_monitor(
+                    self.settings.health_probe_interval)
+        else:
+            for p in (self.proxies or [self.proxy]):
+                p.start()
         self.producer.start()
         try:
             return self.controller.train(num_steps, timeout=timeout)
@@ -166,8 +202,11 @@ class RLVRPipeline:
     def shutdown(self):
         self.producer.stop()
         self.buffer.close()
-        for p in (self.proxies or [self.proxy]):
-            p.stop()
+        if self.router is not None:
+            self.router.stop()
+        else:
+            for p in (self.proxies or [self.proxy]):
+                p.stop()
 
 
 def build_rlvr_pipeline(model_cfg: ModelConfig, s: PipelineSettings,
@@ -197,7 +236,8 @@ def build_rlvr_pipeline(model_cfg: ModelConfig, s: PipelineSettings,
     controller = AsyncController(buffer, proxies, trainer.train_on_samples,
                                  trainer.get_weights, alpha=alpha,
                                  weight_sync=s.weight_sync,
-                                 weight_sync_timeout=s.weight_sync_timeout)
+                                 weight_sync_timeout=s.weight_sync_timeout,
+                                 router=router)
     return RLVRPipeline(s, trainer, engines[0], proxies[0], buffer, producer,
                         controller, engines=engines, proxies=proxies,
                         router=router)
@@ -205,6 +245,7 @@ def build_rlvr_pipeline(model_cfg: ModelConfig, s: PipelineSettings,
 
 @dataclasses.dataclass
 class AgenticPipeline:
+    settings: PipelineSettings
     trainer: HostTrainer
     engine: RolloutEngine          # primary replica (engines[0])
     proxy: LLMProxy                # primary replica (proxies[0])
@@ -226,8 +267,14 @@ class AgenticPipeline:
         return self.router if self.router is not None else self.proxy
 
     def run(self, num_steps: int, timeout: float = 600.0):
-        for p in (self.proxies or [self.proxy]):
-            p.start()
+        if self.router is not None:
+            self.router.start()
+            if self.settings.health_probe_interval > 0:
+                self.router.start_health_monitor(
+                    self.settings.health_probe_interval)
+        else:
+            for p in (self.proxies or [self.proxy]):
+                p.start()
         self.pool.start()
         try:
             return self.controller.train(num_steps, timeout=timeout)
@@ -237,8 +284,11 @@ class AgenticPipeline:
     def shutdown(self):
         self.pool.stop(join=False)
         self.buffer.close()
-        for p in (self.proxies or [self.proxy]):
-            p.stop()
+        if self.router is not None:
+            self.router.stop()
+        else:
+            for p in (self.proxies or [self.proxy]):
+                p.stop()
 
 
 def build_agentic_pipeline(model_cfg: ModelConfig, s: PipelineSettings, *,
@@ -265,7 +315,8 @@ def build_agentic_pipeline(model_cfg: ModelConfig, s: PipelineSettings, *,
                                  trainer.get_weights,
                                  alpha=s.async_generation_ratio,
                                  weight_sync=s.weight_sync,
-                                 weight_sync_timeout=s.weight_sync_timeout)
-    return AgenticPipeline(trainer, engines[0], proxies[0], buffer, pool,
+                                 weight_sync_timeout=s.weight_sync_timeout,
+                                 router=router)
+    return AgenticPipeline(s, trainer, engines[0], proxies[0], buffer, pool,
                            controller, engines=engines, proxies=proxies,
                            router=router)

@@ -56,6 +56,15 @@ def main() -> None:
                     help="rollout fleet size: >=2 shards --num-slots across "
                          "N proxy/engine replicas behind a ProxyRouter "
                          "(queue scheduling)")
+    ap.add_argument("--autoscale-max", type=int, default=0,
+                    help="arm load-triggered elasticity: let the fleet grow "
+                         "up to this many replicas under queue pressure and "
+                         "drain idle ones back down (0 = off)")
+    ap.add_argument("--health-probe-interval", type=float, default=0.0,
+                    help="run the fleet heartbeat monitor at this period in "
+                         "seconds: crashed replicas are detected and their "
+                         "in-flight work failed over (0 = dispatch-time "
+                         "detection only)")
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--seed", type=int, default=0)
@@ -70,6 +79,8 @@ def main() -> None:
         num_return_sequences_in_group=args.group_size,
         num_slots=args.num_slots,
         num_rollout_replicas=args.rollout_replicas,
+        autoscale_max_replicas=args.autoscale_max,
+        health_probe_interval=args.health_probe_interval,
         max_new_tokens=args.max_new_tokens,
         max_seq_len=32,
         learning_rate=args.lr,
@@ -94,6 +105,12 @@ def main() -> None:
     print(f"[train] staleness max: {max(s.staleness_max for s in stats)}  "
           f"samples produced/consumed: {pipe.buffer.total_produced}/"
           f"{pipe.buffer.total_consumed}")
+    if pipe.router is not None:
+        r = pipe.router
+        print(f"[train] fleet: replicas={r.num_replicas} "
+              f"alive={r.replicas_alive} added={r.replicas_added} "
+              f"failed={r.replicas_failed} failovers={r.failovers} "
+              f"lost_tokens={r.lost_tokens} migrations={r.migrations}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump([dataclasses.asdict(s) for s in stats], f, indent=1)

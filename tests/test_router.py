@@ -78,6 +78,10 @@ class FakeEngine:
     def release_retained(self, rid):
         self.retained.pop(rid, None)
 
+    def peek_tokens(self, rid, start=0):
+        st = self.active.get(rid)
+        return [] if st is None else list(st["toks"][start:])
+
     def step(self):
         if self.step_sleep:
             time.sleep(self.step_sleep)
@@ -485,6 +489,38 @@ def test_cross_replica_resume_after_weight_sync(paged_setup):
     for e in engines:
         e.audit_pages()
     assert proxies[home].load() == 0 and proxies[other].load() == 0
+
+
+@pytest.mark.timeout(240)
+def test_home_map_clean_after_group_follower_promotion(paged_setup):
+    """Regression: a group leader aborted-with-retain BEFORE its COW fork
+    promotes a follower (the retain degrades — pages hand over, nothing
+    parks).  The router's rid→replica map must not leak an entry for the
+    promoted chain; ``fleet_audit`` asserts emptiness at quiescence."""
+    cfg, api, params = paged_setup
+    engines, proxies, router = _paged_fleet(api, params, 2, num_slots=3,
+                                            prefill_chunk=4)
+    client = RolloutClient(router)
+    prompt = np.asarray([3, 1, 4, 1, 5, 9, 2, 6], np.int32)
+    tasks = expand_tasks(0, prompt, 3, 12, replicate=True)
+    gh = client.submit_group(tasks)
+    leader_rid = gh.handles[0].task.task_id
+    # abort the leader mid-prefill, before any follower forks: the engine
+    # promotes the first follower onto the leader's pages.
+    router.abort(leader_rid, retain=True)
+    router.start()
+    for h in gh.handles[1:]:
+        res = h.result(60)
+        assert not res.aborted and len(res.tokens) == 12
+    ab = gh.handles[0].result(60)
+    # the retain degraded (pages handed to the follower, nothing parked) so
+    # the client continuation re-prefilled the leader — it still completes
+    assert not ab.aborted and len(ab.tokens) == 12
+    assert ab.legs[0] == (0, 0) and client.reprefills == 1
+    time.sleep(0.1)
+    router.stop()
+    router.fleet_audit()                 # map empty, engines audit clean
+    assert router.load() == 0
 
 
 # ------------------------------------------------------------- pipeline
