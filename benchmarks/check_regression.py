@@ -7,8 +7,10 @@ metrics against the committed baselines:
 * ``BENCH_queue_scheduling.json`` → ``replicas_2.queue_over_static_speedup``
 * ``BENCH_prefix_cache.json``     → ``shared_preamble.prefill_tokens_ratio``
                                     and ``agentic_multi_turn.prefill_tokens_ratio``
+* ``BENCH_slo.json``              → ``p99_high_speedup_mean`` (high-priority
+                                    p99 latency, preemptive SLO vs FIFO)
 
-All three metrics are DETERMINISTIC (lockstep makespan rounds / prefill
+All these metrics are DETERMINISTIC (lockstep makespan rounds / prefill
 token counts — never wall clock), so a fresh run should reproduce the
 baseline exactly; a drop > ``--threshold`` (default 15%) means a real
 behavioral regression in placement or caching, and the script exits 1.
@@ -28,6 +30,7 @@ import numpy as np
 
 from benchmarks import bench_prefix_cache as pc
 from benchmarks import bench_queue_scheduling as qs
+from benchmarks import bench_slo as slo
 from repro.configs import REGISTRY
 from repro.models import get_api
 
@@ -70,6 +73,22 @@ def fresh_prefix_ratios() -> tuple:
             a_off["prefill_tokens"] / a_on["prefill_tokens"])
 
 
+def fresh_slo_ratio() -> float:
+    """bench_slo's high-priority p99 speedup (same config, one seed)."""
+    api, params = _api_params()
+    ratios = []
+    for seed in slo.SEEDS:
+        lows, highs = slo._workload(seed)
+        fifo = slo._run(api, params, lows, highs, "fifo")
+        sl = slo._run(api, params, lows, highs, "slo")
+        assert sl["outputs"] == fifo["outputs"], \
+            "SLO scheduling changed greedy outputs"
+        assert sl["deadline_misses"] == 0 and sl["reprefills"] == 0
+        ratios.append(slo._p99(fifo["latencies"]["high"])
+                      / slo._p99(sl["latencies"]["high"]))
+    return float(np.mean(ratios))
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--threshold", type=float, default=0.15,
@@ -80,9 +99,12 @@ def main() -> int:
         base_qs = json.load(f)
     with open("BENCH_prefix_cache.json") as f:
         base_pc = json.load(f)
+    with open("BENCH_slo.json") as f:
+        base_slo = json.load(f)
 
     queue_speedup = fresh_queue_speedup()
     preamble_ratio, agentic_ratio = fresh_prefix_ratios()
+    slo_ratio = fresh_slo_ratio()
     checks = [
         ("queue_scheduling.replicas_2.queue_over_static_speedup",
          queue_speedup, base_qs["replicas_2"]["queue_over_static_speedup"]),
@@ -90,6 +112,8 @@ def main() -> int:
          preamble_ratio, base_pc["shared_preamble"]["prefill_tokens_ratio"]),
         ("prefix_cache.agentic_multi_turn.prefill_tokens_ratio",
          agentic_ratio, base_pc["agentic_multi_turn"]["prefill_tokens_ratio"]),
+        ("slo.p99_high_speedup_mean",
+         slo_ratio, base_slo["p99_high_speedup_mean"]),
     ]
 
     failed = False

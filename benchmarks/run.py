@@ -13,7 +13,7 @@ import time
 from benchmarks import (bench_engine, bench_fault_tolerance,
                         bench_paged_engine, bench_prefix_cache,
                         bench_prefix_sharing, bench_queue_scheduling,
-                        fig1b_throughput_scaling,
+                        bench_slo, fig1b_throughput_scaling,
                         fig3_allocation_and_rollout, fig4_offpolicy_stability,
                         fig7_queue_scheduling, fig8_prompt_replication,
                         fig9_env_async, fig10_redundant_env,
@@ -36,6 +36,7 @@ MODULES = [
     ("prefix_cache", bench_prefix_cache),
     ("queue_scheduling", bench_queue_scheduling),
     ("fault_tolerance", bench_fault_tolerance),
+    ("slo", bench_slo),
     ("roofline", roofline),
 ]
 

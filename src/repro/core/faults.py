@@ -13,9 +13,13 @@ decoupled stages).  This module provides the machinery the elastic
   command submissions raise ``ReplicaDeadError``, and a snapshot of the
   decode progress lost in flight is kept for the router's ``lost_tokens``
   accounting.
-* ``FaultInjector`` — seeded chaos: a background thread that kills random
-  live replicas while a workload runs (the CI ``faults`` tier), bounded
-  by ``max_kills``/``min_alive`` so sweeps terminate.
+* ``FaultInjector`` — seeded chaos: a background thread that fires random
+  faults at live replicas while a workload runs (the CI ``faults`` tier),
+  bounded by ``max_kills``/``min_alive`` so sweeps terminate.  Beyond
+  crashes (``"kill"``) it covers the hang family the SLO watchdog exists
+  for: ``"stall"`` freezes a replica's engine loop (detected by the
+  router's steps-frozen probe, not by ``healthy()``) and ``"slow"``
+  degrades decode throughput (exercises deadline/stall enforcement).
 
 The router detects death through ``healthy()`` (heartbeat/health-probe
 hook) or by catching ``ReplicaDeadError`` at dispatch, then fails every
@@ -33,6 +37,43 @@ import numpy as np
 
 class ReplicaDeadError(RuntimeError):
     """Raised when a command is submitted to a crashed replica."""
+
+
+class _ChaosEngine:
+    """Engine shim injecting hang-family faults into the decode loop.
+
+    Installed between a ``FaultyProxy`` and the real engine so the proxy's
+    own event loop experiences the fault exactly where a real hung/slow
+    engine would manifest: inside ``step()``.  A *stalled* engine spins
+    (keeping the loop thread alive but making zero progress — the
+    ``steps_executed`` counter freezes, which is what the router's stall
+    probe watches); a *slowed* engine sleeps before each step.  A dead
+    replica's engine executes nothing.
+    """
+
+    def __init__(self, inner, owner: "FaultyProxy"):
+        self._inner = inner
+        self._owner = owner
+
+    def step(self):
+        fp = self._owner
+        if fp._dead.is_set():
+            return []
+        slow = fp._slow_s
+        if slow > 0:
+            time.sleep(slow)
+        while (fp._stalled.is_set() and not fp._dead.is_set()
+               and not fp.inner._stop.is_set()):
+            time.sleep(0.002)        # hung, not crashed: thread stays alive
+        if fp._dead.is_set() or fp.inner._stop.is_set():
+            # the spin ended because the replica was killed/stopped, not
+            # unstalled: a late step here would deliver post-mortem results
+            # racing the router's failover into double resolution.
+            return []
+        return self._inner.step()
+
+    def __getattr__(self, item):
+        return getattr(self._inner, item)
 
 
 class FaultyProxy:
@@ -59,6 +100,12 @@ class FaultyProxy:
         self._decoded_at_death: Dict[int, int] = {}
         self._watchdog: Optional[threading.Thread] = None
         self.kills = 0                   # 0 or 1; counters survive the crash
+        # hang-family faults, injected at the engine-step boundary
+        self._slow_s = 0.0
+        self._stalled = threading.Event()
+        self.stalls = 0
+        self.slowdowns = 0
+        inner.engine = _ChaosEngine(inner.engine, self)
 
     # ------------------------------------------------------------ lifecycle
     @property
@@ -92,11 +139,36 @@ class FaultyProxy:
             self._dead.set()
             self.kills = 1
         self.inner.stop()
+        self._join_watchdog()
 
     def decoded_counts(self) -> Dict[int, int]:
         """Per-request decode progress lost at death (empty while alive) —
         the router sums this into its ``lost_tokens`` counter."""
         return dict(self._decoded_at_death)
+
+    # ----------------------------------------------------- hang-family faults
+    def slow_decode(self, seconds: float) -> None:
+        """Degrade decode: every engine step sleeps ``seconds`` first.
+        Pass 0 to restore full speed."""
+        if seconds > 0:
+            self.slowdowns += 1
+        self._slow_s = float(seconds)
+
+    def stall(self) -> None:
+        """Freeze the engine loop: steps spin without progress.  The replica
+        still answers ``healthy()`` — only the router's steps-frozen probe
+        (``SLOConfig.replica_stall_s``) can tell it is gone."""
+        self.stalls += 1
+        self._stalled.set()
+
+    def unstall(self) -> None:
+        self._stalled.clear()
+
+    def _join_watchdog(self) -> None:
+        w = self._watchdog
+        if (w is not None and w.is_alive()
+                and w is not threading.current_thread()):
+            w.join(timeout=5.0)
 
     def start(self) -> "FaultyProxy":
         if self._dead.is_set():
@@ -109,7 +181,9 @@ class FaultyProxy:
         return self
 
     def _watch(self) -> None:
-        while not self._dead.is_set():
+        # also exits when the inner loop is stopped normally — otherwise a
+        # never-triggered self-destruct leaks its thread past shutdown
+        while not self._dead.is_set() and not self.inner._stop.is_set():
             if self.inner.steps_executed >= self.kill_after_steps:
                 self.kill()
                 return
@@ -119,6 +193,7 @@ class FaultyProxy:
         # stopping a dead replica is a no-op (the crash already stopped it)
         if not self._dead.is_set():
             self.inner.stop()
+        self._join_watchdog()
 
     def step_once(self) -> bool:
         """Lockstep driving: a dead replica executes nothing.  The armed
@@ -200,18 +275,33 @@ def wrap_fleet(proxies: List, **kw) -> List[FaultyProxy]:
 
 
 class FaultInjector(threading.Thread):
-    """Seeded chaos monkey: kill random live replicas while work runs.
+    """Seeded chaos monkey: fire random faults at live replicas while work
+    runs.
 
-    ``seed`` makes the victim/delay SEQUENCE reproducible; the interleaving
-    with the workload is still real concurrency — chaos tests assert
-    outcome invariants (every handle resolves exactly once, survivors
-    audit clean), never timing.  ``min_alive`` keeps the fleet routable;
-    ``max_kills`` bounds the sweep.
+    ``seed`` makes the victim/delay/mode SEQUENCE reproducible; the
+    interleaving with the workload is still real concurrency — chaos tests
+    assert outcome invariants (every handle resolves exactly once,
+    survivors audit clean), never timing.  ``min_alive`` keeps the fleet
+    routable; ``max_kills`` bounds the sweep (it counts every fault fired,
+    not just crashes).
+
+    ``modes`` selects the fault repertoire per firing:
+
+    * ``"kill"``  — crash the replica (callbacks suppressed; the router's
+      health probe / ``on_kill`` hook drives failover),
+    * ``"stall"`` — freeze its engine loop; the replica stays "healthy",
+      so only the router's steps-frozen probe rescues its work,
+    * ``"slow"``  — degrade decode by a random per-step sleep; the SLO
+      watchdog's deadline/stall enforcement is what keeps latency bounded.
+
+    ``min_alive`` applies to the incapacitating modes (kill/stall);
+    slowdowns can hit anyone.
     """
 
     def __init__(self, victims: List[FaultyProxy], *, seed: int = 0,
                  min_delay: float = 0.01, max_delay: float = 0.05,
                  max_kills: int = 1, min_alive: int = 1,
+                 modes: tuple = ("kill",),
                  on_kill: Optional[Callable[[int], None]] = None):
         super().__init__(name="fault_injector", daemon=True)
         self.victims = list(victims)
@@ -220,24 +310,46 @@ class FaultInjector(threading.Thread):
         self.max_delay = max_delay
         self.max_kills = max_kills
         self.min_alive = min_alive
+        self.modes = tuple(modes)
         self.on_kill = on_kill           # e.g. router.probe_health
         self.killed: List[int] = []
+        self.stalled: List[int] = []
+        self.slowed: List[int] = []
         # NB: not named _stop — threading.Thread owns that attribute
         self._halt = threading.Event()
 
     def stop(self) -> None:
+        """Halt the sweep and wait for the thread to exit (no leak)."""
         self._halt.set()
+        if self.is_alive() and self is not threading.current_thread():
+            self.join(timeout=5.0)
+
+    def _fired(self) -> int:
+        return len(self.killed) + len(self.stalled) + len(self.slowed)
 
     def run(self) -> None:
-        while not self._halt.is_set() and len(self.killed) < self.max_kills:
+        while not self._halt.is_set() and self._fired() < self.max_kills:
             delay = float(self.rng.uniform(self.min_delay, self.max_delay))
             if self._halt.wait(delay):
                 return
-            alive = [i for i, v in enumerate(self.victims) if v.healthy()]
-            if len(alive) <= self.min_alive:
+            mode = str(self.rng.choice(self.modes))
+            # an incapacitated (stalled) replica is not a useful victim either
+            alive = [i for i, v in enumerate(self.victims)
+                     if v.healthy() and not v._stalled.is_set()]
+            if mode in ("kill", "stall") and len(alive) <= self.min_alive:
+                continue
+            if not alive:
                 continue
             idx = int(self.rng.choice(alive))
-            self.victims[idx].kill()
-            self.killed.append(idx)
-            if self.on_kill is not None:
-                self.on_kill(idx)
+            victim = self.victims[idx]
+            if mode == "kill":
+                victim.kill()
+                self.killed.append(idx)
+                if self.on_kill is not None:
+                    self.on_kill(idx)
+            elif mode == "stall":
+                victim.stall()
+                self.stalled.append(idx)
+            else:                        # "slow"
+                victim.slow_decode(float(self.rng.uniform(0.005, 0.02)))
+                self.slowed.append(idx)

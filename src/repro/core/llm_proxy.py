@@ -23,8 +23,10 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Protocol
 
-from repro.core.types import (GenerationRequest, GenerationResult,
-                              RolloutTask, expand_replicas)
+from repro.core.slo import SLOConfig, stamp_deadline
+from repro.core.types import (PRIORITY_NORMAL, GenerationRequest,
+                              GenerationResult, Rejected, RolloutTask,
+                              expand_replicas)
 
 
 class InferenceEngine(Protocol):
@@ -68,9 +70,11 @@ class _PendingGroup:
 
 
 class LLMProxy:
-    def __init__(self, engine: InferenceEngine, *, name: str = "llm_proxy"):
+    def __init__(self, engine: InferenceEngine, *, name: str = "llm_proxy",
+                 slo: Optional[SLOConfig] = None):
         self.engine = engine
         self.name = name
+        self._slo = slo
         self._commands: "queue.Queue[tuple]" = queue.Queue()
         # entries: GenerationRequest | _PendingGroup
         self._pending: collections.deque = collections.deque()
@@ -94,6 +98,12 @@ class LLMProxy:
         self.requests_aborted = 0
         self.suspend_count = 0
         self.staged_weight_updates = 0   # non-blocking (overlapped) swaps
+        # --- SLO counters (monotonic; aggregated fleet-wide by the router) ---
+        self.deadline_misses = 0         # expired rejections + enforced timeouts
+        self.preemptions = 0             # active work aborted-with-retain for priority
+        self.long_tail_defers = 0        # detected long-tails parked to unblock others
+        self.stall_aborts = 0            # no-decode-progress force-resolutions
+        self.rejected = 0                # requests resolved with a typed Rejected
 
     # ------------------------------------------------------------- load
     def _load_add(self, request_id: int, tokens: int) -> None:
@@ -173,13 +183,18 @@ class LLMProxy:
                 # streams — submit the replicas individually to stream them.
                 raise ValueError("stream_cb is unsupported for "
                                  "num_return_sequences-expanded tasks")
+            tasks = expand_replicas(task, n)
+            if not self._admit_submission(tasks, version, callback):
+                return [t.task_id for t in tasks]
             reqs = [GenerationRequest(request_id=t.task_id, task=t,
                                       version_started=version,
                                       callback=callback)
-                    for t in expand_replicas(task, n)]
+                    for t in tasks]
             self._load_add_group(reqs)
             self._commands.put(("ADD_GROUP", _PendingGroup(reqs)))
             return [r.request_id for r in reqs]
+        if not self._admit_submission([task], version, callback):
+            return task.task_id
         req = GenerationRequest(request_id=task.task_id, task=task,
                                 version_started=version, callback=callback,
                                 stream_cb=stream_cb)
@@ -201,6 +216,8 @@ class LLMProxy:
         assert all(t.max_new_tokens == t0.max_new_tokens
                    and len(t.prompt_tokens) == len(t0.prompt_tokens)
                    for t in tasks), "group tasks must be replicas"
+        if not self._admit_submission(tasks, version, callback):
+            return [t.task_id for t in tasks]
         reqs = [GenerationRequest(request_id=t.task_id, task=t,
                                   version_started=version, callback=callback)
                 for t in tasks]
@@ -214,6 +231,11 @@ class LLMProxy:
                          stream_cb: Optional[Callable] = None) -> int:
         """Re-initiate an ABORTed-with-retain request: the engine re-attaches
         the retained KV pages instead of prefilling the prompt."""
+        # no queue-bound admission: a continuation holds pages the fleet
+        # wants back — rejecting it would leak them.  The watchdog still
+        # sheds it from pending if its (inherited) deadline expires.
+        if self._slo is not None:
+            stamp_deadline(task, self._slo.clock())
         req = GenerationRequest(request_id=task.task_id, task=task,
                                 version_started=version, callback=callback,
                                 resume_from=resume_from, stream_cb=stream_cb)
@@ -235,6 +257,59 @@ class LLMProxy:
     def release_retained(self, request_id: int) -> None:
         """Free the KV pages of a retained request that won't be resumed."""
         self._commands.put(("RELEASE", request_id))
+
+    def shed_lowest(self, below_priority: int) -> None:
+        """Evict the newest queued request of the lowest priority class
+        strictly below ``below_priority`` (its callback fires with
+        ``Rejected(reason="shed")``).  Routers use this to make room at the
+        fleet-wide total bound for higher-priority arrivals."""
+        self._commands.put(("SHED", below_priority))
+
+    # ----------------------------------------------------- admission control
+    def _admit_submission(self, tasks: List[RolloutTask], version: int,
+                          callback: Callable) -> bool:
+        """Admission control at the submit boundary (caller thread).  Stamps
+        absolute deadlines, then rejects the submission outright — callback
+        fired immediately with a typed ``Rejected`` — if its deadline is
+        already past or the pending queue bounds leave no room.  Queue depth
+        is read as a snapshot, so bounds are approximate under concurrent
+        submitters (a few over, never silent unbounded growth)."""
+        slo = self._slo
+        if slo is None:
+            return True
+        now = slo.clock()
+        for t in tasks:
+            stamp_deadline(t, now)
+        t0 = tasks[0]
+        priority = getattr(t0, "priority", PRIORITY_NORMAL)
+        reason = None
+        deadline_at = t0.meta.get("deadline_at")
+        if slo.shed_expired and deadline_at is not None and now >= deadline_at:
+            reason = "expired"
+        if reason is None and slo.queue_limit_per_class is not None:
+            depth = self.pending_by_priority.get(priority, 0)
+            if depth + len(tasks) > slo.queue_limit_per_class:
+                reason = "queue_full"
+        if reason is None and slo.queue_limit_total is not None:
+            if self.num_pending + len(tasks) > slo.queue_limit_total:
+                lower = self.pending_by_priority
+                if any(c > 0 for p, c in lower.items() if p < priority):
+                    # outranked work is queued: shed it (async command)
+                    # instead of bouncing the higher-priority arrival.
+                    for _ in range(len(tasks)):
+                        self.shed_lowest(priority)
+                else:
+                    reason = "queue_full"
+        if reason is None:
+            return True
+        for t in tasks:
+            self.rejected += 1
+            if reason == "expired":
+                self.deadline_misses += 1
+            callback(Rejected(request_id=t.task_id, task=t, tokens=None,
+                              logprobs=None, version_started=version,
+                              aborted=True, partial=True, reason=reason))
+        return False
 
     def suspend(self) -> None:
         """Pause the loop after the current engine step (weight-sync phase 1)."""
@@ -310,6 +385,9 @@ class LLMProxy:
         is what lockstep fleet benchmarks and parity tests need.  Returns
         True iff an engine step ran."""
         self._process_commands()
+        if self._slo is not None:
+            self._watchdog_tick()
+            self._maybe_preempt()
         self._admit_pending()
         if not self._active:
             return False
@@ -359,9 +437,11 @@ class LLMProxy:
             except queue.Empty:
                 return
             if op == "ADD":
-                self._pending.append(arg)
+                self._enqueue_pending(arg)
             elif op == "ADD_GROUP":
-                self._pending.append(arg)
+                self._enqueue_pending(arg)
+            elif op == "SHED":
+                self._do_shed(arg)
             elif op == "ABORT":
                 rid, retain = arg
                 self._do_abort(rid, retain)
@@ -411,23 +491,7 @@ class LLMProxy:
             # the callback with an empty aborted result so handle-layer
             # consumers always resolve.
             release = getattr(self.engine, "release_retained", None)
-            dropped: List[GenerationRequest] = []
-            kept: collections.deque = collections.deque()
-            for entry in self._pending:
-                if isinstance(entry, _PendingGroup):
-                    hit = [r for r in entry.requests
-                           if r.request_id == request_id]
-                    entry.requests = [r for r in entry.requests
-                                      if r.request_id != request_id]
-                    dropped.extend(hit)
-                    if entry.requests:
-                        kept.append(entry)
-                elif entry.request_id == request_id:
-                    dropped.append(entry)
-                else:
-                    kept.append(entry)
-            self._pending = kept
-            for r in dropped:
+            for r in self._take_pending(request_id):
                 if r.resume_from is not None and release is not None:
                     release(r.resume_from)
                 self.requests_aborted += 1
@@ -437,9 +501,208 @@ class LLMProxy:
                     logprobs=None, version_started=r.version_started,
                     aborted=True, partial=True))
 
+    def _take_pending(self, request_id: int) -> List[GenerationRequest]:
+        """Remove (and return) the pending request with this id, unwrapping
+        it from a pending group if needed (the group's other members stay
+        queued)."""
+        taken: List[GenerationRequest] = []
+        kept: collections.deque = collections.deque()
+        for entry in self._pending:
+            if isinstance(entry, _PendingGroup):
+                hit = [r for r in entry.requests if r.request_id == request_id]
+                entry.requests = [r for r in entry.requests
+                                  if r.request_id != request_id]
+                taken.extend(hit)
+                if entry.requests:
+                    kept.append(entry)
+            elif entry.request_id == request_id:
+                taken.append(entry)
+            else:
+                kept.append(entry)
+        self._pending = kept
+        return taken
+
     @staticmethod
     def _entry_requests(entry) -> List[GenerationRequest]:
         return entry.requests if isinstance(entry, _PendingGroup) else [entry]
+
+    # --------------------------------------------------- SLO: priority queue
+    @classmethod
+    def _entry_priority(cls, entry) -> int:
+        reqs = cls._entry_requests(entry)
+        if not reqs:
+            return PRIORITY_NORMAL
+        return max(getattr(r.task, "priority", PRIORITY_NORMAL) for r in reqs)
+
+    def _enqueue_pending(self, entry) -> None:
+        """Insert by priority class, FIFO within a class: an entry lands
+        after every queued entry of >= priority.  With uniform priorities
+        (the default) this degenerates to a plain append, so non-SLO
+        behavior is unchanged byte-for-byte."""
+        priority = self._entry_priority(entry)
+        if not self._pending or self._entry_priority(self._pending[-1]) >= priority:
+            self._pending.append(entry)
+            return
+        items = list(self._pending)
+        idx = next(i for i, e in enumerate(items)
+                   if self._entry_priority(e) < priority)
+        items.insert(idx, entry)
+        self._pending = collections.deque(items)
+
+    def _do_shed(self, below_priority: int) -> None:
+        """Evict the newest pending entry of the lowest class < below."""
+        cands = [(self._entry_priority(e), i)
+                 for i, e in enumerate(self._pending)
+                 if self._entry_priority(e) < below_priority]
+        if not cands:
+            return
+        lowest = min(p for p, _ in cands)
+        idx = max(i for p, i in cands if p == lowest)
+        items = list(self._pending)
+        entry = items.pop(idx)
+        self._pending = collections.deque(items)
+        for r in self._entry_requests(entry):
+            self._reject_queued(r, "shed")
+
+    def _reject_queued(self, req: GenerationRequest, reason: str) -> None:
+        """Resolve an already-queued request with a typed Rejected (shed or
+        expired-in-queue).  Retained pages of a rejected continuation are
+        freed — its partial tokens are final."""
+        release = getattr(self.engine, "release_retained", None)
+        if req.resume_from is not None and release is not None:
+            release(req.resume_from)
+        self._load_drop(req.request_id)
+        self.rejected += 1
+        if reason == "expired":
+            self.deadline_misses += 1
+        req.callback(Rejected(request_id=req.request_id, task=req.task,
+                              tokens=None, logprobs=None,
+                              version_started=req.version_started,
+                              aborted=True, partial=True, reason=reason))
+
+    # ------------------------------------------------------- SLO: preemption
+    def _decoded(self, request_id: int) -> int:
+        """Tokens decoded so far in the CURRENT leg of an active request."""
+        num_decoded = getattr(self.engine, "num_decoded", None)
+        if num_decoded is not None:
+            return int(num_decoded(request_id))
+        peek = getattr(self.engine, "peek_tokens", None)
+        if peek is not None:
+            return len(peek(request_id, 0))
+        return 0
+
+    def _maybe_preempt(self) -> None:
+        """If the head of the queue outranks active work and no slot is
+        free, abort-with-retain the lowest-priority active request(s): the
+        victim's pages park in the engine, its continuation re-queues at
+        its own priority, and the high-priority head admits immediately.
+        Zero re-prefill on resume — preemption is the abort/resume
+        machinery pointed at priority inversion instead of staleness."""
+        slo = self._slo
+        if (slo is None or not slo.preempt or not self._pending
+                or not getattr(self.engine, "supports_retain", False)):
+            return
+        entry = self._pending[0]
+        reqs = self._entry_requests(entry)
+        if not reqs:
+            return
+        head_priority = self._entry_priority(entry)
+        need = len(reqs) - self.engine.num_free_slots
+        if need <= 0:
+            return
+        # Preemption frees SLOTS, not pages: victims keep their retained
+        # pages until resumed.  Only preempt when the page pool can cover
+        # the head anyway (checked for one candidate — a group head that
+        # still doesn't fit simply stays queued, no harm done).
+        t0 = reqs[0].task
+        cover = getattr(self.engine, "can_cover_pages", None)
+        if cover is not None and not cover(len(t0.prompt_tokens),
+                                           t0.max_new_tokens):
+            return
+        victims = sorted(
+            ((rid, r) for rid, r in self._active.items()
+             if getattr(r.task, "priority", PRIORITY_NORMAL) < head_priority),
+            key=lambda kv: (getattr(kv[1].task, "priority", PRIORITY_NORMAL),
+                            -(kv[1].task.max_new_tokens - self._decoded(kv[0]))))
+        for rid, _ in victims[:need]:
+            self.preemptions += 1
+            self._do_abort(rid, retain=True)
+
+    # --------------------------------------------------------- SLO: watchdog
+    def _watchdog_tick(self) -> None:
+        """Once per step: shed expired queued work, force-resolve active
+        work past deadline or stalled, and defer detected long-tails."""
+        slo = self._slo
+        now = slo.clock()
+        if slo.shed_expired and self._pending:
+            expired = [r.request_id
+                       for e in self._pending for r in self._entry_requests(e)
+                       if r.task.meta.get("deadline_at") is not None
+                       and now >= r.task.meta["deadline_at"]]
+            for rid in expired:
+                for r in self._take_pending(rid):
+                    self._reject_queued(r, "expired")
+        if not self._active:
+            return
+        if slo.enforce_deadlines:
+            for rid, req in list(self._active.items()):
+                deadline_at = req.task.meta.get("deadline_at")
+                if deadline_at is not None and now >= deadline_at:
+                    self._do_timeout(rid, stall=False)
+        if slo.stall_timeout_s is None and slo.defer_after_tokens is None:
+            return
+        for rid, req in list(self._active.items()):
+            if rid not in self._active:
+                continue
+            decoded = self._decoded(rid)
+            # != not >: a resumed leg's count restarts below the old one.
+            progressed = decoded != req.decoded_seen
+            if progressed:
+                req.decoded_seen = decoded
+                req.last_progress = now
+            if (slo.stall_timeout_s is not None and not progressed
+                    and now - req.last_progress >= slo.stall_timeout_s):
+                self._do_timeout(rid, stall=True)
+                continue
+            if (slo.defer_after_tokens is not None
+                    and self._pending
+                    and self.engine.num_free_slots <= 0
+                    and not req.task.meta.get("slo_deferred")
+                    and decoded >= slo.defer_after_tokens
+                    and req.task.max_new_tokens - decoded >= slo.defer_min_remaining
+                    and getattr(req.task, "priority", PRIORITY_NORMAL)
+                    <= self._entry_priority(self._pending[0])
+                    and getattr(self.engine, "supports_retain", False)):
+                # Likely long-tail: park it (pages retained, resume later at
+                # zero re-prefill) so queued peers aren't stuck behind it.
+                # Tag the lineage so a rollout is deferred at most once.
+                req.task.meta["slo_deferred"] = True
+                self.long_tail_defers += 1
+                self._do_abort(rid, retain=True)
+
+    def _do_timeout(self, request_id: int, *, stall: bool) -> None:
+        """Exactly-once forced resolution of an active request: pop it,
+        release its pages (plain abort — nothing to resume), and fire the
+        callback with the partial tokens and ``timed_out=True``.  The
+        client layer sees timed_out and resolves WITHOUT a continuation."""
+        req = self._active.pop(request_id, None)
+        if req is None:
+            return
+        if req.stream_cb is not None:
+            self._num_streaming -= 1
+        partial = self.engine.abort(request_id)
+        self.requests_aborted += 1
+        if stall:
+            self.stall_aborts += 1
+        else:
+            self.deadline_misses += 1
+        self._load_drop(request_id)
+        req.callback(GenerationResult(
+            request_id=request_id, task=req.task,
+            tokens=getattr(partial, "tokens", None),
+            logprobs=getattr(partial, "logprobs", None),
+            version_started=req.version_started,
+            aborted=True, partial=True, resumable=False, timed_out=True))
 
     def _try_admit(self, req: GenerationRequest) -> bool:
         """Admit one request if the engine can take it right now."""
@@ -495,6 +758,8 @@ class LLMProxy:
 
     def _activate(self, req: GenerationRequest) -> None:
         self._active[req.request_id] = req
+        if self._slo is not None:
+            req.last_progress = self._slo.clock()
         if req.stream_cb is not None:
             self._num_streaming += 1
 
@@ -548,6 +813,21 @@ class LLMProxy:
             try:
                 return sum(len(self._entry_requests(e))
                            for e in tuple(self._pending))
+            except RuntimeError:
+                continue
+
+    @property
+    def pending_by_priority(self) -> Dict[int, int]:
+        """Queued request count per priority class (lock-free snapshot,
+        same idiom as num_pending)."""
+        while True:
+            try:
+                depth: Dict[int, int] = {}
+                for e in tuple(self._pending):
+                    for r in self._entry_requests(e):
+                        priority = getattr(r.task, "priority", PRIORITY_NORMAL)
+                        depth[priority] = depth.get(priority, 0) + 1
+                return depth
             except RuntimeError:
                 continue
 

@@ -41,8 +41,8 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.types import (GenerationResult, RolloutTask, expand_replicas,
-                              next_uid)
+from repro.core.types import (GenerationResult, Rejected, RolloutTask,
+                              expand_replicas, next_uid)
 
 _SENTINEL = object()
 
@@ -218,7 +218,9 @@ class GenerationHandle:
         for q, c in out:
             q.put(c)
 
-    def _resolve(self, *, aborted: bool, resumable: bool = False) -> None:
+    def _resolve(self, *, aborted: bool, resumable: bool = False,
+                 timed_out: bool = False,
+                 rejected_reason: Optional[str] = None) -> None:
         """Build the final stitched result.  Caller holds the client lock;
         the returned closure (callbacks + stream flush) is run by the client
         after releasing it."""
@@ -233,10 +235,15 @@ class GenerationHandle:
             take = max(0, min(n, len(tokens) - acc))
             legs.append((v, take))
             acc += take
-        self._result = GenerationResult(
+        kwargs = dict(
             request_id=self.task.task_id, task=self.task, tokens=tokens,
             logprobs=logprobs, version_started=version, aborted=aborted,
-            partial=aborted, resumable=resumable, legs=legs)
+            partial=aborted, resumable=resumable, legs=legs,
+            timed_out=timed_out)
+        if rejected_reason is not None:
+            self._result = Rejected(reason=rejected_reason, **kwargs)
+        else:
+            self._result = GenerationResult(**kwargs)
 
 
 class GroupHandle:
@@ -293,7 +300,9 @@ class Session:
 
     def __init__(self, client: "RolloutClient", *, session_id: int,
                  max_new_tokens: int, context_mode: str = "turn",
-                 max_context_tokens: Optional[int] = None, group_id: int = -1):
+                 max_context_tokens: Optional[int] = None, group_id: int = -1,
+                 priority: Optional[int] = None,
+                 deadline_ms: Optional[float] = None):
         if context_mode not in ("turn", "full"):
             raise ValueError(f"context_mode must be turn|full, got {context_mode!r}")
         if context_mode == "full" and max_context_tokens is None:
@@ -309,6 +318,10 @@ class Session:
         self.context: List[np.ndarray] = []   # alternating obs/action turns
         self.turn_versions: List[int] = []
         self.num_turns = 0
+        self.priority = priority
+        # per-TURN latency budget: each turn() stamps a fresh deadline
+        # (an env step in between resets the clock, unlike a continuation).
+        self.deadline_ms = deadline_ms
 
     def _build_prompt(self, obs: np.ndarray) -> np.ndarray:
         if self.context_mode != "full":
@@ -328,12 +341,18 @@ class Session:
         the session appends (observation, action) to its context and
         records the turn's version tag — callers just ``.result()``."""
         obs = _np_tokens(obs_tokens)
+        slo_kw = {}
+        if self.priority is not None:
+            slo_kw["priority"] = self.priority
+        if self.deadline_ms is not None:
+            slo_kw["deadline_ms"] = self.deadline_ms
         task = RolloutTask(
             task_id=next_uid(), prompt_id=self.session_id, replica_idx=0,
             prompt_tokens=self._build_prompt(obs),
             max_new_tokens=max_new_tokens or self.max_new_tokens,
             group_id=self.group_id,
-            meta={"session_id": self.session_id, "turn": self.num_turns})
+            meta={"session_id": self.session_id, "turn": self.num_turns},
+            **slo_kw)
         self.num_turns += 1
         handle = self.client.submit(task)
 
@@ -431,12 +450,14 @@ class RolloutClient:
     def session(self, *, session_id: Optional[int] = None,
                 max_new_tokens: int, context_mode: str = "turn",
                 max_context_tokens: Optional[int] = None,
-                group_id: int = -1) -> Session:
+                group_id: int = -1, priority: Optional[int] = None,
+                deadline_ms: Optional[float] = None) -> Session:
         return Session(self, session_id=next_uid() if session_id is None
                        else session_id, max_new_tokens=max_new_tokens,
                        context_mode=context_mode,
                        max_context_tokens=max_context_tokens,
-                       group_id=group_id)
+                       group_id=group_id, priority=priority,
+                       deadline_ms=deadline_ms)
 
     def close(self) -> None:
         """Stop issuing continuations: subsequent aborts resolve their
@@ -466,8 +487,16 @@ class RolloutClient:
                 h._append_leg(res.tokens, res.logprobs, res.version_started)
                 decoded = sum(n for _, n in h.legs)
                 remaining = h.budget - decoded
-                resume = (not h._cancelled and not self._closed
-                          and self._resume_gate())
+                # SLO terminal verdicts never continue: a timed-out request
+                # had its pages released (partial tokens are final), and a
+                # rejected one was refused admission — re-submitting it
+                # would defeat the load shed.
+                timed_out = bool(getattr(res, "timed_out", False))
+                rejected_reason = res.reason if isinstance(res, Rejected) \
+                    else None
+                terminal = timed_out or rejected_reason is not None
+                resume = (not terminal and not h._cancelled
+                          and not self._closed and self._resume_gate())
                 if resume and remaining > 0:
                     self._continue(h, res, remaining)
                     deliver = h._push_stream()
@@ -478,8 +507,10 @@ class RolloutClient:
                         self.proxy.release_retained(res.request_id)
                     # budget spent => the sample is COMPLETE, not aborted:
                     # resuming would decode >= 1 extra token per cycle.
-                    budget_done = remaining <= 0 and not h._cancelled
-                    h._resolve(aborted=not budget_done)
+                    budget_done = (remaining <= 0 and not h._cancelled
+                                   and not terminal)
+                    h._resolve(aborted=not budget_done, timed_out=timed_out,
+                               rejected_reason=rejected_reason)
             if h._result is not None:
                 final = h._result
                 deliver = h._push_stream()
@@ -511,6 +542,12 @@ class RolloutClient:
         h._cur_rid = new_rid
         h._cur_version = version
         t = h.task
+        # lineage tags the watchdog stamped on the CURRENT leg's task (the
+        # long-tail defer marker) must survive into the next leg, whose
+        # meta is copied from the leg-0 task.
+        if res.task is not None and res.task.meta.get("slo_deferred") \
+                and not t.meta.get("slo_deferred"):
+            t.meta["slo_deferred"] = True
         stream = {"stream_cb": h._on_leg_tokens} if h._streaming else {}
         if res.resumable:
             prefer = getattr(self.proxy, "prefer_resume", None)
@@ -521,7 +558,8 @@ class RolloutClient:
                     prompt_tokens=np.concatenate([h.orig_prompt,
                                                   h._stitched_tokens()]),
                     max_new_tokens=remaining, group_id=t.group_id,
-                    meta=dict(t.meta))
+                    meta=dict(t.meta), priority=t.priority,
+                    deadline_ms=t.deadline_ms)
                 self._inflight[new_rid] = h
                 try:
                     self.proxy.generate_migrated(
@@ -538,7 +576,8 @@ class RolloutClient:
                 task_id=new_rid, prompt_id=t.prompt_id,
                 replica_idx=t.replica_idx, prompt_tokens=h.orig_prompt,
                 max_new_tokens=remaining, group_id=t.group_id,
-                meta=dict(t.meta))
+                meta=dict(t.meta), priority=t.priority,
+                deadline_ms=t.deadline_ms)
             self._inflight[new_rid] = h
             try:
                 self.proxy.generate_resumed(resumed, version, self._dispatch,
@@ -557,6 +596,7 @@ class RolloutClient:
             task_id=new_rid, prompt_id=t.prompt_id, replica_idx=t.replica_idx,
             prompt_tokens=np.concatenate([h.orig_prompt,
                                           h._stitched_tokens()]),
-            max_new_tokens=remaining, group_id=t.group_id, meta=dict(t.meta))
+            max_new_tokens=remaining, group_id=t.group_id, meta=dict(t.meta),
+            priority=t.priority, deadline_ms=t.deadline_ms)
         self._inflight[new_rid] = h
         self.proxy.generate(resumed, version, self._dispatch, **stream)

@@ -61,7 +61,9 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.faults import ReplicaDeadError
 from repro.core.llm_proxy import LLMProxy
-from repro.core.types import GenerationResult, RolloutTask
+from repro.core.slo import SLOConfig, stamp_deadline
+from repro.core.types import (PRIORITY_NORMAL, GenerationResult, Rejected,
+                              RolloutTask, expand_replicas)
 
 # group/session placement memory; old pins evict LRU (a group whose pin
 # evicted mid-flight merely loses co-location for later members, never
@@ -164,13 +166,18 @@ class ProxyRouter:
                  migrate_factor: float = 2.0,
                  migrate_margin_tokens: int = 128,
                  replica_factory: Optional[Callable[[], LLMProxy]] = None,
-                 autoscale: Optional[AutoscalePolicy] = None):
+                 autoscale: Optional[AutoscalePolicy] = None,
+                 slo: Optional[SLOConfig] = None):
         assert proxies, "router needs at least one replica"
         self.proxies = list(proxies)
         self.migrate_factor = migrate_factor
         self.migrate_margin_tokens = migrate_margin_tokens
         self.replica_factory = replica_factory
         self.autoscale = autoscale
+        # SLO front door: queue bounds are enforced HERE fleet-wide (the
+        # replicas behind a router carry an admission-stripped copy — see
+        # slo.without_admission); preemption/watchdog run on the replicas.
+        self.slo = slo
         self._lock = threading.RLock()
         self._home: Dict[int, _Home] = {}      # request_id -> routing record
         # requests whose callback resolved BEFORE _register could record
@@ -196,6 +203,9 @@ class ProxyRouter:
         self._last_weights = None              # warm-start for add_replica
         self._monitor: Optional[threading.Thread] = None
         self._monitor_stop = threading.Event()
+        # replica-stall detection: idx -> (steps_executed, wall time seen)
+        self._progress: Dict[int, tuple] = {}
+        self._rejected = 0                     # admissions bounced at the front door
         self._up_streak = 0
         self._down_streak = 0
         self._cooldown = 0
@@ -246,6 +256,37 @@ class ProxyRouter:
             except Exception:
                 ok = False
             if not ok:
+                self.mark_dead(i)
+                newly.append(i)
+        if self.slo is not None and self.slo.replica_stall_s:
+            newly.extend(self._probe_stalls())
+        return newly
+
+    def _probe_stalls(self) -> List[int]:
+        """Hang detection: a replica that still answers ``healthy()`` but
+        whose ``steps_executed`` counter has not moved for
+        ``slo.replica_stall_s`` WALL-CLOCK seconds while it holds active
+        work is wedged (hung engine loop, stuck collective) — declare it
+        dead and fail its handles over like a crash.  Idle replicas are
+        exempt: no active work, nothing to step."""
+        grace = self.slo.replica_stall_s
+        now = time.monotonic()
+        newly: List[int] = []
+        for i in self._live():
+            p = self.proxies[i]
+            try:
+                active = p.num_active
+                steps = p.steps_executed
+            except Exception:
+                continue        # liveness probe above owns hard failures
+            if active <= 0:
+                self._progress.pop(i, None)
+                continue
+            prev = self._progress.get(i)
+            if prev is None or prev[0] != steps:
+                self._progress[i] = (steps, now)
+            elif now - prev[1] >= grace:
+                self._progress.pop(i, None)
                 self.mark_dead(i)
                 newly.append(i)
         return newly
@@ -385,6 +426,7 @@ class ProxyRouter:
         autoscaler) every ``interval`` seconds until ``stop()``."""
         if self._monitor is not None:
             return
+        self._monitor_stop.clear()      # restart after a previous stop()
 
         def loop():
             while not self._monitor_stop.wait(interval):
@@ -515,10 +557,74 @@ class ProxyRouter:
             callback(res)
         return cb
 
+    # --------------------------------------------------- admission control
+    def _admit_or_reject(self, task: RolloutTask, n: int, version: int,
+                         callback: Callable) -> Optional[List[int]]:
+        """Fleet front door.  Stamps the absolute deadline, then either
+        admits (returns None) or resolves the submission immediately with a
+        typed ``Rejected`` (returns the rejected ids, callbacks already
+        fired) — expired deadline, per-class bound, or total bound with
+        nothing lower-priority left to shed.  Queue depths are lock-free
+        snapshots, so bounds are approximate under concurrent submitters:
+        a few requests over, never silent unbounded queueing."""
+        slo = self.slo
+        if slo is None:
+            return None
+        now = slo.clock()
+        deadline_at = stamp_deadline(task, now)
+        priority = getattr(task, "priority", PRIORITY_NORMAL)
+        reason = None
+        if slo.shed_expired and deadline_at is not None and now >= deadline_at:
+            reason = "expired"
+        if reason is None and slo.queue_limit_per_class is not None:
+            depth = self.queue_depth_by_class.get(priority, 0)
+            if depth + n > slo.queue_limit_per_class:
+                reason = "queue_full"
+        if reason is None and slo.queue_limit_total is not None:
+            if self.num_pending + n > slo.queue_limit_total:
+                if not self._shed_below(priority, n):
+                    reason = "queue_full"
+        if reason is None:
+            return None
+        with self._lock:
+            self._rejected += n
+        rejected_ids: List[int] = []
+        for t in (expand_replicas(task, n) if n > 1 else [task]):
+            rejected_ids.append(t.task_id)
+            callback(Rejected(request_id=t.task_id, task=t, tokens=None,
+                              logprobs=None, version_started=version,
+                              aborted=True, partial=True, reason=reason))
+        return rejected_ids
+
+    def _shed_below(self, priority: int, n: int) -> bool:
+        """Make room at the total bound: shed up to ``n`` queued requests
+        of strictly lower priority, deepest-queued replicas first.  Returns
+        True if any shed was issued (the arrival is then admitted — the
+        shed lands asynchronously on the replica loop)."""
+        shed = 0
+        order = sorted(self._live(),
+                       key=lambda i: -self.proxies[i].num_pending)
+        for i in order:
+            by_class = getattr(self.proxies[i], "pending_by_priority", None)
+            if by_class is None or not hasattr(self.proxies[i], "shed_lowest"):
+                continue
+            lower = sum(c for p, c in by_class.items() if p < priority)
+            while lower > 0 and shed < n:
+                self.proxies[i].shed_lowest(priority)
+                lower -= 1
+                shed += 1
+            if shed >= n:
+                break
+        return shed > 0
+
     # ------------------------------------------------------ proxy protocol
     def generate(self, task: RolloutTask, version: int,
                  callback: Callable[[GenerationResult], None],
                  stream_cb: Optional[Callable] = None):
+        n = int(task.meta.get("num_return_sequences", 1))
+        rejected_ids = self._admit_or_reject(task, n, version, callback)
+        if rejected_ids is not None:
+            return rejected_ids if n > 1 else rejected_ids[0]
         kw = {"stream_cb": stream_cb} if stream_cb is not None else {}
         while True:
             idx = self._place(task)
@@ -535,6 +641,34 @@ class ProxyRouter:
     def generate_group(self, tasks: List[RolloutTask], version: int,
                        callback: Callable[[GenerationResult], None]) -> List[int]:
         assert tasks, "empty group"
+        if self.slo is not None:
+            slo, now = self.slo, self.slo.clock()
+            for t in tasks:
+                stamp_deadline(t, now)
+            t0 = tasks[0]
+            priority = getattr(t0, "priority", PRIORITY_NORMAL)
+            reason = None
+            deadline_at = t0.meta.get("deadline_at")
+            if slo.shed_expired and deadline_at is not None \
+                    and now >= deadline_at:
+                reason = "expired"
+            if reason is None and slo.queue_limit_per_class is not None \
+                    and self.queue_depth_by_class.get(priority, 0) \
+                    + len(tasks) > slo.queue_limit_per_class:
+                reason = "queue_full"
+            if reason is None and slo.queue_limit_total is not None \
+                    and self.num_pending + len(tasks) > slo.queue_limit_total \
+                    and not self._shed_below(priority, len(tasks)):
+                reason = "queue_full"
+            if reason is not None:
+                with self._lock:
+                    self._rejected += len(tasks)
+                for t in tasks:
+                    callback(Rejected(
+                        request_id=t.task_id, task=t, tokens=None,
+                        logprobs=None, version_started=version,
+                        aborted=True, partial=True, reason=reason))
+                return [t.task_id for t in tasks]
         while True:
             idx = self._place(tasks[0])
             try:
@@ -795,6 +929,45 @@ class ProxyRouter:
     def queue_depth(self) -> int:
         """Fleet-wide submitted-but-unadmitted requests (live replicas)."""
         return self.num_pending
+
+    @property
+    def queue_depth_by_class(self) -> Dict[int, int]:
+        """Fleet-wide queued request count per priority class."""
+        depth: Dict[int, int] = {}
+        for i in self._live():
+            by_class = getattr(self.proxies[i], "pending_by_priority", None)
+            if by_class is None:
+                continue
+            for priority, count in by_class.items():
+                depth[priority] = depth.get(priority, 0) + count
+        return depth
+
+    @property
+    def deadline_misses(self) -> int:
+        """Expired rejections + enforced deadline timeouts, fleet-wide
+        (counters survive replica death — sums run over ALL replicas)."""
+        return sum(int(getattr(p, "deadline_misses", 0)) for p in self.proxies)
+
+    @property
+    def preemptions(self) -> int:
+        return sum(int(getattr(p, "preemptions", 0)) for p in self.proxies)
+
+    @property
+    def long_tail_defers(self) -> int:
+        return sum(int(getattr(p, "long_tail_defers", 0)) for p in self.proxies)
+
+    @property
+    def stall_aborts(self) -> int:
+        return sum(int(getattr(p, "stall_aborts", 0)) for p in self.proxies)
+
+    @property
+    def rejected(self) -> int:
+        """Typed Rejected resolutions: front-door bounces + replica-level
+        sheds/expiries."""
+        with self._lock:
+            front_door = self._rejected
+        return front_door + sum(int(getattr(p, "rejected", 0))
+                                for p in self.proxies)
 
     @property
     def active_per_replica(self) -> List[int]:

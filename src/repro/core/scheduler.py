@@ -24,11 +24,14 @@ from repro.core.llm_proxy import LLMProxy
 from repro.core.rollout_client import (GenerationHandle, GroupHandle,
                                        RolloutClient)
 from repro.core.sample_buffer import SampleBuffer
-from repro.core.types import GenerationResult, RolloutTask, Sample, next_uid
+from repro.core.types import (PRIORITY_NORMAL, GenerationResult, Rejected,
+                              RolloutTask, Sample, next_uid)
 
 
 def expand_tasks(prompt_id: int, prompt_tokens, group_size: int,
-                 max_new_tokens: int, *, replicate: bool) -> List[RolloutTask]:
+                 max_new_tokens: int, *, replicate: bool,
+                 priority: int = PRIORITY_NORMAL,
+                 deadline_ms: Optional[float] = None) -> List[RolloutTask]:
     """Prompt replication (`num_return_sequences_expand`): one prompt with G
     candidates becomes G independently schedulable tasks; without it the
     whole group is a single task (one submission decoding G sequences —
@@ -38,12 +41,14 @@ def expand_tasks(prompt_id: int, prompt_tokens, group_size: int,
     if replicate:
         return [RolloutTask(task_id=next_uid(), prompt_id=prompt_id,
                             replica_idx=i, prompt_tokens=prompt_tokens,
-                            max_new_tokens=max_new_tokens, group_id=gid)
+                            max_new_tokens=max_new_tokens, group_id=gid,
+                            priority=priority, deadline_ms=deadline_ms)
                 for i in range(group_size)]
     return [RolloutTask(task_id=next_uid(), prompt_id=prompt_id, replica_idx=0,
                         prompt_tokens=prompt_tokens,
                         max_new_tokens=max_new_tokens, group_id=gid,
-                        meta={"num_return_sequences": group_size})]
+                        meta={"num_return_sequences": group_size},
+                        priority=priority, deadline_ms=deadline_ms)]
 
 
 def _make_sample(result: GenerationResult) -> Sample:
@@ -52,6 +57,10 @@ def _make_sample(result: GenerationResult) -> Sample:
     meta = dict(task.meta)
     if result.legs:
         meta["legs"] = list(result.legs)   # per-leg (version, ntokens) tags
+    if getattr(result, "timed_out", False):
+        meta["timed_out"] = True           # partial sample: deadline/stall hit
+    if isinstance(result, Rejected):
+        meta["rejected"] = result.reason
     return Sample(
         sample_id=next_uid(), prompt_id=task.prompt_id,
         replica_idx=task.replica_idx,
@@ -142,6 +151,8 @@ def collect_rollout(
     version: int = 0,
     timeout: float = 300.0,
     group_submit: bool = True,
+    priority: int = PRIORITY_NORMAL,
+    deadline_ms: Optional[float] = None,
 ) -> List[Sample]:
     """One rollout step (queue scheduling): returns num_groups qualifying
     groups, flattened.  Extra in-flight generations are cancelled on return.
@@ -172,7 +183,8 @@ def collect_rollout(
             exhausted = True
             return False
         tasks = expand_tasks(pid, toks, group_size, max_new_tokens,
-                             replicate=replicate)
+                             replicate=replicate, priority=priority,
+                             deadline_ms=deadline_ms)
         if replicate and group_submit and len(tasks) > 1:
             new = client.submit_group(tasks, version=version).handles
         else:
@@ -281,24 +293,30 @@ class RolloutProducer(threading.Thread):
                  prompts: Iterator[tuple[int, np.ndarray]], *,
                  group_size: int, max_new_tokens: int,
                  reward_fn: Callable[[Sample], float],
-                 replicate: bool = True, name: str = "rollout_producer"):
+                 replicate: bool = True, name: str = "rollout_producer",
+                 priority: int = PRIORITY_NORMAL,
+                 deadline_ms: Optional[float] = None):
         super().__init__(name=name, daemon=True)
         self.buffer = buffer
         self.group_size = group_size
         self.max_new_tokens = max_new_tokens
         self.reward_fn = reward_fn
         self.replicate = replicate
-        self._stop = threading.Event()
+        self.priority = priority
+        self.deadline_ms = deadline_ms
+        # NB: not named _stop — threading.Thread owns that attribute,
+        # and join() calls it as a method
+        self._halt = threading.Event()
         self._owns_client = not isinstance(proxy, RolloutClient)
         self.client = RolloutClient.ensure(
             proxy, version_fn=lambda: self.buffer.version,
             resume_gate=lambda: not (self.buffer.closed
-                                     or self._stop.is_set()))
+                                     or self._halt.is_set()))
         self.proxy = self.client.proxy
         self._groups = _GroupAssembler(prompts, group_size)
 
     def stop(self) -> None:
-        self._stop.set()
+        self._halt.set()
         if self._owns_client:
             # a caller-provided (possibly shared) client is left open —
             # other consumers may still rely on its continuations.
@@ -329,7 +347,9 @@ class RolloutProducer(threading.Thread):
                 task_id=t0.task_id, prompt_id=t0.prompt_id, replica_idx=0,
                 prompt_tokens=t0.prompt_tokens,
                 max_new_tokens=t0.max_new_tokens, group_id=t0.group_id,
-                meta={"num_return_sequences": len(tasks)}), version=version)
+                meta={"num_return_sequences": len(tasks)},
+                priority=t0.priority, deadline_ms=t0.deadline_ms),
+                version=version)
         elif len(tasks) > 1:
             handle = self.client.submit_group(tasks, version=version)
         else:
@@ -348,7 +368,7 @@ class RolloutProducer(threading.Thread):
         version = 0
         exhausted = False
         while len(tasks) < self.group_size:
-            if self._stop.is_set() or self.buffer.closed:
+            if self._halt.is_set() or self.buffer.closed:
                 self.buffer.reclaim(len(tasks))
                 return False
             v = self.buffer.begin_generation(timeout=0.1)
@@ -367,11 +387,13 @@ class RolloutProducer(threading.Thread):
                                      replica_idx=len(tasks),
                                      prompt_tokens=toks,
                                      max_new_tokens=self.max_new_tokens,
-                                     group_id=self._groups.group_id(pid)))
+                                     group_id=self._groups.group_id(pid),
+                                     priority=self.priority,
+                                     deadline_ms=self.deadline_ms))
         self._submit(tasks, version)
         return not exhausted
 
     def run(self) -> None:
-        while not self._stop.is_set() and not self.buffer.closed:
+        while not self._halt.is_set() and not self.buffer.closed:
             if not self._produce_group():
                 return

@@ -9,6 +9,12 @@ import numpy as np
 
 _uid = itertools.count()
 
+# Priority classes for SLO-aware scheduling.  Higher value = more important.
+# Any int works as a priority; these three are the conventional tenant tiers.
+PRIORITY_LOW = 0
+PRIORITY_NORMAL = 1
+PRIORITY_HIGH = 2
+
 
 def next_uid() -> int:
     return next(_uid)
@@ -25,6 +31,13 @@ class RolloutTask:
     max_new_tokens: int
     group_id: int = -1
     meta: dict = dataclasses.field(default_factory=dict)
+    # --- SLO fields (see core/slo.py) ---
+    # Scheduling class: higher wins the queue and may preempt lower classes.
+    priority: int = PRIORITY_NORMAL
+    # Latency budget relative to FIRST submission.  The proxy/router stamp
+    # the absolute deadline into meta["deadline_at"] once, so abort->resume
+    # continuation legs (which copy meta) inherit the original deadline.
+    deadline_ms: Optional[float] = None
 
 
 def expand_replicas(task: "RolloutTask", n: int) -> "List[RolloutTask]":
@@ -38,7 +51,8 @@ def expand_replicas(task: "RolloutTask", n: int) -> "List[RolloutTask]":
                         prompt_id=task.prompt_id, replica_idx=i,
                         prompt_tokens=task.prompt_tokens,
                         max_new_tokens=task.max_new_tokens,
-                        group_id=task.group_id, meta=dict(meta))
+                        group_id=task.group_id, meta=dict(meta),
+                        priority=task.priority, deadline_ms=task.deadline_ms)
             for i in range(n)]
 
 
@@ -115,6 +129,10 @@ class GenerationRequest:
     # they grow.  None = no streaming overhead for this request.
     stream_cb: Optional[Callable[[Any], None]] = None
     streamed: int = 0                # tokens already pushed to stream_cb
+    # SLO watchdog bookkeeping (proxy-loop private): decoded tokens seen at
+    # the last watchdog tick, and the clock reading when they last grew.
+    decoded_seen: int = 0
+    last_progress: float = 0.0
 
 
 @dataclasses.dataclass
@@ -134,3 +152,17 @@ class GenerationResult:
     # under.  None for raw engine/proxy results (single-leg, version ==
     # version_started).
     legs: Optional[List[tuple]] = None
+    # SLO watchdog verdict: the request was force-resolved (deadline hit or
+    # decode stalled).  Pages are RELEASED (not retained) — the partial
+    # tokens are final and the client must not schedule a continuation.
+    timed_out: bool = False
+
+
+@dataclasses.dataclass
+class Rejected(GenerationResult):
+    """Typed admission-control outcome: the request never ran (or was shed
+    from the queue).  Always ``aborted=True, partial=True`` with no tokens
+    beyond previously-decoded legs; ``reason`` is one of ``"expired"``
+    (deadline already/now past while queued), ``"queue_full"`` (per-class or
+    total bound hit), or ``"shed"`` (evicted to admit higher-priority work)."""
+    reason: str = ""

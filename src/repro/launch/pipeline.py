@@ -24,6 +24,8 @@ from repro.core.llm_proxy import LLMProxy
 from repro.core.router import AutoscalePolicy, ProxyRouter
 from repro.core.sample_buffer import SampleBuffer
 from repro.core.scheduler import RolloutProducer
+from repro.core.slo import SLOConfig, without_admission
+from repro.core.types import PRIORITY_NORMAL
 from repro.data.dataset import ArithmeticTask, EOS
 from repro.models import ModelConfig, get_api
 from repro.rewards.verifier import ArithmeticVerifier
@@ -93,6 +95,35 @@ class PipelineSettings:
     # in-flight work failed over without waiting for a dispatch to hit
     # them.  0 (default) relies on dispatch-time detection only.
     health_probe_interval: float = 0.0
+    # --- SLO layer (admission control / preemption / watchdog) ---
+    # slo_enabled arms the layer; all numeric knobs use 0 = off/unbounded.
+    # Queue bounds are enforced fleet-wide at the router front door (replicas
+    # behind a router carry an admission-stripped copy so admitted work is
+    # never double-rejected).
+    slo_enabled: bool = False
+    slo_queue_limit_per_class: int = 0     # pending bound per priority class
+    slo_queue_limit_total: int = 0         # pending bound across classes
+    slo_preempt: bool = True               # high-priority arrivals evict decodes
+    slo_stall_timeout: float = 0.0         # s without decode progress => timeout
+    slo_defer_after_tokens: int = 0        # long-tail defer threshold (tokens)
+    slo_replica_stall: float = 0.0         # s of frozen replica steps => dead
+    # default SLO class stamped on produced rollout tasks
+    rollout_priority: int = PRIORITY_NORMAL
+    rollout_deadline_ms: float = 0.0       # 0 = no deadline
+
+
+def make_slo_config(s: PipelineSettings) -> Optional[SLOConfig]:
+    """Translate the flat settings knobs into an ``SLOConfig`` (or None
+    when the layer is disabled)."""
+    if not s.slo_enabled:
+        return None
+    return SLOConfig(
+        queue_limit_per_class=s.slo_queue_limit_per_class or None,
+        queue_limit_total=s.slo_queue_limit_total or None,
+        preempt=s.slo_preempt,
+        stall_timeout_s=s.slo_stall_timeout or None,
+        defer_after_tokens=s.slo_defer_after_tokens or None,
+        replica_stall_s=s.slo_replica_stall or None)
 
 
 def make_rollout_engine(api, params, s: PipelineSettings) -> RolloutEngine:
@@ -133,9 +164,15 @@ def make_rollout_fleet(api, params, s: PipelineSettings,
     hysteresis policy driving load-triggered elasticity."""
     n = max(1, int(s.num_rollout_replicas))
     elastic = s.autoscale_max_replicas > n
+    slo = make_slo_config(s)
     if n == 1 and not elastic:
         engine = make_rollout_engine(api, params, s)
-        return [engine], [LLMProxy(engine)], None
+        # a lone proxy IS the front door: it keeps the full SLO config,
+        # queue bounds included
+        return [engine], [LLMProxy(engine, slo=slo)], None
+    # behind a router the queue bounds are enforced fleet-wide at the front
+    # door; replicas keep the preemption/watchdog parts only
+    replica_slo = without_admission(slo)
     shard = s if n == 1 else dataclasses.replace(
         s, num_slots=max(1, -(-s.num_slots // n)),
         num_pages=None if s.num_pages is None else max(2, -(-s.num_pages // n)))
@@ -144,7 +181,7 @@ def make_rollout_fleet(api, params, s: PipelineSettings,
     engines = [make_rollout_engine(api, params,
                                    dataclasses.replace(shard, seed=s.seed + i))
                for i in range(n)]
-    proxies = [LLMProxy(e, name=f"llm_proxy_{i}")
+    proxies = [LLMProxy(e, name=f"llm_proxy_{i}", slo=replica_slo)
                for i, e in enumerate(engines)]
     counter = itertools.count(n)
 
@@ -152,13 +189,13 @@ def make_rollout_fleet(api, params, s: PipelineSettings,
         i = next(counter)
         e = make_rollout_engine(api, params,
                                 dataclasses.replace(shard, seed=s.seed + i))
-        return LLMProxy(e, name=f"llm_proxy_{i}")
+        return LLMProxy(e, name=f"llm_proxy_{i}", slo=replica_slo)
 
     policy = AutoscalePolicy(
         min_replicas=max(1, s.autoscale_min_replicas),
         max_replicas=s.autoscale_max_replicas) if elastic else None
     return engines, proxies, ProxyRouter(proxies, replica_factory=factory,
-                                         autoscale=policy)
+                                         autoscale=policy, slo=slo)
 
 
 @dataclasses.dataclass
@@ -173,6 +210,12 @@ class RLVRPipeline:
     engines: List[RolloutEngine] = dataclasses.field(default_factory=list)
     proxies: List[LLMProxy] = dataclasses.field(default_factory=list)
     router: Optional[ProxyRouter] = None    # None on a 1-replica fleet
+    chaos: List = dataclasses.field(default_factory=list)  # FaultInjectors
+
+    def attach_chaos(self, injector) -> None:
+        """Register a ``FaultInjector`` so ``shutdown()`` halts and joins
+        it — chaos threads must not outlive the pipeline they torment."""
+        self.chaos.append(injector)
 
     @property
     def client(self):
@@ -200,10 +243,14 @@ class RLVRPipeline:
             self.shutdown()
 
     def shutdown(self):
+        for inj in self.chaos:
+            inj.stop()              # sets halt AND joins the chaos thread
         self.producer.stop()
         self.buffer.close()
+        if self.producer.is_alive():
+            self.producer.join(timeout=10)
         if self.router is not None:
-            self.router.stop()
+            self.router.stop()      # joins the health monitor too
         else:
             for p in (self.proxies or [self.proxy]):
                 p.stop()
@@ -232,7 +279,9 @@ def build_rlvr_pipeline(model_cfg: ModelConfig, s: PipelineSettings,
         task.prompt_stream(group_size=s.num_return_sequences_in_group),
         group_size=s.num_return_sequences_in_group,
         max_new_tokens=s.max_new_tokens, reward_fn=reward_fn,
-        replicate=s.is_num_return_sequences_expand)
+        replicate=s.is_num_return_sequences_expand,
+        priority=s.rollout_priority,
+        deadline_ms=s.rollout_deadline_ms or None)
     controller = AsyncController(buffer, proxies, trainer.train_on_samples,
                                  trainer.get_weights, alpha=alpha,
                                  weight_sync=s.weight_sync,
@@ -255,6 +304,12 @@ class AgenticPipeline:
     engines: List[RolloutEngine] = dataclasses.field(default_factory=list)
     proxies: List[LLMProxy] = dataclasses.field(default_factory=list)
     router: Optional[ProxyRouter] = None    # None on a 1-replica fleet
+    chaos: List = dataclasses.field(default_factory=list)  # FaultInjectors
+
+    def attach_chaos(self, injector) -> None:
+        """Register a ``FaultInjector`` so ``shutdown()`` halts and joins
+        it — chaos threads must not outlive the pipeline they torment."""
+        self.chaos.append(injector)
 
     @property
     def client(self):
@@ -282,10 +337,12 @@ class AgenticPipeline:
             self.shutdown()
 
     def shutdown(self):
+        for inj in self.chaos:
+            inj.stop()              # sets halt AND joins the chaos thread
         self.pool.stop(join=False)
         self.buffer.close()
         if self.router is not None:
-            self.router.stop()
+            self.router.stop()      # joins the health monitor too
         else:
             for p in (self.proxies or [self.proxy]):
                 p.stop()

@@ -65,6 +65,20 @@ def main() -> None:
                          "seconds: crashed replicas are detected and their "
                          "in-flight work failed over (0 = dispatch-time "
                          "detection only)")
+    ap.add_argument("--slo", action="store_true",
+                    help="arm the SLO layer: priority-aware admission, "
+                         "preemption, and the deadline/stall watchdog")
+    ap.add_argument("--slo-queue-limit", type=int, default=0,
+                    help="fleet-wide pending bound per priority class; "
+                         "overflow is resolved as a typed Rejected result "
+                         "(0 = unbounded)")
+    ap.add_argument("--slo-stall-timeout", type=float, default=0.0,
+                    help="seconds without decode progress before an active "
+                         "request is force-resolved timed_out (0 = off)")
+    ap.add_argument("--slo-defer-after", type=int, default=0,
+                    help="long-tail watchdog: park a decode that reached "
+                         "this many tokens while work queues, so tails "
+                         "never block batch completion (0 = off)")
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--seed", type=int, default=0)
@@ -81,6 +95,10 @@ def main() -> None:
         num_rollout_replicas=args.rollout_replicas,
         autoscale_max_replicas=args.autoscale_max,
         health_probe_interval=args.health_probe_interval,
+        slo_enabled=args.slo,
+        slo_queue_limit_per_class=args.slo_queue_limit,
+        slo_stall_timeout=args.slo_stall_timeout,
+        slo_defer_after_tokens=args.slo_defer_after,
         max_new_tokens=args.max_new_tokens,
         max_seq_len=32,
         learning_rate=args.lr,
@@ -111,6 +129,11 @@ def main() -> None:
               f"alive={r.replicas_alive} added={r.replicas_added} "
               f"failed={r.replicas_failed} failovers={r.failovers} "
               f"lost_tokens={r.lost_tokens} migrations={r.migrations}")
+    if args.slo and stats:
+        last = stats[-1]
+        print(f"[train] slo: deadline_misses={last.deadline_misses} "
+              f"preemptions={last.preemptions} rejected={last.rejected} "
+              f"queue_depth_by_class={last.queue_depth_by_class}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump([dataclasses.asdict(s) for s in stats], f, indent=1)

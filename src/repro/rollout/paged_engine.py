@@ -307,6 +307,22 @@ class PagedDecodeEngine:
             return False
         return self._can_cover(self._pages_needed(prompt_len + max_new_tokens))
 
+    def can_cover_pages(self, prompt_len: int, max_new_tokens: int) -> bool:
+        """Page-only admission check (ignores slots): whether the pages for
+        a full-budget request could be produced right now.  The SLO
+        preemption path uses this — preempting frees a SLOT, never pages
+        (the victim keeps its KV parked), so it must only fire when pages
+        already cover the arrival."""
+        return self._can_cover(self._pages_needed(prompt_len + max_new_tokens))
+
+    def num_decoded(self, request_id: int) -> int:
+        """Decode progress of an active request (0 if unknown) — the SLO
+        watchdog's stall/long-tail signal."""
+        slot = self.req_to_slot.get(request_id)
+        if slot is None:
+            return 0
+        return len(self.slots[slot].tokens)
+
     def _set_table_row(self, slot: int, pages: List[int]) -> None:
         row = np.full((self.pages_per_seq,), -1, np.int32)
         row[:len(pages)] = pages

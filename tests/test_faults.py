@@ -30,9 +30,12 @@ from repro.core.rollout_client import RolloutClient
 from repro.core.router import AutoscalePolicy, ProxyRouter
 from repro.core.sample_buffer import SampleBuffer
 from repro.core.scheduler import RolloutProducer
+from repro.core.slo import SLOConfig, without_admission
+from repro.core.types import PRIORITY_HIGH, PRIORITY_LOW
 from repro.models import get_api
 from repro.rollout.paged_engine import PagedDecodeEngine
 from test_router import FakeEngine, _task
+from test_slo import _ptask
 
 
 def _faulty_fleet(n=2, router_kw=None, **kw):
@@ -359,6 +362,102 @@ def test_paged_crash_failover_greedy_parity(paged_setup):
     router.fleet_audit()
 
 
+# ------------------------------------------------- SLO x fault interaction
+def test_preempted_then_killed_resolves_exactly_once():
+    """Preemption composing with crash failover: a low-priority request is
+    preempted (pages parked on its home replica), then the replica is
+    killed before the resume completes.  Every handle — the preempted one,
+    the preemptor, and bystanders — still resolves exactly once with its
+    full budget; the fleet audits clean."""
+    slo = SLOConfig()
+    engines = [FakeEngine(slots=1, step_sleep=0.002) for _ in range(2)]
+    proxies = wrap_fleet([LLMProxy(e, name=f"p{i}", slo=slo)
+                          for i, e in enumerate(engines)])
+    router = ProxyRouter(proxies)
+    router.start()
+    client = RolloutClient(router)
+    # least-loaded placement: low0 -> p0, low1 -> p1, high -> p0
+    h_low0 = client.submit(_ptask(20, priority=PRIORITY_LOW))
+    h_low1 = client.submit(_ptask(30, priority=PRIORITY_LOW))
+    _wait_for(lambda: engines[0].active and engines[1].active)
+    h_high = client.submit(_ptask(2, priority=PRIORITY_HIGH))
+    _wait_for(lambda: proxies[0].preemptions == 1)
+    proxies[0].kill()
+    router.probe_health()
+    fired = []
+    for h in (h_low0, h_low1, h_high):
+        h.add_done_callback(fired.append)
+    for h in (h_low0, h_low1, h_high):
+        res = h.result(60)
+        assert not res.aborted, "chaos must never surface an aborted handle"
+        assert sum(n for _, n in res.legs) == h.task.max_new_tokens
+    time.sleep(0.1)
+    router.stop()
+    assert len(fired) == 3, "exactly-once, zero duplicates"
+    # >= 1: the failed-over high-priority request may legitimately preempt
+    # the survivor's low-priority decode too
+    assert router.preemptions >= 1, "counters survive the crash"
+    router.fleet_audit()
+
+
+def test_stalled_replica_detected_and_failed_over():
+    """A hung replica still answers healthy(); only the router's
+    steps-frozen probe (slo.replica_stall_s) catches it.  Its in-flight
+    work fails over to the survivor like a crash."""
+    slo = SLOConfig(replica_stall_s=0.2)
+    engines = [FakeEngine(slots=2, step_sleep=0.002) for _ in range(2)]
+    proxies = wrap_fleet([LLMProxy(e, name=f"p{i}")
+                          for i, e in enumerate(engines)])
+    router = ProxyRouter(proxies, slo=slo)
+    router.start()
+    router.start_health_monitor(0.02)
+    client = RolloutClient(router)
+    handles = [client.submit(_task(40, prompt=[1, 2])) for _ in range(2)]
+    _wait_for(lambda: engines[0].active and engines[1].active)
+    proxies[0].stall()
+    assert proxies[0].healthy(), "a hung replica still answers healthy()"
+    _wait_for(lambda: router.replica_state(0) == "dead", timeout=15)
+    for h in handles:
+        res = h.result(60)
+        assert not res.aborted and sum(n for _, n in res.legs) == 40
+    time.sleep(0.1)
+    router.stop()        # unblocks the stalled loop; no late delivery
+    assert proxies[0].stalls == 1
+    assert router.replicas_alive == 1
+    router.fleet_audit()
+
+
+def test_background_threads_joined_on_shutdown():
+    """Regression (thread-leak fix): health monitor, FaultyProxy
+    self-destruct watchdogs, and the FaultInjector are all joined by their
+    owners' stop() — a full start/stop cycle leaves no new live thread."""
+    before = set(threading.enumerate())
+    engines = [FakeEngine(slots=2, step_sleep=0.002) for _ in range(2)]
+    # arm a never-firing self-destruct so each watchdog thread exists
+    proxies = wrap_fleet([LLMProxy(e, name=f"p{i}")
+                          for i, e in enumerate(engines)],
+                         kill_after_steps=10 ** 9)
+    router = ProxyRouter(proxies)
+    router.start()
+    router.start_health_monitor(0.01)
+    injector = FaultInjector(proxies, seed=0, max_kills=1, min_alive=2,
+                             on_kill=lambda i: router.probe_health())
+    injector.start()
+    client = RolloutClient(router)
+    assert client.submit(_task(5, prompt=[1, 2])).result(30).tokens is not None
+    injector.stop()                      # sets halt AND joins
+    assert not injector.is_alive()
+    router.stop()                        # joins monitor + proxy watchdogs
+    deadline = time.monotonic() + 10
+    leaked = [t for t in threading.enumerate()
+              if t not in before and t.is_alive()]
+    while leaked and time.monotonic() < deadline:
+        time.sleep(0.01)
+        leaked = [t for t in threading.enumerate()
+                  if t not in before and t.is_alive()]
+    assert not leaked, f"threads leaked past shutdown: {leaked}"
+
+
 # ------------------------------------------------------------ chaos sweeps
 @pytest.mark.faults
 def test_chaos_sweep_fake_fleet_seeded():
@@ -436,4 +535,49 @@ def test_chaos_sweep_with_weight_syncs_and_aborts():
     time.sleep(0.15)
     router.stop()
     assert router.replicas_added == 1
+    router.fleet_audit()
+
+
+@pytest.mark.faults
+@pytest.mark.timeout(300)
+def test_chaos_sweep_hang_modes():
+    """Chaos beyond crashes: the injector fires kill, stall, AND slow
+    faults while 24 requests run.  Stalls are invisible to healthy() — the
+    router's steps-frozen probe must rescue their work; slowdowns must
+    never break correctness.  Invariants: every handle resolves exactly
+    once with its full budget, survivors audit clean."""
+    slo = SLOConfig(replica_stall_s=0.3)
+    engines = [FakeEngine(slots=4, step_sleep=0.002) for _ in range(4)]
+    proxies = wrap_fleet([LLMProxy(e, name=f"p{i}")
+                          for i, e in enumerate(engines)])
+    router = ProxyRouter(proxies, slo=slo)
+    router.start()
+    router.start_health_monitor(0.02)
+    client = RolloutClient(router)
+    injector = FaultInjector(proxies, seed=31337, min_delay=0.01,
+                             max_delay=0.05, max_kills=3, min_alive=2,
+                             modes=("kill", "stall", "slow"),
+                             on_kill=lambda i: router.probe_health())
+    injector.start()
+    rng = np.random.default_rng(13)
+    handles, resolved = [], []
+    for _ in range(24):
+        h = client.submit(_task(int(rng.integers(8, 32)),
+                                prompt=[1] * int(rng.integers(2, 6))))
+        h.add_done_callback(resolved.append)
+        handles.append(h)
+        time.sleep(0.003)
+    for h in handles:
+        res = h.result(90)
+        assert not res.aborted, "chaos must never surface an aborted handle"
+        assert len(res.tokens) == h.task.max_new_tokens
+        assert sum(n for _, n in res.legs) == len(res.tokens)
+    injector.stop()
+    assert not injector.is_alive()
+    time.sleep(0.15)
+    router.stop()
+    assert len(resolved) == len(handles), "exactly-once, zero duplicates"
+    fired = (len(injector.killed) + len(injector.stalled)
+             + len(injector.slowed))
+    assert fired <= 3
     router.fleet_audit()

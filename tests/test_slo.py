@@ -1,0 +1,426 @@
+"""SLO layer: admission control, priority preemption, and the watchdog.
+
+Acceptance-criteria coverage:
+
+* requests carry priority + deadline_ms end to end; the pending queue is
+  priority-ordered (FIFO within a class — uniform priorities unchanged);
+* admission control resolves over-bound / expired submissions immediately
+  with a typed ``Rejected`` (never silent queueing), and sheds queued
+  lower-priority work to make room at the total bound;
+* preemption pauses a low-priority decode with its pages parked (slots
+  freed, pages kept) and resumes it at ZERO re-prefill cost — on the real
+  paged engine the stitched output is byte-identical to an uninterrupted
+  greedy run;
+* the watchdog enforces deadlines with exactly-once timeout resolution
+  (partial sample, ``timed_out=True``, pages released), sheds expired
+  queued work, aborts stalled decodes, and defers detected long-tails so
+  they never block batch completion.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.llm_proxy import LLMProxy
+from repro.core.rollout_client import RolloutClient
+from repro.core.router import ProxyRouter
+from repro.core.slo import SLOConfig, without_admission
+from repro.core.types import (PRIORITY_HIGH, PRIORITY_LOW, PRIORITY_NORMAL,
+                              Rejected, RolloutTask, next_uid)
+from repro.models import get_api
+from repro.rollout.paged_engine import PagedDecodeEngine
+from test_router import FakeEngine, _task
+
+
+def _ptask(n=3, prompt=(1, 2), priority=PRIORITY_NORMAL, deadline_ms=None,
+           meta=None):
+    return RolloutTask(task_id=next_uid(), prompt_id=0, replica_idx=0,
+                       prompt_tokens=np.asarray(prompt, np.int32),
+                       max_new_tokens=n, group_id=-1, meta=dict(meta or {}),
+                       priority=priority, deadline_ms=deadline_ms)
+
+
+def _round_clock():
+    """Injectable deterministic clock: a mutable round counter read as
+    seconds, so lockstep tests express deadlines in rounds."""
+    box = [0.0]
+    return box, (lambda: box[0])
+
+
+def _drain(proxy, max_steps=500):
+    """Lockstep-drive the proxy until idle (commands included)."""
+    for _ in range(max_steps):
+        ran = proxy.step_once()
+        if not ran and proxy.num_pending == 0 and proxy.num_active == 0 \
+                and proxy._commands.empty():
+            return
+    raise AssertionError("proxy did not drain")
+
+
+# -------------------------------------------------------- priority ordering
+def test_priority_queue_ordering():
+    """A high-priority arrival overtakes queued lower-priority work; FIFO
+    is preserved within a class."""
+    eng = FakeEngine(slots=1, step_sleep=0)
+    proxy = LLMProxy(eng, slo=SLOConfig(preempt=False))
+    done = []
+    for pr, tag in ((PRIORITY_LOW, "lowA"), (PRIORITY_LOW, "lowB"),
+                    (PRIORITY_HIGH, "high"), (PRIORITY_NORMAL, "norm")):
+        t = _ptask(2, priority=pr)
+        proxy.generate(t, 0, (lambda tag: lambda r: done.append(tag))(tag))
+    _drain(proxy)
+    assert done == ["high", "norm", "lowA", "lowB"]
+
+
+def test_uniform_priority_is_plain_fifo():
+    eng = FakeEngine(slots=1, step_sleep=0)
+    proxy = LLMProxy(eng, slo=SLOConfig(preempt=False))
+    done = []
+    for tag in "abc":
+        proxy.generate(_ptask(2), 0,
+                       (lambda tag: lambda r: done.append(tag))(tag))
+    _drain(proxy)
+    assert done == ["a", "b", "c"]
+
+
+# -------------------------------------------------------------- preemption
+def test_preemption_pauses_low_for_high():
+    """abort-with-retain as a preemption primitive: the low-priority decode
+    is paused (pages parked), the high-priority request admits immediately,
+    and the victim's continuation resumes to its full budget."""
+    eng = FakeEngine(slots=1, step_sleep=0)
+    proxy = LLMProxy(eng, slo=SLOConfig())
+    client = RolloutClient(proxy)
+    h_low = client.submit(_ptask(10, priority=PRIORITY_LOW))
+    for _ in range(4):
+        proxy.step_once()
+    assert proxy.num_active == 1
+    h_high = client.submit(_ptask(2, priority=PRIORITY_HIGH))
+    done_order = []
+    h_low.add_done_callback(lambda r: done_order.append("low"))
+    h_high.add_done_callback(lambda r: done_order.append("high"))
+    _drain(proxy)
+    assert done_order == ["high", "low"]
+    assert proxy.preemptions == 1
+    res = h_low.result(0)
+    assert not res.aborted
+    assert sum(n for _, n in res.legs) == 10, "stitched to the full budget"
+    assert len(res.legs) == 2, "one preemption leg + the resumed leg"
+    assert h_high.result(0).tokens is not None
+    assert not eng.retained, "victim's parked pages reclaimed on resume"
+
+
+def test_no_preemption_within_same_class():
+    eng = FakeEngine(slots=1, step_sleep=0)
+    proxy = LLMProxy(eng, slo=SLOConfig())
+    client = RolloutClient(proxy)
+    h_a = client.submit(_ptask(6, priority=PRIORITY_LOW))
+    for _ in range(2):
+        proxy.step_once()
+    first_active = list(eng.active)
+    client.submit(_ptask(6, priority=PRIORITY_LOW))
+    for _ in range(2):
+        proxy.step_once()
+    assert list(eng.active) == first_active, "equal priority never preempts"
+    assert proxy.preemptions == 0
+    _drain(proxy)
+    assert h_a.result(0).tokens is not None
+
+
+def test_preemption_requires_page_coverage():
+    """Preempting frees a SLOT, never pages: when the engine reports it
+    cannot cover the arrival's pages, the queue head waits instead of
+    uselessly evicting a victim."""
+    eng = FakeEngine(slots=1, step_sleep=0)
+    eng.can_cover_pages = lambda prompt_len, max_new: False
+    proxy = LLMProxy(eng, slo=SLOConfig())
+    client = RolloutClient(proxy)
+    client.submit(_ptask(8, priority=PRIORITY_LOW))
+    for _ in range(2):
+        proxy.step_once()
+    client.submit(_ptask(2, priority=PRIORITY_HIGH))
+    for _ in range(3):
+        proxy.step_once()
+    assert proxy.preemptions == 0
+    assert proxy.num_pending == 1, "head stays queued until pages free up"
+
+
+# ------------------------------------------------------- admission control
+def test_expired_submission_rejected():
+    box, clock = _round_clock()
+    proxy = LLMProxy(FakeEngine(slots=1, step_sleep=0),
+                     slo=SLOConfig(clock=clock))
+    client = RolloutClient(proxy)
+    box[0] = 10.0
+    t = _ptask(4, deadline_ms=2000)
+    t.meta["deadline_at"] = 5.0          # stamped at an earlier submission
+    h = client.submit(t)
+    res = h.result(1)
+    assert isinstance(res, Rejected) and res.reason == "expired"
+    assert res.aborted
+    assert proxy.rejected == 1 and proxy.deadline_misses == 1
+    assert proxy.num_pending == 0, "never silently queued"
+
+
+def test_queue_full_per_class_rejection():
+    proxy = LLMProxy(FakeEngine(slots=0, step_sleep=0),
+                     slo=SLOConfig(queue_limit_per_class=2))
+    client = RolloutClient(proxy)
+    kept = [client.submit(_ptask(3)) for _ in range(2)]
+    proxy.step_once()                    # move commands into the queue
+    h_over = client.submit(_ptask(3))
+    res = h_over.result(1)
+    assert isinstance(res, Rejected) and res.reason == "queue_full"
+    assert proxy.rejected == 1
+    # another class still has room
+    h_high = client.submit(_ptask(3, priority=PRIORITY_HIGH))
+    proxy.step_once()
+    assert proxy.pending_by_priority == {PRIORITY_NORMAL: 2, PRIORITY_HIGH: 1}
+    for h in kept + [h_high]:
+        assert not h.done()
+
+
+def test_total_bound_sheds_lowest_for_higher_priority():
+    """At the total bound a high-priority arrival is admitted by shedding
+    the newest queued request of the lowest class — typed ``shed``, not a
+    silent drop, and never the other way around."""
+    proxy = LLMProxy(FakeEngine(slots=0, step_sleep=0),
+                     slo=SLOConfig(queue_limit_total=2))
+    client = RolloutClient(proxy)
+    h_lowA = client.submit(_ptask(3, priority=PRIORITY_LOW))
+    h_lowB = client.submit(_ptask(3, priority=PRIORITY_LOW))
+    proxy.step_once()
+    h_high = client.submit(_ptask(3, priority=PRIORITY_HIGH))
+    proxy.step_once()                    # processes SHED + the new ADD
+    res = h_lowB.result(1)
+    assert isinstance(res, Rejected) and res.reason == "shed"
+    assert not h_lowA.done() and not h_high.done()
+    assert proxy.pending_by_priority == {PRIORITY_LOW: 1, PRIORITY_HIGH: 1}
+    # a low-priority arrival at the bound has nothing to outrank: rejected
+    h_lowC = client.submit(_ptask(3, priority=PRIORITY_LOW))
+    assert isinstance(h_lowC.result(1), Rejected)
+
+
+# ---------------------------------------------------------------- watchdog
+def test_deadline_timeout_exactly_once():
+    """An active request past its deadline is force-resolved exactly once:
+    partial tokens, ``timed_out=True``, pages released, no continuation."""
+    box, clock = _round_clock()
+    eng = FakeEngine(slots=1, step_sleep=0)
+    proxy = LLMProxy(eng, slo=SLOConfig(clock=clock))
+    client = RolloutClient(proxy)
+    resolved = []
+    h = client.submit(_ptask(100, deadline_ms=3000))
+    h.add_done_callback(resolved.append)
+    for _ in range(5):
+        proxy.step_once()
+    assert proxy.num_active == 1
+    box[0] = 4.0                         # past the 3.0 deadline
+    for _ in range(3):
+        proxy.step_once()
+    res = h.result(1)
+    assert res.timed_out and res.aborted and res.partial
+    assert len(res.tokens) > 0, "partial sample delivered"
+    assert len(resolved) == 1, "exactly-once resolution"
+    assert proxy.deadline_misses == 1
+    assert proxy.num_active == 0 and proxy.num_pending == 0
+    assert not eng.retained and not eng.active, "pages released"
+
+
+def test_pending_expired_work_is_shed():
+    box, clock = _round_clock()
+    proxy = LLMProxy(FakeEngine(slots=0, step_sleep=0),
+                     slo=SLOConfig(clock=clock))
+    client = RolloutClient(proxy)
+    h = client.submit(_ptask(4, deadline_ms=2000))
+    proxy.step_once()
+    assert proxy.num_pending == 1
+    box[0] = 3.0
+    proxy.step_once()
+    res = h.result(1)
+    assert isinstance(res, Rejected) and res.reason == "expired"
+    assert proxy.deadline_misses == 1 and proxy.num_pending == 0
+
+
+def test_stall_watchdog_times_out_stuck_decode():
+    """A decode making no progress for stall_timeout_s is resolved
+    ``timed_out`` (stuck engine / hung tool call)."""
+    class FrozenEngine(FakeEngine):
+        def step(self):
+            return []                    # decodes nothing, forever
+
+    box, clock = _round_clock()
+    eng = FrozenEngine(slots=1, step_sleep=0)
+    proxy = LLMProxy(eng, slo=SLOConfig(clock=clock, stall_timeout_s=5.0))
+    client = RolloutClient(proxy)
+    h = client.submit(_ptask(10))
+    proxy.step_once()
+    assert proxy.num_active == 1
+    box[0] = 3.0
+    proxy.step_once()                    # under the stall grace: keeps waiting
+    assert proxy.num_active == 1
+    box[0] = 6.0
+    proxy.step_once()
+    res = h.result(1)
+    assert res.timed_out and res.aborted
+    assert proxy.stall_aborts == 1 and proxy.deadline_misses == 0
+
+
+def test_long_tail_defer_unblocks_queue():
+    """RollPacker-style tail taming: a decode that hit the defer threshold
+    while work queues is parked (retain) so the queue drains; its
+    continuation resumes later and still reaches the full budget.  The
+    lineage tag bounds it to ONE defer."""
+    eng = FakeEngine(slots=1, step_sleep=0)
+    proxy = LLMProxy(eng, slo=SLOConfig(defer_after_tokens=4,
+                                        defer_min_remaining=2))
+    client = RolloutClient(proxy)
+    h_tail = client.submit(_ptask(30))
+    for _ in range(6):
+        proxy.step_once()
+    h_short = client.submit(_ptask(2))
+    order = []
+    h_tail.add_done_callback(lambda r: order.append("tail"))
+    h_short.add_done_callback(lambda r: order.append("short"))
+    _drain(proxy)
+    assert order == ["short", "tail"], "the tail never blocked completion"
+    assert proxy.long_tail_defers == 1, "deferred at most once per lineage"
+    res = h_tail.result(0)
+    assert not res.aborted and sum(n for _, n in res.legs) == 30
+
+
+# -------------------------------------------------------- client sessions
+def test_session_carries_priority_and_deadline():
+    eng = FakeEngine(slots=2, step_sleep=0)
+    proxy = LLMProxy(eng, slo=SLOConfig(preempt=False))
+    client = RolloutClient(proxy)
+    sess = client.session(max_new_tokens=3, priority=PRIORITY_HIGH,
+                          deadline_ms=60_000)
+    h = sess.turn([1, 2, 3])
+    t = threading.Thread(target=lambda: _drain(proxy))
+    t.start()
+    res = h.result(10)
+    t.join()
+    assert not res.aborted
+    assert h.task.priority == PRIORITY_HIGH
+    assert h.task.meta.get("deadline_at") is not None
+
+
+# ----------------------------------------------------- router front door
+def test_router_front_door_admission_and_depths():
+    """Fleet-wide bounds live at the router: replicas behind it carry an
+    admission-stripped copy, so admitted work is never double-rejected,
+    and ``queue_depth_by_class``/counters aggregate over the fleet."""
+    slo = SLOConfig(queue_limit_per_class=3)
+    engines = [FakeEngine(slots=0, step_sleep=0) for _ in range(2)]
+    proxies = [LLMProxy(e, name=f"p{i}", slo=without_admission(slo))
+               for i, e in enumerate(engines)]
+    router = ProxyRouter(proxies, slo=slo)
+    client = RolloutClient(router)
+    kept = [client.submit(_ptask(4)) for _ in range(3)]
+    for p in proxies:
+        p.step_once()
+    assert router.queue_depth_by_class == {PRIORITY_NORMAL: 3}
+    h_over = client.submit(_ptask(4))
+    res = h_over.result(1)
+    assert isinstance(res, Rejected) and res.reason == "queue_full"
+    assert router.rejected == 1
+    for h in kept:
+        assert not h.done(), "admitted work untouched by the rejection"
+
+
+def test_router_expired_group_rejected_per_member():
+    slo = SLOConfig()
+    engines = [FakeEngine(slots=2, step_sleep=0)]
+    proxies = [LLMProxy(engines[0], slo=without_admission(slo))]
+    router = ProxyRouter(proxies, slo=slo)
+    results = []
+    tasks = [_ptask(3, deadline_ms=1000) for _ in range(3)]
+    for t in tasks:
+        t.meta["deadline_at"] = -1.0     # already past
+    ids = router.generate_group(tasks, 0, results.append)
+    assert ids == [t.task_id for t in tasks]
+    assert len(results) == 3
+    assert all(isinstance(r, Rejected) and r.reason == "expired"
+               for r in results)
+    assert router.rejected == 3
+
+
+# --------------------------------------------------------- real paged engine
+@pytest.fixture(scope="module")
+def paged_api():
+    cfg = tiny("qwen3-4b", vocab_size=32)
+    api = get_api(cfg)
+    return api, api.init(jax.random.PRNGKey(0))
+
+
+def _paged(api, params, **kw):
+    kw.setdefault("num_slots", 1)
+    kw.setdefault("max_total_len", 64)
+    return PagedDecodeEngine(api, params, page_size=8, prefill_chunk=8,
+                             eos_id=99, temperature=0.0, num_pages=24, **kw)
+
+
+@pytest.mark.timeout(240)
+def test_paged_preempt_resume_zero_reprefill(paged_api):
+    """On the real engine: preempting a greedy decode and resuming it from
+    its parked pages costs ZERO re-prefilled prefix tokens and produces
+    byte-identical output to an uninterrupted run."""
+    api, params = paged_api
+    rng = np.random.default_rng(3)
+    p_low = rng.integers(1, 30, 6).astype(np.int32)
+    p_high = rng.integers(1, 30, 4).astype(np.int32)
+    budget_low, budget_high = 12, 3
+
+    ref_eng = _paged(api, params)
+    ref_proxy = LLMProxy(ref_eng)
+    h = RolloutClient(ref_proxy).submit(_task(budget_low, p_low))
+    _drain(ref_proxy)
+    ref = list(h.result(0).tokens)
+
+    eng = _paged(api, params)
+    proxy = LLMProxy(eng, slo=SLOConfig())
+    client = RolloutClient(proxy)
+    h_low = client.submit(_ptask(budget_low, prompt=p_low,
+                                 priority=PRIORITY_LOW))
+    for _ in range(6):                   # prefill + a few decode steps
+        proxy.step_once()
+    h_high = client.submit(_ptask(budget_high, prompt=p_high,
+                                  priority=PRIORITY_HIGH))
+    _drain(proxy, max_steps=2000)
+    res_low = h_low.result(0)
+    assert proxy.preemptions == 1
+    assert not res_low.aborted
+    out = list(res_low.tokens)
+    assert out == ref, "preempt+resume must preserve greedy output"
+    assert client.reprefills == 0, "resume re-attached pages, no re-prefill"
+    assert eng.total_prefill_tokens == len(p_low) + len(p_high), \
+        "zero re-prefilled prefix tokens"
+    assert h_high.result(0).tokens is not None
+    eng.audit_pages()
+
+
+@pytest.mark.timeout(240)
+def test_paged_timeout_releases_pages(paged_api):
+    """Deadline timeout on the real engine frees the victim's pages (plain
+    abort, nothing parked) and the pool audits clean."""
+    api, params = paged_api
+    box, clock = _round_clock()
+    eng = _paged(api, params, num_slots=2)
+    proxy = LLMProxy(eng, slo=SLOConfig(clock=clock))
+    client = RolloutClient(proxy)
+    free0 = eng.pages_free
+    h = client.submit(_ptask(40, prompt=np.asarray([1, 2, 3, 4], np.int32),
+                             deadline_ms=5000))
+    for _ in range(6):
+        proxy.step_once()
+    assert proxy.num_active == 1
+    box[0] = 6.0
+    proxy.step_once()
+    res = h.result(1)
+    assert res.timed_out and len(res.tokens) > 0
+    assert proxy.num_active == 0
+    assert eng.pages_free == free0, "timed-out request released its pages"
+    eng.audit_pages()
