@@ -1,0 +1,12 @@
+"""Concurrency correctness toolkit.
+
+- :mod:`repro.analysis.static_check` — AST lock-discipline pass (layer 1),
+  run via ``python tools/concheck.py``.
+- :mod:`repro.analysis.sanitizer` — instrumented lock shim + dynamic
+  lock-order graph (layer 2), activated by ``REPRO_SANITIZE=1`` or
+  ``pytest --sanitize``.
+- :mod:`repro.analysis.schedules` — seeded schedule perturbation that turns
+  the test suite into a race fuzzer.
+"""
+
+from repro.analysis import sanitizer, schedules, static_check  # noqa: F401

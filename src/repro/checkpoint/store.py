@@ -49,7 +49,7 @@ def load_tree(path: str, like: Any) -> Any:
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     assert len(payload) == len(leaves_like), "checkpoint/tree mismatch"
     leaves = []
-    for d, ref in zip(payload, leaves_like):
+    for d, ref in zip(payload, leaves_like, strict=True):
         arr = _unpack_leaf(d)
         assert tuple(arr.shape) == tuple(ref.shape), (arr.shape, ref.shape)
         leaves.append(arr)

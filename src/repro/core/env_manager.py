@@ -25,6 +25,7 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from repro.analysis.sanitizer import new_lock
 from repro.core.rollout_client import GenerationHandle, RolloutClient, Session
 from repro.core.sample_buffer import SampleBuffer
 from repro.core.types import GenerationResult, Trajectory, Turn, next_uid
@@ -59,6 +60,8 @@ class EnvManager(threading.Thread):
         self.max_new_tokens = max_new_tokens
         self.context_mode = context_mode
         self.max_context_tokens = max_context_tokens
+        self._handle_lock = new_lock("EnvManager._handle_lock")
+        self._inflight: Optional[GenerationHandle] = None  # guarded-by: _handle_lock
         if client is None and proxy is not None:
             client = RolloutClient.ensure(
                 proxy,
@@ -76,12 +79,37 @@ class EnvManager(threading.Thread):
 
     def _await(self, handle: GenerationHandle) -> Optional[GenerationResult]:
         """Park this manager on the turn's handle (NOT the GPU — other
-        managers' requests keep the decode slots busy meanwhile)."""
-        while not handle.wait(timeout=0.1):
+        managers' requests keep the decode slots busy meanwhile).
+
+        Push-based cancellation: the handle is registered under
+        ``_handle_lock`` so ``cancel_inflight`` (pool shutdown / target
+        reached) aborts it and the wait wakes immediately — no 0.1 s
+        stop-flag polling.  The ordering is race-free because the pool sets
+        its stop event *before* sweeping registrations: either we see
+        ``stopped`` here, or the sweep sees our registered handle.  The long
+        timed wait below is a belt-and-braces fallback, not a poll."""
+        with self._handle_lock:
             if self.pool.stopped:
                 handle.abort()        # cancel; retained pages are released
                 return None
+            self._inflight = handle
+        try:
+            while not handle.wait(timeout=5.0):
+                if self.pool.stopped:
+                    handle.abort()
+                    return None
+        finally:
+            with self._handle_lock:
+                self._inflight = None
         return handle.result(0)
+
+    def cancel_inflight(self) -> None:
+        """Abort whatever turn this manager is parked on (idempotent; a
+        handle that already resolved ignores the abort)."""
+        with self._handle_lock:
+            handle = self._inflight
+        if handle is not None:
+            handle.abort()
 
     def run(self) -> None:
         while not self.pool.stopped:
@@ -148,8 +176,8 @@ class EnvManagerPool:
         self.group_size = group_size
         self.target = target_trajectories
         self._stop = threading.Event()
-        self._count = 0
-        self._count_lock = threading.Lock()
+        self._count_lock = new_lock("EnvManagerPool._count_lock")
+        self._count = 0  # guarded-by: _count_lock
         self.managers: List[EnvManager] = []
         eid = 0
         for g in range(num_env_groups):
@@ -177,11 +205,19 @@ class EnvManagerPool:
             return self._count
 
     def on_trajectory(self, traj: Trajectory) -> None:
+        target_hit = False
         with self._count_lock:
             self._count += 1
             # redundant env rollout: stop at the target, abandon stragglers
-            if self.target is not None and self._count >= self.target:
+            if self.target is not None and self._count >= self.target \
+                    and not self._stop.is_set():
                 self._stop.set()
+                target_hit = True
+        if target_hit:
+            # wake every straggler NOW (outside _count_lock: aborting goes
+            # through the rollout client's lock)
+            for m in self.managers:
+                m.cancel_inflight()
 
     def start(self) -> "EnvManagerPool":
         for m in self.managers:
@@ -189,7 +225,12 @@ class EnvManagerPool:
         return self
 
     def stop(self, join: bool = True) -> None:
+        # order matters: set the stop flag first, then sweep registered
+        # handles — _await registers under its lock only after re-checking
+        # the flag, so no turn can slip between flag and sweep.
         self._stop.set()
+        for m in self.managers:
+            m.cancel_inflight()
         if join:
             for m in self.managers:
                 m.join(timeout=10)

@@ -34,6 +34,8 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.analysis.sanitizer import new_lock
+
 
 class ReplicaDeadError(RuntimeError):
     """Raised when a command is submitted to a crashed replica."""
@@ -64,7 +66,9 @@ class _ChaosEngine:
             time.sleep(slow)
         while (fp._stalled.is_set() and not fp._dead.is_set()
                and not fp.inner._stop.is_set()):
-            time.sleep(0.002)        # hung, not crashed: thread stays alive
+            # concheck: disable=busy-wait — the spin IS the injected fault:
+            # a hung engine makes zero progress while its thread stays alive.
+            time.sleep(0.002)
         if fp._dead.is_set() or fp.inner._stop.is_set():
             # the spin ended because the replica was killed/stopped, not
             # unstalled: a late step here would deliver post-mortem results
@@ -96,10 +100,10 @@ class FaultyProxy:
         self.inner = inner
         self.kill_after_steps = kill_after_steps
         self._dead = threading.Event()
-        self._guard_lock = threading.Lock()
-        self._decoded_at_death: Dict[int, int] = {}
+        self._guard_lock = new_lock("FaultyProxy._guard_lock")
+        self._decoded_at_death: Dict[int, int] = {}  # guarded-by: _guard_lock
         self._watchdog: Optional[threading.Thread] = None
-        self.kills = 0                   # 0 or 1; counters survive the crash
+        self.kills = 0  # guarded-by: _guard_lock — 0 or 1; survives the crash
         # hang-family faults, injected at the engine-step boundary
         self._slow_s = 0.0
         self._stalled = threading.Event()
@@ -144,7 +148,8 @@ class FaultyProxy:
     def decoded_counts(self) -> Dict[int, int]:
         """Per-request decode progress lost at death (empty while alive) —
         the router sums this into its ``lost_tokens`` counter."""
-        return dict(self._decoded_at_death)
+        with self._guard_lock:
+            return dict(self._decoded_at_death)
 
     # ----------------------------------------------------- hang-family faults
     def slow_decode(self, seconds: float) -> None:
@@ -187,6 +192,8 @@ class FaultyProxy:
             if self.inner.steps_executed >= self.kill_after_steps:
                 self.kill()
                 return
+            # concheck: disable=busy-wait — chaos-harness watchdog polling a
+            # plain step counter; there is no event source to park on.
             time.sleep(0.001)
 
     def stop(self) -> None:

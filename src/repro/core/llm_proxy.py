@@ -23,10 +23,11 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Protocol
 
+from repro.analysis.sanitizer import new_lock
 from repro.core.slo import SLOConfig, stamp_deadline
 from repro.core.types import (PRIORITY_NORMAL, GenerationRequest,
-                              GenerationResult, Rejected, RolloutTask,
-                              expand_replicas)
+                              GenerationResult, NotifyingEvent, Rejected,
+                              RolloutTask, expand_replicas)
 
 
 class InferenceEngine(Protocol):
@@ -90,9 +91,9 @@ class LLMProxy:
         # tokens (unprefilled prompt + unspent budget), updated at SUBMIT
         # time on the caller thread so a router sees its own placements
         # immediately (the command queue only drains on the loop thread).
-        self._load_lock = threading.Lock()
-        self._load_by_rid: Dict[int, int] = {}
-        self._outstanding_tokens = 0
+        self._load_lock = new_lock("LLMProxy._load_lock")
+        self._load_by_rid: Dict[int, int] = {}  # guarded-by: _load_lock
+        self._outstanding_tokens = 0            # guarded-by: _load_lock
         self.steps_executed = 0
         self.requests_completed = 0
         self.requests_aborted = 0
@@ -322,13 +323,14 @@ class LLMProxy:
         assert self._suspended.is_set(), "update_weights requires suspend()"
         self.engine.update_weights(params)
 
-    def update_weights_async(self, params) -> threading.Event:
+    def update_weights_async(self, params) -> NotifyingEvent:
         """NON-BLOCKING weight sync: stage a parameter swap that the proxy
         loop applies between engine steps — rollout keeps advancing; there
         is no suspend barrier.  Returns an event set once the engine holds
-        the new weights.  (Do not mix with a concurrent ``suspend()``: a
-        parked loop processes no commands.)"""
-        done = threading.Event()
+        the new weights (a ``NotifyingEvent``: composite fleet waiters
+        subscribe instead of polling).  (Do not mix with a concurrent
+        ``suspend()``: a parked loop processes no commands.)"""
+        done = NotifyingEvent()
         if self._thread is None or not self._thread.is_alive():
             # loop not running (tests, pre-start staging): apply inline
             self.engine.update_weights(params)

@@ -37,12 +37,18 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.analysis.sanitizer import new_rlock
 from repro.core.types import (GenerationResult, Rejected, RolloutTask,
                               expand_replicas, next_uid)
+
+# The continuation path re-admits work on the proxy/router while holding the
+# client lock (declared for concheck's cross-class cycle check):
+# lock-order: RolloutClient._lock -> ProxyRouter._lock
+# lock-order: RolloutClient._lock -> LLMProxy._load_lock
 
 _SENTINEL = object()
 
@@ -68,20 +74,20 @@ class GenerationHandle:
         self.task = task                     # the ORIGINAL task (leg 0)
         self.budget = int(task.max_new_tokens)
         self.orig_prompt = _np_tokens(task.prompt_tokens)
-        self._tokens: List[np.ndarray] = []  # stitched per-leg chunks
-        self._logprobs: List[np.ndarray] = []
-        self.legs: List[tuple] = []          # (version, tokens_in_leg)
-        self._cur_rid = task.task_id
-        self._cur_version = version
+        self._tokens: List[np.ndarray] = []  # guarded-by: _client._lock — stitched per-leg chunks
+        self._logprobs: List[np.ndarray] = []    # guarded-by: _client._lock
+        self.legs: List[tuple] = []          # guarded-by: _client._lock — (version, tokens_in_leg)
+        self._cur_rid = task.task_id         # guarded-by: _client._lock
+        self._cur_version = version          # guarded-by: _client._lock
         self._streaming = stream
-        self._emitted = 0                    # tokens pushed to stream queues
-        self._done_len = 0                   # tokens across completed legs
-        self._leg_tokens: List[np.ndarray] = []  # current leg's stream deltas
-        self._leg_len = 0
-        self._queues: List["queue.Queue"] = []
-        self._callbacks: List[Callable[[GenerationResult], None]] = []
-        self._cancelled = False
-        self._result: Optional[GenerationResult] = None
+        self._emitted = 0                    # guarded-by: _client._lock — tokens pushed to stream queues
+        self._done_len = 0                   # guarded-by: _client._lock — tokens across completed legs
+        self._leg_tokens: List[np.ndarray] = []  # guarded-by: _client._lock — current leg's stream deltas
+        self._leg_len = 0                    # guarded-by: _client._lock
+        self._queues: List["queue.Queue"] = []   # guarded-by: _client._lock
+        self._callbacks: List[Callable[[GenerationResult], None]] = []  # guarded-by: _client._lock
+        self._cancelled = False              # guarded-by: _client._lock
+        self._result: Optional[GenerationResult] = None  # guarded-by: _client._lock
         self._event = threading.Event()
 
     # ------------------------------------------------------------- waiting
@@ -96,6 +102,10 @@ class GenerationHandle:
         if not self._event.wait(timeout):
             raise TimeoutError(f"generation {self.task.task_id} not done "
                                f"within {timeout}s")
+        # the resolving thread writes _result strictly before _event.set():
+        # Event.wait() returning True happens-after that write, so this
+        # lock-free read observes the final value.
+        # concheck: disable=guarded-by
         return self._result
 
     def add_done_callback(self, fn: Callable[[GenerationResult], None]) -> None:
@@ -105,7 +115,8 @@ class GenerationHandle:
             if self._result is None:
                 self._callbacks.append(fn)
                 return
-        fn(self._result)
+            res = self._result
+        fn(res)
 
     # ------------------------------------------------------------ aborting
     def abort(self, retain: bool = False) -> None:
@@ -166,15 +177,15 @@ class GenerationHandle:
 
     # ------------------------------------------------- client-side internals
     # All _-methods below run under the client lock, on the proxy thread.
-    def _stitched_tokens(self) -> np.ndarray:
+    def _stitched_tokens(self) -> np.ndarray:  # holds: _client._lock
         return (np.concatenate(self._tokens) if self._tokens
                 else np.zeros((0,), np.int32))
 
-    def _stitched_logprobs(self) -> np.ndarray:
+    def _stitched_logprobs(self) -> np.ndarray:  # holds: _client._lock
         return (np.concatenate(self._logprobs) if self._logprobs
                 else np.zeros((0,), np.float32))
 
-    def _append_leg(self, tokens, logprobs, version: int) -> None:
+    def _append_leg(self, tokens, logprobs, version: int) -> None:  # holds: _client._lock
         t = _np_tokens(tokens)
         self._tokens.append(t)
         self._logprobs.append(_np_logprobs(logprobs))
@@ -183,7 +194,7 @@ class GenerationHandle:
         self._leg_tokens = []
         self._leg_len = 0
 
-    def _push_stream(self) -> List[tuple]:
+    def _push_stream(self) -> List[tuple]:  # holds: _client._lock
         """Emit everything stitched beyond what streams have seen.  Returns
         deferred (queue, chunk) pairs — the caller delivers them OUTSIDE the
         client lock."""
@@ -218,7 +229,7 @@ class GenerationHandle:
         for q, c in out:
             q.put(c)
 
-    def _resolve(self, *, aborted: bool, resumable: bool = False,
+    def _resolve(self, *, aborted: bool, resumable: bool = False,  # holds: _client._lock
                  timed_out: bool = False,
                  rejected_reason: Optional[str] = None) -> None:
         """Build the final stitched result.  Caller holds the client lock;
@@ -387,12 +398,12 @@ class RolloutClient:
         self.proxy = proxy
         self._version_fn = version_fn or (lambda: 0)
         self._resume_gate = resume_gate or (lambda: True)
-        self._lock = threading.RLock()
-        self._inflight: Dict[int, GenerationHandle] = {}
-        self._closed = False
-        self.resumes = 0                 # retained-page re-attach legs
-        self.reprefills = 0              # slot-engine concatenated-prefix legs
-        self.migrations = 0              # cross-replica re-admission legs
+        self._lock = new_rlock("RolloutClient._lock")
+        self._inflight: Dict[int, GenerationHandle] = {}  # guarded-by: _lock
+        self._closed = False             # guarded-by: _lock
+        self.resumes = 0                 # guarded-by: _lock — retained-page re-attach legs
+        self.reprefills = 0              # guarded-by: _lock — slot-engine concatenated-prefix legs
+        self.migrations = 0              # guarded-by: _lock — cross-replica re-admission legs
 
     @classmethod
     def ensure(cls, proxy_or_client, **kwargs) -> "RolloutClient":
@@ -439,7 +450,7 @@ class RolloutClient:
         v = self._version_fn() if version is None else version
         handles = [GenerationHandle(self, t, v) for t in tasks]
         with self._lock:
-            for t, h in zip(tasks, handles):
+            for t, h in zip(tasks, handles, strict=True):
                 self._inflight[t.task_id] = h
         if len(tasks) > 1:
             self.proxy.generate_group(tasks, v, self._dispatch)
@@ -462,7 +473,8 @@ class RolloutClient:
     def close(self) -> None:
         """Stop issuing continuations: subsequent aborts resolve their
         handles instead of re-admitting."""
-        self._closed = True
+        with self._lock:
+            self._closed = True
 
     @property
     def num_inflight(self) -> int:
@@ -528,7 +540,7 @@ class RolloutClient:
             finally:
                 h._event.set()
 
-    def _continue(self, h: GenerationHandle, res: GenerationResult,
+    def _continue(self, h: GenerationHandle, res: GenerationResult,  # holds: _lock
                   remaining: int) -> None:
         """Re-admit an interrupted request (caller holds the lock).  Paged
         engines re-attach the retained pages (zero prefix re-prefill);

@@ -59,11 +59,20 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
+from repro.analysis.sanitizer import new_condition, new_rlock
 from repro.core.faults import ReplicaDeadError
 from repro.core.llm_proxy import LLMProxy
 from repro.core.slo import SLOConfig, stamp_deadline
 from repro.core.types import (PRIORITY_NORMAL, GenerationResult, Rejected,
                               RolloutTask, expand_replicas)
+
+# Cross-class acquisition order the AST pass cannot see (concheck reads these
+# declarations into its cycle check):
+# lock-order: FleetSyncEvent._cond -> ProxyRouter._lock
+#   (FleetSyncEvent.is_set consults router._down() under its condition; the
+#   reverse never happens — the router notifies sync waiters OUTSIDE _lock)
+# lock-order: ProxyRouter._lock -> LLMProxy._load_lock
+#   (_place queries replica load()/can_accept() while holding the router lock)
 
 # group/session placement memory; old pins evict LRU (a group whose pin
 # evicted mid-flight merely loses co-location for later members, never
@@ -94,14 +103,39 @@ class MultiEvent:
 class FleetSyncEvent(MultiEvent):
     """Fleet-wide staged sync that tolerates replica death: set once every
     replica has acknowledged OR died — a crashed replica serves no traffic,
-    so waiting for its ack would only deadlock the trainer.  ``wait``
-    re-probes fleet health so death is detected even without a monitor
-    thread running."""
+    so waiting for its ack would only deadlock the trainer.
+
+    Push-based: each per-replica ``NotifyingEvent`` ack and every router
+    death/retire event notifies this waiter's condition, so ``wait`` parks
+    instead of polling.  For monitor-less fleets (nothing else would ever
+    call ``mark_dead``) each wakeup also re-probes fleet health — on a
+    bounded fallback cadence, not a busy spin."""
+
+    # how long wait() parks between fallback health probes when no
+    # notification arrives (monitor-less death detection latency bound)
+    _PROBE_SLICE_S = 0.05
 
     def __init__(self, pairs: List[tuple], router: "ProxyRouter"):
         super().__init__([e for _, e in pairs])
         self._pairs = list(pairs)
         self._router = router
+        self._cond = new_condition(name="FleetSyncEvent._cond")
+        for _i, e in pairs:
+            subscribe = getattr(e, "on_set", None)
+            if subscribe is not None:    # raw Events (test doubles) fall
+                subscribe(self._notify)  # back to the probe cadence
+        router._watch_sync(self)
+
+    def _notify(self) -> None:
+        """Ack/death push — called from proxy-loop and router threads,
+        never with ProxyRouter._lock held."""
+        with self._cond:
+            self._cond.notify_all()
+
+    def _acked(self) -> bool:
+        """All replicas acknowledged (no death waiver needed) — this
+        waiter needs no further notifications."""
+        return MultiEvent.is_set(self)
 
     def is_set(self) -> bool:
         down = self._router._down()
@@ -112,10 +146,18 @@ class FleetSyncEvent(MultiEvent):
         while True:
             if self.is_set():
                 return True
-            if deadline is not None and time.monotonic() >= deadline:
+            now = time.monotonic()
+            if deadline is not None and now >= deadline:
                 return False
+            # fallback probe OUTSIDE _cond: mark_dead notifies waiters
             self._router.probe_health()
-            time.sleep(0.002)
+            left = (self._PROBE_SLICE_S if deadline is None
+                    else min(self._PROBE_SLICE_S, deadline - time.monotonic()))
+            if left <= 0:
+                continue
+            with self._cond:
+                if not self.is_set():
+                    self._cond.wait(left)
 
 
 @dataclasses.dataclass
@@ -178,50 +220,75 @@ class ProxyRouter:
         # replicas behind a router carry an admission-stripped copy — see
         # slo.without_admission); preemption/watchdog run on the replicas.
         self.slo = slo
-        self._lock = threading.RLock()
-        self._home: Dict[int, _Home] = {}      # request_id -> routing record
+        self._lock = new_rlock("ProxyRouter._lock")
+        self._home: Dict[int, _Home] = {}      # guarded-by: _lock — request_id -> routing record
         # requests whose callback resolved BEFORE _register could record
         # them (submit→resolve race on the proxy loop thread): _register
         # must not re-insert a mapping nobody will ever remove.
-        self._early_resolved: set = set()
+        self._early_resolved: set = set()      # guarded-by: _lock
         # rids resolved by a synthesized failover abort: a late real
         # callback from the (not-quite-dead-yet) replica must be dropped,
         # not forwarded — the failover leg already owns the handle.
-        self._failed_over: set = set()
+        self._failed_over: set = set()         # guarded-by: _lock
         # retained rids whose parked pages died with their replica: the
         # continuation must re-prefill elsewhere, never resume in place.
-        self._lost_retained: set = set()
+        self._lost_retained: set = set()       # guarded-by: _lock
         self._group_home: "collections.OrderedDict[int, int]" = \
-            collections.OrderedDict()
+            collections.OrderedDict()          # guarded-by: _lock
         self._session_home: "collections.OrderedDict[int, int]" = \
-            collections.OrderedDict()
-        self._draining: set = set()
-        self._dead: set = set()                # crashed (failure counters)
-        self._retired: set = set()             # scaled down cleanly
-        self._scaledown_pending: set = set()   # draining toward retirement
-        self._started = False
-        self._last_weights = None              # warm-start for add_replica
+            collections.OrderedDict()          # guarded-by: _lock
+        self._draining: set = set()            # guarded-by: _lock
+        self._dead: set = set()                # guarded-by: _lock — crashed
+        self._retired: set = set()             # guarded-by: _lock — scaled down cleanly
+        self._scaledown_pending: set = set()   # guarded-by: _lock — draining toward retirement
+        self._started = False                  # guarded-by: _lock
+        self._last_weights = None              # guarded-by: _lock — warm-start for add_replica
+        # in-flight FleetSyncEvents to poke (OUTSIDE _lock) on death/retire
+        self._sync_waiters: List["FleetSyncEvent"] = []  # guarded-by: _lock
         self._monitor: Optional[threading.Thread] = None
         self._monitor_stop = threading.Event()
         # replica-stall detection: idx -> (steps_executed, wall time seen)
-        self._progress: Dict[int, tuple] = {}
-        self._rejected = 0                     # admissions bounced at the front door
+        self._progress: Dict[int, tuple] = {}  # guarded-by: _lock
+        self._rejected = 0                     # guarded-by: _lock — front-door bounces
+        # autoscale streaks are ticked by exactly one thread (the health
+        # monitor, or manual autoscale_tick callers) — thread-owned, unlocked.
         self._up_streak = 0
         self._down_streak = 0
         self._cooldown = 0
-        self.routed = 0
-        self.migrations = 0
-        self.failovers = 0                     # handles failed over off dead replicas
-        self.lost_tokens = 0                   # decode progress lost to crashes
-        self.replicas_failed = 0
-        self.replicas_added = 0
-        self.scale_ups = 0
-        self.scale_downs = 0
+        self.routed = 0                        # guarded-by: _lock
+        self.migrations = 0                    # guarded-by: _lock
+        self.failovers = 0                     # guarded-by: _lock — handles failed over off dead replicas
+        self.lost_tokens = 0                   # guarded-by: _lock — decode progress lost to crashes
+        self.replicas_failed = 0               # guarded-by: _lock
+        self.replicas_added = 0                # guarded-by: _lock
+        self.scale_ups = 0                     # guarded-by: _lock
+        self.scale_downs = 0                   # guarded-by: _lock
 
     # ---------------------------------------------------------- lifecycle
     def _down(self) -> set:
         with self._lock:
             return self._dead | self._retired
+
+    def _watch_sync(self, ev: "FleetSyncEvent") -> None:
+        """Track an in-flight fleet sync so death/retire events can wake
+        its waiters push-style.  Fully-acked syncs are pruned here (an
+        abandoned, never-fully-acked sync lingers until the next sync —
+        bounded by sync cadence, not by fleet lifetime)."""
+        with self._lock:
+            self._sync_waiters = [w for w in self._sync_waiters
+                                  if not w._acked()]
+            self._sync_waiters.append(ev)
+
+    def _notify_sync_waiters(self) -> None:
+        """Wake every in-flight fleet sync.  MUST be called outside
+        ``_lock``: FleetSyncEvent re-checks ``is_set()`` (→ ``_down()``)
+        under its own condition, so notifying under the router lock would
+        invert the declared FleetSyncEvent._cond -> ProxyRouter._lock
+        order."""
+        with self._lock:
+            waiters = list(self._sync_waiters)
+        for w in waiters:
+            w._notify()
 
     def replica_state(self, idx: int) -> str:
         with self._lock:
@@ -279,14 +346,18 @@ class ProxyRouter:
                 steps = p.steps_executed
             except Exception:
                 continue        # liveness probe above owns hard failures
-            if active <= 0:
-                self._progress.pop(i, None)
-                continue
-            prev = self._progress.get(i)
-            if prev is None or prev[0] != steps:
-                self._progress[i] = (steps, now)
-            elif now - prev[1] >= grace:
-                self._progress.pop(i, None)
+            with self._lock:
+                if active <= 0:
+                    self._progress.pop(i, None)
+                    continue
+                prev = self._progress.get(i)
+                if prev is None or prev[0] != steps:
+                    self._progress[i] = (steps, now)
+                    continue
+                stalled = now - prev[1] >= grace
+                if stalled:
+                    self._progress.pop(i, None)
+            if stalled:         # mark_dead fires callbacks: outside _lock
                 self.mark_dead(i)
                 newly.append(i)
         return newly
@@ -328,13 +399,17 @@ class ProxyRouter:
                 counts = dc()
             except Exception:
                 counts = {}
-        for rid, rec in fail:
-            self.lost_tokens += int(counts.get(rid, 0))
-            self.failovers += 1
+        with self._lock:
+            self.failovers += len(fail)
+            for rid, _rec in fail:
+                self.lost_tokens += int(counts.get(rid, 0))
+        for rid, rec in fail:   # consumer callbacks run OUTSIDE _lock
             rec.callback(GenerationResult(
                 request_id=rid, task=None, tokens=None, logprobs=None,
                 version_started=rec.version, aborted=True, partial=True,
                 resumable=False))
+        # a dead replica's pending ack is waived: wake in-flight syncs
+        self._notify_sync_waiters()
 
     def add_replica(self, proxy: Optional[LLMProxy] = None, *,
                     warm: bool = True) -> int:
@@ -347,15 +422,18 @@ class ProxyRouter:
                 raise RuntimeError("add_replica() needs a proxy or a "
                                    "replica_factory")
             proxy = self.replica_factory()
-        if warm and self._last_weights is not None:
+        with self._lock:
+            weights = self._last_weights
+        if warm and weights is not None:
             # pre-start staging applies inline; a started proxy stages the
             # swap and we wait for the ack so no request sees cold weights.
-            proxy.update_weights_async(self._last_weights).wait(timeout=30)
+            proxy.update_weights_async(weights).wait(timeout=30)
         with self._lock:
             idx = len(self.proxies)
             self.proxies.append(proxy)
             self.replicas_added += 1
-        if self._started:
+            started = self._started
+        if started:
             proxy.start()
         return idx
 
@@ -370,6 +448,7 @@ class ProxyRouter:
             self._scaledown_pending.discard(idx)
             self.scale_downs += 1
         self.proxies[idx].stop()
+        self._notify_sync_waiters()     # retired == down for sync waivers
 
     # --------------------------------------------------------- autoscaling
     def autoscale_tick(self) -> Optional[str]:
@@ -382,6 +461,7 @@ class ProxyRouter:
             return None
         with self._lock:
             pending_retire = list(self._scaledown_pending)
+            draining = set(self._draining)
         for i in pending_retire:
             p = self.proxies[i]
             if p.num_active == 0 and p.num_pending == 0 and p.load() == 0:
@@ -400,11 +480,12 @@ class ProxyRouter:
         if self._cooldown > 0:
             self._cooldown -= 1
             return None
-        placeable = [i for i in live if i not in self._draining]
+        placeable = [i for i in live if i not in draining]
         if (self._up_streak >= pol.up_patience and n < pol.max_replicas
                 and self.replica_factory is not None):
             self.add_replica()
-            self.scale_ups += 1
+            with self._lock:
+                self.scale_ups += 1
             self._up_streak = 0
             self._cooldown = pol.cooldown
             return "up"
@@ -438,13 +519,14 @@ class ProxyRouter:
 
     # ---------------------------------------------------------- placement
     def _alive(self) -> List[int]:
-        down = self._down()
-        idxs = [i for i in range(len(self.proxies))
-                if i not in down and i not in self._draining]
-        if idxs:
-            return idxs
-        # every live replica draining: they can still run work
-        idxs = [i for i in range(len(self.proxies)) if i not in down]
+        with self._lock:                # RLock: reentrant from _place
+            down = self._dead | self._retired
+            idxs = [i for i in range(len(self.proxies))
+                    if i not in down and i not in self._draining]
+            if idxs:
+                return idxs
+            # every live replica draining: they can still run work
+            idxs = [i for i in range(len(self.proxies)) if i not in down]
         if not idxs:
             raise RuntimeError("no live replicas in the fleet")
         return idxs
@@ -524,8 +606,10 @@ class ProxyRouter:
                         stranded.append((rid, rec))
                     else:
                         self._home[rid] = rec
-        for rid, rec in stranded:
-            self.failovers += 1
+        if stranded:
+            with self._lock:
+                self.failovers += len(stranded)
+        for rid, rec in stranded:   # callbacks OUTSIDE _lock
             rec.callback(GenerationResult(
                 request_id=rid, task=None, tokens=None, logprobs=None,
                 version_started=rec.version, aborted=True, partial=True,
@@ -830,7 +914,8 @@ class ProxyRouter:
             self.proxies[i].resume()
 
     def update_weights(self, params) -> None:
-        self._last_weights = params
+        with self._lock:
+            self._last_weights = params
         for i in self._live():
             try:
                 self.proxies[i].update_weights(params)
@@ -841,7 +926,8 @@ class ProxyRouter:
         """Stage the swap on EVERY live replica; the aggregate event is set
         once all of them acknowledge or die (fleet-wide overlapped sync
         that a mid-sync crash cannot deadlock)."""
-        self._last_weights = params
+        with self._lock:
+            self._last_weights = params
         pairs = []
         for i in self._live():
             try:
@@ -864,7 +950,8 @@ class ProxyRouter:
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "ProxyRouter":
-        self._started = True
+        with self._lock:
+            self._started = True
         for i in self._live():
             try:
                 self.proxies[i].start()
@@ -879,7 +966,8 @@ class ProxyRouter:
             self._monitor = None
         for p in self.proxies:
             p.stop()                    # dead/retired stops are no-ops
-        self._started = False
+        with self._lock:
+            self._started = False
 
     # ----------------------------------------------------------- auditing
     def fleet_audit(self, *, require_empty: bool = True) -> None:

@@ -14,9 +14,9 @@ until the freshest batch is complete and producers cannot run ahead).
 """
 from __future__ import annotations
 
-import threading
-from typing import Callable, List, Optional
+from typing import List, Optional
 
+from repro.analysis.sanitizer import new_condition, new_lock
 from repro.core.types import Sample
 
 
@@ -30,18 +30,18 @@ class SampleBuffer:
         self.batch_size = batch_size
         self.alpha = alpha
         self.strict = strict
-        self._samples: List[Sample] = []
-        self._inflight = 0
-        self._initiated = 0
-        self._version = 0
-        self._lock = threading.Lock()
-        self._not_empty = threading.Condition(self._lock)
-        self._can_produce = threading.Condition(self._lock)
-        self._closed = False
-        self.total_produced = 0
-        self.total_consumed = 0
-        self.total_reclaimed = 0
-        self.total_evicted = 0
+        self._lock = new_lock("SampleBuffer._lock")
+        self._not_empty = new_condition(self._lock, name="SampleBuffer._not_empty")
+        self._can_produce = new_condition(self._lock, name="SampleBuffer._can_produce")
+        self._samples: List[Sample] = []  # guarded-by: _lock
+        self._inflight = 0                # guarded-by: _lock
+        self._initiated = 0               # guarded-by: _lock
+        self._version = 0                 # guarded-by: _lock
+        self._closed = False              # guarded-by: _lock
+        self.total_produced = 0           # guarded-by: _lock
+        self.total_consumed = 0           # guarded-by: _lock
+        self.total_reclaimed = 0          # guarded-by: _lock
+        self.total_evicted = 0            # guarded-by: _lock
 
     # ------------------------------------------------------------------ info
     @property
@@ -59,7 +59,7 @@ class SampleBuffer:
             return len(self._samples) + self._inflight
 
     # ------------------------------------------------------------ producers
-    def _admissible(self) -> bool:
+    def _admissible(self) -> bool:  # holds: _lock
         """Freshness gate.  With FIFO-by-initiation consumption, the i-th
         initiated sample (0-based) is consumed while the policy is at version
         floor(i / B); admitting it requires floor(i/B) - v_now <= alpha, i.e.
@@ -178,7 +178,8 @@ class SampleBuffer:
 
     @property
     def closed(self) -> bool:
-        return self._closed
+        with self._lock:
+            return self._closed
 
     def max_staleness(self) -> int:
         with self._lock:

@@ -20,7 +20,7 @@ from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.llm_proxy import LLMProxy
+from repro.analysis.sanitizer import new_condition
 from repro.core.rollout_client import (GenerationHandle, GroupHandle,
                                        RolloutClient)
 from repro.core.sample_buffer import SampleBuffer
@@ -81,10 +81,12 @@ class _GroupCollector:
         self.group_size = group_size
         self.reward_fn = reward_fn
         self.filter_fn = filter_fn
-        self._partial: Dict[int, List[Sample]] = collections.defaultdict(list)
-        self.done_groups: "collections.deque[List[Sample]]" = collections.deque()
-        self.filtered_groups = 0
-        self._cond = threading.Condition()
+        self._cond = new_condition(name="_GroupCollector._cond")
+        self._partial: Dict[int, List[Sample]] = \
+            collections.defaultdict(list)  # guarded-by: _cond
+        self.done_groups: "collections.deque[List[Sample]]" = \
+            collections.deque()  # guarded-by: _cond
+        self.filtered_groups = 0  # guarded-by: _cond
 
     def add(self, result: GenerationResult) -> None:
         """Handle done-callback: samples carry result.version_started."""
@@ -112,6 +114,9 @@ class _GroupCollector:
         with self._cond:
             if self.done_groups or self.filtered_groups:
                 return
+            # concheck: disable=cond-wait-loop — single timed park by design:
+            # the caller (collect_rollout) re-evaluates its own predicate
+            # each iteration; a spurious wakeup just re-enters the loop.
             self._cond.wait(timeout)
 
     def take_filtered(self) -> int:

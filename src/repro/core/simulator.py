@@ -350,7 +350,7 @@ def simulate_agentic_step(rng: np.random.Generator, cfg: AgenticConfig) -> float
         # next turn may start.  (This is the paper's baseline; the speedup of
         # env-level async therefore grows with latency VARIANCE, Fig 9.)
         alive = []
-        for i in range(total):
+        for _i in range(total):
             hung = bool(cfg.p_fail_stop and rng.random() < cfg.p_fail_stop)
             alive.append(not hung)
         n_alive = sum(alive)

@@ -3,11 +3,48 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from typing import Any, Callable, List, Optional
 
 import numpy as np
 
 _uid = itertools.count()
+
+
+class NotifyingEvent(threading.Event):
+    """A ``threading.Event`` that invokes subscriber callbacks on ``set()``.
+
+    Lets composite waiters (e.g. the router's fleet-wide ``FleetSyncEvent``)
+    park on their own condition and be woken push-style the moment any
+    constituent event fires, instead of polling ``is_set()``.
+
+    Callbacks run on the *setting* thread, outside any subscriber lock the
+    callee wants to take — keep them tiny (a ``notify_all``).  A callback
+    registered after ``set()`` fires immediately on the registering thread.
+    Duplicate ``set()`` calls fire callbacks once."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._cbs_lock = threading.Lock()
+        self._cbs: List[Callable[[], None]] = []  # guarded-by: _cbs_lock
+        self._fired = False                       # guarded-by: _cbs_lock
+
+    def on_set(self, cb: Callable[[], None]) -> None:
+        with self._cbs_lock:
+            if not self._fired:
+                self._cbs.append(cb)
+                return
+        cb()
+
+    def set(self) -> None:  # noqa: A003 - matching threading.Event API
+        super().set()
+        with self._cbs_lock:
+            if self._fired:
+                return
+            self._fired = True
+            cbs, self._cbs = self._cbs, []
+        for cb in cbs:
+            cb()
 
 # Priority classes for SLO-aware scheduling.  Higher value = more important.
 # Any int works as a priority; these three are the conventional tenant tiers.

@@ -6,7 +6,7 @@ EnvManager never sees text, matching the LLM-centric rollout loop.
 from __future__ import annotations
 
 import abc
-from typing import Any, Tuple
+from typing import Tuple
 
 import numpy as np
 

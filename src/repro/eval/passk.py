@@ -7,7 +7,7 @@ mode, and the unbiased Chen et al. (2021) Pass@k estimator.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, Optional
 
 import numpy as np
 

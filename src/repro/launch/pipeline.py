@@ -339,8 +339,12 @@ class AgenticPipeline:
     def shutdown(self):
         for inj in self.chaos:
             inj.stop()              # sets halt AND joins the chaos thread
-        self.pool.stop(join=False)
-        self.buffer.close()
+        self.pool.stop(join=False)  # stop flag + abort every in-flight turn
+        self.buffer.close()         # wake managers parked in begin_generation
+        # join managers BEFORE stopping the proxies: an aborted turn still
+        # needs a live proxy to resolve its handle, and env-manager threads
+        # must not outlive the pipeline (leak-checked by the test suite).
+        self.pool.stop(join=True)
         if self.router is not None:
             self.router.stop()      # joins the health monitor too
         else:

@@ -26,7 +26,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Optional
 
-import jax.numpy as jnp
 
 from repro.models import encdec, paged, transformer
 from repro.models.config import ModelConfig

@@ -8,7 +8,6 @@ encode time and carried in the cache for decode.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

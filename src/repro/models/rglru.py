@@ -15,7 +15,6 @@ import jax.numpy as jnp
 
 from repro.models import module
 from repro.models.config import ModelConfig
-from repro.models.sharding import constrain_activation
 
 _C = 8.0
 

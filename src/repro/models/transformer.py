@@ -14,7 +14,7 @@ Entry points:
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -262,7 +262,8 @@ def lm_apply(params, cfg: ModelConfig, tokens, *, positions=None,
                    for i, kind in enumerate(pattern) if kind != "attn"})
         gb = jax.checkpoint(group_body, prevent_cse=False) if remat else group_body
         x, _ = jax.lax.scan(gb, x, xs)
-        for tp, st, kind in zip(params["tail"], states["tail"], tail):
+        for tp, st, kind in zip(params["tail"], states["tail"], tail,
+                                strict=True):
             if kind == "attn":
                 x, _ = _attn_block_apply(tp, cfg, x, positions, moe_mode=moe_mode)
             else:
@@ -348,7 +349,8 @@ def lm_prefill(params, cfg: ModelConfig, tokens, cache, *, positions=None,
         x, new_stacked = jax.lax.scan(group_body, x, xs)
         new_cache = {f"{i}_{kind}": new_stacked[f"cache_{i}"] for i, kind in enumerate(pattern)}
         new_tail = []
-        for tp, st, kind in zip(params["tail"], cache["tail"], tail):
+        for tp, st, kind in zip(params["tail"], cache["tail"], tail,
+                                strict=True):
             if kind == "attn":
                 x, st2 = _attn_block_prefill(tp, cfg, x, positions, st, moe_mode=moe_mode)
             else:
@@ -409,7 +411,8 @@ def lm_decode_step(params, cfg: ModelConfig, token, pos, cache, *,
         x, new_stacked = jax.lax.scan(group_body, x, xs)
         new_cache = {f"{i}_{kind}": new_stacked[f"cache_{i}"] for i, kind in enumerate(pattern)}
         new_tail = []
-        for tp, st, kind in zip(params["tail"], cache["tail"], tail):
+        for tp, st, kind in zip(params["tail"], cache["tail"], tail,
+                                strict=True):
             if kind == "attn":
                 x, st2 = _attn_block_decode(tp, cfg, x, pos, st, moe_mode=moe_mode)
             else:

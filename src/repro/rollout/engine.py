@@ -13,8 +13,7 @@ Implements `repro.core.llm_proxy.InferenceEngine`.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +48,8 @@ def _insert_slot(cache, slot_cache, slot: int):
         # (Padding the batch axis makes XLA clamp the start index to 0 and
         # silently overwrite every slot — cross-request corruption.)
         pad_width = [(0, max(0, b - s_)) if i != ax else (0, 0)
-                     for i, (s_, b) in enumerate(zip(small.shape, big.shape))]
+                     for i, (s_, b) in enumerate(zip(small.shape, big.shape,
+                                                     strict=True))]
         if any(p != (0, 0) for p in pad_width):
             fill = -1 if small.dtype == jnp.int32 else 0
             small = jnp.pad(small, pad_width, constant_values=fill)

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from repro.algos import LossConfig, gae, rl_loss
 from repro.models.api import ModelAPI
 from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
-from repro.train.trainer import _policy_logprobs, _unembed_matrix, chunked_token_logprobs
+from repro.train.trainer import _unembed_matrix, chunked_token_logprobs
 
 
 def init_value_head(key, d_model: int):

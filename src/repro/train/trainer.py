@@ -9,7 +9,7 @@ and serves fresh weights to the LLMProxy on weight sync.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp

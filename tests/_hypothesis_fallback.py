@@ -98,7 +98,8 @@ def given(*arg_strats, **kw_strats):
             rng = random.Random(fn.__name__)
             for _ in range(n):
                 drawn_kw = {name: s.example(rng)
-                            for name, s in zip(pos_names, arg_strats)}
+                            for name, s in zip(pos_names, arg_strats,
+                                               strict=True)}
                 drawn_kw.update((k, s.example(rng))
                                 for k, s in kw_strats.items())
                 fn(*args, **kwargs, **drawn_kw)

@@ -13,11 +13,77 @@ except ImportError:  # bare env: degrade @given to a deterministic sweep
     _hypothesis_fallback.install(sys.modules)
 
 import dataclasses  # noqa: E402
+import threading  # noqa: E402
+import time  # noqa: E402
 
 import jax  # noqa: E402
 import pytest  # noqa: E402
 
 from repro.configs import REGISTRY  # noqa: E402
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--sanitize", action="store_true", default=False,
+        help="run under the runtime lock sanitizer (tracked locks, dynamic "
+             "lock-order graph, per-test inversion check); equivalent to "
+             "REPRO_SANITIZE=1")
+
+
+def pytest_configure(config):
+    sanitize = (config.getoption("--sanitize")
+                or os.environ.get("REPRO_SANITIZE", "") not in ("", "0"))
+    if sanitize:
+        from repro.analysis import sanitizer
+        sanitizer.enable(True)
+    config._repro_sanitize = sanitize
+
+
+@pytest.fixture(autouse=True)
+def _zero_lock_inversions(request):
+    """Sanitizer mode: every test must leave the dynamic lock-order graph
+    free of NEW inversions.  The graph itself accumulates across the whole
+    session, so an order conflict between two different tests is caught
+    too — whichever test closes the cycle fails."""
+    if not request.config._repro_sanitize:
+        yield
+        return
+    from repro.analysis import sanitizer
+    before = len(sanitizer.report()["inversions"])
+    yield
+    new = sanitizer.report()["inversions"][before:]
+    assert not new, (
+        f"lock-order inversions during {request.node.nodeid}: {new}")
+
+
+# Worker threads a test starts must be stopped/joined before it returns —
+# a leaked thread keeps mutating shared state under LATER tests, turning
+# their failures into unreproducible noise.  Grace window covers stop()
+# paths that signal first and join asynchronously.
+_THREAD_SETTLE_S = 2.0
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_threads(request):
+    if request.node.get_closest_marker("thread_leaks_ok"):
+        yield
+        return
+    before = {t.ident for t in threading.enumerate()}
+    yield
+
+    def leaked():
+        return [t for t in threading.enumerate()
+                if t.is_alive() and t.ident not in before
+                and t is not threading.current_thread()]
+    deadline = time.monotonic() + _THREAD_SETTLE_S
+    remain = leaked()
+    while remain and time.monotonic() < deadline:
+        time.sleep(0.02)
+        remain = leaked()
+    assert not remain, (
+        f"test leaked alive threads: {sorted(t.name for t in remain)} — "
+        "stop/join them, or mark the test @pytest.mark.thread_leaks_ok "
+        "(deliberately stalled workers only)")
 
 
 def tiny(arch: str, **overrides):

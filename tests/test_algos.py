@@ -57,8 +57,8 @@ def test_tis_cispo_equal_reinforce_gradient_on_policy():
         return ((x * mask).sum(-1) / jnp.maximum(mask.sum(-1), 1)).mean()
 
     for variant in ("tis", "cispo"):
-        g = jax.grad(lambda l: policy_loss(
-            l, old, prox, adv, mask, pos, LossConfig(pg_variant=variant))[0])(lp)
+        g = jax.grad(lambda l, v=variant: policy_loss(
+            l, old, prox, adv, mask, pos, LossConfig(pg_variant=v))[0])(lp)
         g_reinforce = jax.grad(lambda l: -seq_mean(adv * l))(lp)
         np.testing.assert_allclose(np.asarray(g), np.asarray(g_reinforce),
                                    rtol=1e-5, atol=1e-6)

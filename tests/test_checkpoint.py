@@ -20,7 +20,7 @@ def test_roundtrip_train_state(tmp_path, rng_key):
         lambda a: jnp.zeros(a.shape, a.dtype), state)
     restored = load_tree(path, like)
     for a, b in zip(jax.tree_util.tree_leaves(state),
-                    jax.tree_util.tree_leaves(restored)):
+                    jax.tree_util.tree_leaves(restored), strict=True):
         assert a.dtype == b.dtype
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))

@@ -30,7 +30,7 @@ from repro.core.rollout_client import RolloutClient
 from repro.core.router import AutoscalePolicy, ProxyRouter
 from repro.core.sample_buffer import SampleBuffer
 from repro.core.scheduler import RolloutProducer
-from repro.core.slo import SLOConfig, without_admission
+from repro.core.slo import SLOConfig
 from repro.core.types import PRIORITY_HIGH, PRIORITY_LOW
 from repro.models import get_api
 from repro.rollout.paged_engine import PagedDecodeEngine

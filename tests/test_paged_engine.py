@@ -310,7 +310,7 @@ def test_resume_bypasses_page_starved_head_of_queue(setup):
     assert sorted(eng.req_to_slot) == [10, 11]
     finished = set()
     for _ in range(200):
-        for rid, toks, lps in eng.step():
+        for rid, _toks, _lps in eng.step():
             finished.add(rid)
         proxy._admit_pending()
         if finished >= {10, 11, 99}:

@@ -486,7 +486,8 @@ def test_producer_fresh_group_uid_per_epoch():
     assert all(len(set(g)) == 1 for g in gids), "one uid per group"
     assert len({g[0] for g in gids}) == 3, \
         "repeated prompt must not reuse its earlier group uid"
-    assert all(g[0] != t.prompt_id for g, grp in zip(gids, proxy.groups)
+    assert all(g[0] != t.prompt_id for g, grp in zip(gids, proxy.groups,
+                                                     strict=True)
                for t in grp), "group uid must not be the prompt id"
 
 
@@ -753,7 +754,7 @@ def test_cache_churn_audit_sweep(setup):
         if eng.can_admit(plen, 6):
             eng.add_request(rid, p, 6)
 
-    for step in range(200):
+    for _step in range(200):
         op = rng.random()
         if op < 0.25 and eng.num_free_slots > 0:
             admit()

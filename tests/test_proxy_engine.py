@@ -146,7 +146,7 @@ def test_engine_greedy_matches_manual_decode(engine_setup):
     eng.add_request(0, prompt, 6)
     results = {}
     while not results:
-        for rid, toks, lps in eng.step():
+        for rid, toks, _lps in eng.step():
             results[rid] = toks
     got = results[0]
 
@@ -214,7 +214,7 @@ def test_engine_fuzz_against_reference(engine_setup):
                            eos_id=99, temperature=0.0, prefill_bucket=8)
         eng.add_request(0, prompt, budget)
         while True:
-            for rid, toks, _ in eng.step():
+            for _rid, toks, _ in eng.step():
                 return list(toks)
 
     rng = np.random.default_rng(0)

@@ -327,7 +327,7 @@ def test_non_replicate_end_to_end_parity_paged():
         assert all(len(g) == 3 for g in gids.values()), \
             "every group must assemble exactly G samples"
     key = lambda s: (s.prompt_id, s.replica_idx)
-    for sa, sb in zip(sorted(a, key=key), sorted(b, key=key)):
+    for sa, sb in zip(sorted(a, key=key), sorted(b, key=key), strict=True):
         assert list(sa.response_tokens) == list(sb.response_tokens)
 
 
@@ -360,7 +360,7 @@ def test_paged_resume_across_weight_sync_zero_reprefill(paged_setup):
     ref.add_request(0, prompt, budget)
     base = None
     while base is None:
-        for rid, toks, _ in ref.step():
+        for _rid, toks, _ in ref.step():
             base = list(toks)
 
     eng = _paged(api, params)

@@ -449,7 +449,7 @@ def test_cross_replica_resume_after_weight_sync(paged_setup):
     ref.add_request(0, prompt, budget)
     base = None
     while base is None:
-        for rid, toks, _ in ref.step():
+        for _rid, toks, _ in ref.step():
             base = list(toks)
 
     engines, proxies, router = _paged_fleet(api, params, 2, num_slots=2)

@@ -12,7 +12,6 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from conftest import tiny
 from repro.models import get_api, sharding as shd
-from repro.train.trainer import make_train_state
 
 
 def fake_mesh(data=4, model=4):
@@ -109,7 +108,7 @@ def test_build_combo_lowers_on_unit_mesh(arch, shape, monkeypatch):
     shape overrides (full-size validation is the dryrun launcher's job)."""
     import dataclasses
 
-    from repro.configs import REGISTRY, SHAPES
+    from repro.configs import SHAPES
     from repro.launch import dryrun
 
     cfg = tiny(arch)

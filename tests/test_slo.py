@@ -69,7 +69,7 @@ def test_priority_queue_ordering():
     for pr, tag in ((PRIORITY_LOW, "lowA"), (PRIORITY_LOW, "lowB"),
                     (PRIORITY_HIGH, "high"), (PRIORITY_NORMAL, "norm")):
         t = _ptask(2, priority=pr)
-        proxy.generate(t, 0, (lambda tag: lambda r: done.append(tag))(tag))
+        proxy.generate(t, 0, (lambda t_: lambda r: done.append(t_))(tag))
     _drain(proxy)
     assert done == ["high", "norm", "lowA", "lowB"]
 
@@ -80,7 +80,7 @@ def test_uniform_priority_is_plain_fifo():
     done = []
     for tag in "abc":
         proxy.generate(_ptask(2), 0,
-                       (lambda tag: lambda r: done.append(tag))(tag))
+                       (lambda t_: lambda r: done.append(t_))(tag))
     _drain(proxy)
     assert done == ["a", "b", "c"]
 

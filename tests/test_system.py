@@ -1,6 +1,5 @@
 """End-to-end system behaviour: the full async architecture wired together
 (engine + proxy + buffer + producer + controller + trainer)."""
-import dataclasses
 import time
 
 import numpy as np
@@ -103,8 +102,8 @@ def test_weight_sync_propagates_to_engine():
     # params (same buffers), not the initial ones
     w1 = jax_leaves(pipe.engine.params)
     trainer_now = jax_leaves(pipe.trainer.get_weights())
-    assert all(a is b for a, b in zip(w1, trainer_now))
-    assert not all(a is b for a, b in zip(w0, w1))
+    assert all(a is b for a, b in zip(w1, trainer_now, strict=True))
+    assert not all(a is b for a, b in zip(w0, w1, strict=True))
 
 
 def jax_leaves(tree):
@@ -205,4 +204,5 @@ def test_multi_proxy_fleet():
     assert sum(p.requests_completed for p in proxies) >= 3 * 8
     w = jax_leaves(trainer.get_weights())
     for p in proxies:
-        assert all(a is b for a, b in zip(jax_leaves(p.engine.params), w))
+        assert all(a is b for a, b in zip(jax_leaves(p.engine.params), w,
+                                      strict=True))

@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""concheck — lock-discipline static analysis for the async fleet.
+
+Usage:
+    python tools/concheck.py [PATH ...] [--graph-out FILE] [--verbose]
+
+Checks every ``.py`` file under the given paths (default: ``src/repro``)
+with the rules in ``repro.analysis.static_check`` and exits non-zero if any
+violation is found.  ``--graph-out`` writes the extracted static
+lock-acquisition graph as JSON (uploaded as a CI artifact).
+
+Waive a finding inline with a reasoned ``# concheck: disable=<rule>`` on the
+offending line.  Rules: guarded-by, lock-order, blocking-under-lock,
+cond-wait-loop, thread-join, busy-wait.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.analysis.static_check import RULES, check_paths  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "paths", nargs="*",
+        default=[os.path.join(os.path.dirname(_HERE), "src", "repro")],
+        help="files/directories to check (default: src/repro)",
+    )
+    ap.add_argument("--graph-out", metavar="FILE", default=None,
+                    help="write the static lock-order graph JSON here")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also print the lock graph and per-rule counts")
+    args = ap.parse_args(argv)
+
+    result = check_paths(args.paths)
+
+    if args.graph_out:
+        with open(args.graph_out, "w", encoding="utf-8") as fh:
+            json.dump(result.graph, fh, indent=2, sort_keys=True)
+        print(f"concheck: lock graph ({len(result.graph['nodes'])} locks, "
+              f"{len(result.graph['edges'])} edges) -> {args.graph_out}")
+
+    if args.verbose:
+        print("lock-order edges:")
+        for e in result.graph["edges"]:
+            print(f"  {e['from']} -> {e['to']}   ({e['at']})")
+        counts = {r: 0 for r in RULES}
+        for v in result.violations:
+            counts[v.rule] = counts.get(v.rule, 0) + 1
+        print("rule hits:", {k: v for k, v in counts.items() if v})
+
+    for v in result.violations:
+        print(str(v))
+
+    if result.violations:
+        print(f"concheck: {len(result.violations)} violation(s)")
+        return 1
+    print("concheck: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
