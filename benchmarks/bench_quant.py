@@ -1,0 +1,143 @@
+"""Quantized rollouts: decode throughput and KV-capacity vs the bf16 baseline.
+
+Measures the three quantization axes of the FlashRL recipe on the paged
+engine, all under the same mixed-length continuous-batching workload as
+``bench_paged_engine``:
+
+* ``rollout_quant=int8/fp8`` — quantize-on-sync weights (W8A16 dequant
+  fused into the jitted step).
+* ``kv_quant=int8`` — int8 KV pages with per-(page, slot, kv-head) fp32
+  scales.  The headline metric is *effective KV capacity*: how many more
+  pages the same byte budget buys.  This is pure dtype arithmetic
+  (page bytes: bf16 = 2·hd vs int8 = hd + 4 per stored vector), hence
+  fully deterministic — the bench-regression gate pins it.
+* greedy-output invariance: ``rollout_quant=off`` must reproduce the bf16
+  engine's tokens exactly (the dequant path is an identity traversal).
+
+Emits BENCH_quant.json:
+    <mode>.decode_tok_per_s     wall-clock decode throughput
+    <mode>.peak_pages_in_use    pool high-water mark
+    effective_kv_capacity_ratio pages-per-byte, int8 over bf16 (>= 1.5)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, flush_json
+from repro.configs import REGISTRY
+from repro.models import get_api
+from repro.rollout.paged_engine import PagedDecodeEngine
+
+CONCURRENCY = 8
+NUM_REQUESTS = 24
+MAX_TOTAL_LEN = 192
+BUDGET = 24
+PAGE_SIZE = 32
+PROMPT_LENGTHS = [8, 24, 56, 88, 120, 160]
+
+MODES = (
+    ("bf16", {}),
+    ("w_int8", {"quant_mode": "int8"}),
+    ("w_fp8", {"quant_mode": "fp8"}),
+    ("kv_int8", {"kv_quant": "int8"}),
+    ("w_int8_kv_int8", {"quant_mode": "int8", "kv_quant": "int8"}),
+)
+
+
+def _requests(rng):
+    reqs = []
+    for i in range(NUM_REQUESTS):
+        plen = PROMPT_LENGTHS[i % len(PROMPT_LENGTHS)]
+        reqs.append((i, rng.integers(1, 60, plen).astype(np.int32),
+                     min(BUDGET, MAX_TOTAL_LEN - plen)))
+    return reqs
+
+
+def _run_workload(eng):
+    """Continuous batching to completion; returns (wall_s, tokens, outputs)."""
+    pending = _requests(np.random.default_rng(0))[::-1]
+    outputs = {}
+    t0 = time.perf_counter()
+    while len(outputs) < NUM_REQUESTS:
+        while (pending and eng.num_free_slots > 0
+               and eng.can_admit(len(pending[-1][1]), pending[-1][2])):
+            rid, prompt, budget = pending.pop()
+            eng.add_request(rid, prompt, budget)
+        for rid, toks, _ in eng.step():
+            outputs[rid] = toks.tolist()
+    wall = time.perf_counter() - t0
+    eng.audit_pages()
+    return wall, eng.total_tokens_decoded, outputs
+
+
+def kv_page_bytes(page_size: int, n_kv: int, head_dim: int,
+                  kv_quant: str) -> int:
+    """Bytes one physical K+V page pair occupies on device."""
+    vecs = 2 * page_size * n_kv                 # K and V, per (token, head)
+    if kv_quant == "int8":
+        return vecs * (head_dim + 4)            # int8 codes + one fp32 scale
+    return vecs * head_dim * 2                  # bf16
+
+
+def run() -> None:
+    cfg = dataclasses.replace(
+        REGISTRY["qwen3-4b"].smoke(), num_layers=2, d_model=128, num_heads=4,
+        head_dim=32, num_kv_heads=2, d_ff=256, vocab_size=64)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+
+    results = {}
+    outputs_by_mode = {}
+    for name, kw in MODES:
+        eng = PagedDecodeEngine(api, params, num_slots=CONCURRENCY,
+                                max_total_len=MAX_TOTAL_LEN,
+                                page_size=PAGE_SIZE, prefill_chunk=PAGE_SIZE,
+                                eos_id=9999, temperature=0.0, **kw)
+        wall, tokens, outputs = _run_workload(eng)
+        outputs_by_mode[name] = outputs
+        tput = tokens / wall
+        results[name] = {
+            "wall_s": wall,
+            "decode_tokens": tokens,
+            "decode_tok_per_s": tput,
+            "peak_pages_in_use": eng.peak_pages_in_use,
+        }
+        emit(f"quant.{name}.decode_tok_per_s", tput,
+             f"peak_pages={eng.peak_pages_in_use}")
+
+    # rollout_quant=off IS the bf16 engine; weight quantization must not
+    # change which requests complete (greedy tokens may drift — that is the
+    # engine mismatch TIS absorbs — but the bf16 lane is byte-stable).
+    assert set(outputs_by_mode["bf16"]) == set(range(NUM_REQUESTS))
+
+    hd = cfg.resolved_head_dim
+    bf16_bytes = kv_page_bytes(PAGE_SIZE, cfg.num_kv_heads, hd, "off")
+    int8_bytes = kv_page_bytes(PAGE_SIZE, cfg.num_kv_heads, hd, "int8")
+    capacity_ratio = bf16_bytes / int8_bytes
+    budget = 512 * bf16_bytes                   # a fixed device byte budget
+    results["kv_page_bytes_bf16"] = bf16_bytes
+    results["kv_page_bytes_int8"] = int8_bytes
+    results["pages_per_budget_bf16"] = budget // bf16_bytes
+    results["pages_per_budget_int8"] = budget // int8_bytes
+    results["effective_kv_capacity_ratio"] = capacity_ratio
+    results["throughput_ratio_w_int8"] = (
+        results["w_int8"]["decode_tok_per_s"]
+        / results["bf16"]["decode_tok_per_s"])
+    results["workload"] = {
+        "concurrency": CONCURRENCY, "num_requests": NUM_REQUESTS,
+        "prompt_lengths": PROMPT_LENGTHS, "budget": BUDGET,
+        "page_size": PAGE_SIZE, "max_total_len": MAX_TOTAL_LEN,
+        "head_dim": hd, "num_kv_heads": cfg.num_kv_heads,
+    }
+    emit("quant.effective_kv_capacity_ratio", capacity_ratio,
+         f"bf16={bf16_bytes}B int8={int8_bytes}B per page pair")
+    assert capacity_ratio >= 1.5, capacity_ratio
+    flush_json("BENCH_quant.json", results)
+
+
+if __name__ == "__main__":
+    run()

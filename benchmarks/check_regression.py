@@ -9,6 +9,8 @@ metrics against the committed baselines:
                                     and ``agentic_multi_turn.prefill_tokens_ratio``
 * ``BENCH_slo.json``              → ``p99_high_speedup_mean`` (high-priority
                                     p99 latency, preemptive SLO vs FIFO)
+* ``BENCH_quant.json``            → ``effective_kv_capacity_ratio`` (int8 KV
+                                    pages per byte vs bf16; pure dtype math)
 
 All these metrics are DETERMINISTIC (lockstep makespan rounds / prefill
 token counts — never wall clock), so a fresh run should reproduce the
@@ -29,6 +31,7 @@ import jax
 import numpy as np
 
 from benchmarks import bench_prefix_cache as pc
+from benchmarks import bench_quant as bq
 from benchmarks import bench_queue_scheduling as qs
 from benchmarks import bench_slo as slo
 from repro.configs import REGISTRY
@@ -89,6 +92,13 @@ def fresh_slo_ratio() -> float:
     return float(np.mean(ratios))
 
 
+def fresh_kv_capacity_ratio() -> float:
+    """bench_quant's effective KV-capacity ratio (analytic, instant)."""
+    w = bq.kv_page_bytes
+    ps, nkv, hd = (bq.PAGE_SIZE, 2, 32)        # the bench's smoke geometry
+    return w(ps, nkv, hd, "off") / w(ps, nkv, hd, "int8")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--threshold", type=float, default=0.15,
@@ -101,10 +111,13 @@ def main() -> int:
         base_pc = json.load(f)
     with open("BENCH_slo.json") as f:
         base_slo = json.load(f)
+    with open("BENCH_quant.json") as f:
+        base_quant = json.load(f)
 
     queue_speedup = fresh_queue_speedup()
     preamble_ratio, agentic_ratio = fresh_prefix_ratios()
     slo_ratio = fresh_slo_ratio()
+    kv_capacity = fresh_kv_capacity_ratio()
     checks = [
         ("queue_scheduling.replicas_2.queue_over_static_speedup",
          queue_speedup, base_qs["replicas_2"]["queue_over_static_speedup"]),
@@ -114,6 +127,8 @@ def main() -> int:
          agentic_ratio, base_pc["agentic_multi_turn"]["prefill_tokens_ratio"]),
         ("slo.p99_high_speedup_mean",
          slo_ratio, base_slo["p99_high_speedup_mean"]),
+        ("quant.effective_kv_capacity_ratio",
+         kv_capacity, base_quant["effective_kv_capacity_ratio"]),
     ]
 
     failed = False

@@ -26,13 +26,15 @@ def model_cfg():
         head_dim=32, num_kv_heads=2, d_ff=256, vocab_size=VOCAB)
 
 
-def run_config(variant: str, alpha: float, steps: int, seed: int = 0):
+def run_config(variant: str, alpha: float, steps: int, seed: int = 0,
+               rollout_quant: str = "off", tis_clip: float = 0.0):
     task = ArithmeticTask(max_operand=4, ops=("+",), seed=seed)
     s = PipelineSettings(
         async_generation_ratio=alpha, pg_variant=variant,
         rollout_batch_size=16, num_return_sequences_in_group=8,
         num_slots=16, max_new_tokens=4, max_seq_len=16,
-        learning_rate=5e-3, seed=seed)
+        learning_rate=5e-3, seed=seed,
+        rollout_quant=rollout_quant, tis_clip=tis_clip)
     pipe = build_rlvr_pipeline(model_cfg(), s, task=task)
     stats = pipe.run(num_steps=steps, timeout=600)
     rewards = [st.reward_mean for st in stats]
@@ -53,6 +55,17 @@ def run() -> None:
                      float(np.mean(rewards[-k:])),
                      f"first={np.mean(rewards[:k]):.3f};max_stale={stale};"
                      f"steps={steps}")
+    # FlashRL: int8-quantized rollout engine creates a real train/rollout
+    # engine mismatch; sweep with and without the truncated-IS cap that is
+    # supposed to absorb it (same budget as one fig4 panel).
+    for tis_clip in (0.0, 2.0):
+        rewards, stale = run_config("ppo", 2.0, steps,
+                                    rollout_quant="int8", tis_clip=tis_clip)
+        tag = f"tis{tis_clip:g}" if tis_clip else "notis"
+        emit(f"fig4.quant_int8.{tag}.final_reward",
+             float(np.mean(rewards[-k:])),
+             f"first={np.mean(rewards[:k]):.3f};max_stale={stale};"
+             f"steps={steps}")
 
 
 if __name__ == "__main__":

@@ -12,7 +12,8 @@ import time
 
 from benchmarks import (bench_engine, bench_fault_tolerance,
                         bench_paged_engine, bench_prefix_cache,
-                        bench_prefix_sharing, bench_queue_scheduling,
+                        bench_prefix_sharing, bench_quant,
+                        bench_queue_scheduling,
                         bench_slo, fig1b_throughput_scaling,
                         fig3_allocation_and_rollout, fig4_offpolicy_stability,
                         fig7_queue_scheduling, fig8_prompt_replication,
@@ -37,6 +38,7 @@ MODULES = [
     ("queue_scheduling", bench_queue_scheduling),
     ("fault_tolerance", bench_fault_tolerance),
     ("slo", bench_slo),
+    ("quant", bench_quant),
     ("roofline", roofline),
 ]
 

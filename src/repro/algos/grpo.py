@@ -25,9 +25,10 @@ def rl_loss(logprobs, batch, cfg: LossConfig, aux=None):
     """batch: dict with old_logprobs, prox_logprobs, ref_logprobs, advantages,
     mask, is_positive (see configs/shapes.train_inputs)."""
     adv = batch["advantages"]
-    if cfg.engine_mismatch_cap is not None:
+    if cfg.engine_mismatch_cap is not None or cfg.tis_clip is not None:
         adv = adv * engine_mismatch_weight(logprobs, batch["old_logprobs"],
-                                           cfg.engine_mismatch_cap)
+                                           cfg.engine_mismatch_cap,
+                                           tis_clip=cfg.tis_clip)
     loss, metrics = policy_loss(
         logprobs, batch["old_logprobs"], batch["prox_logprobs"], adv,
         batch["mask"], batch["is_positive"], cfg)

@@ -34,6 +34,12 @@ class LossConfig:
     topr_pos_weight: float = 1.0   # weighted TOPR
     topr_neg_weight: float = 1.0
     engine_mismatch_cap: float = 5.0  # eq. 12 (train-engine vs rollout-engine)
+    # TIS cap for QUANTIZED rollouts (FlashRL): tightens the eq. 12
+    # truncation threshold when the rollout engine generates from int8/fp8
+    # weights — the mismatch ratio is then systematically off-center and a
+    # loose cap lets a few tokens dominate the gradient.  None = use
+    # engine_mismatch_cap unchanged; typical quantized setting: 2.0.
+    tis_clip: "float | None" = None
     aux_loss_weight: float = 0.01  # MoE load-balance
     z_loss_weight: float = 0.001
 
@@ -50,8 +56,15 @@ def kl_k3(logprobs, ref_logprobs, mask):
     return _masked_seq_mean(jnp.exp(d) - d - 1.0, mask)
 
 
-def engine_mismatch_weight(train_logprobs, rollout_logprobs, cap):
-    """Eq. 12: min(pi_train/pi_rollout, C), stop-gradient."""
+def engine_mismatch_weight(train_logprobs, rollout_logprobs, cap,
+                           tis_clip=None):
+    """Eq. 12: min(pi_train/pi_rollout, C), stop-gradient.
+
+    ``tis_clip`` (FlashRL's truncated-IS threshold for quantized rollouts)
+    tightens the cap when set: the effective threshold is min(cap,
+    tis_clip), or tis_clip alone when ``cap`` is None."""
+    if tis_clip is not None:
+        cap = tis_clip if cap is None else min(cap, tis_clip)
     r = jnp.exp(jax.lax.stop_gradient(train_logprobs) - rollout_logprobs)
     return jnp.minimum(r, cap)
 

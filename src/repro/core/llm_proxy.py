@@ -760,6 +760,19 @@ class LLMProxy:
 
     def _activate(self, req: GenerationRequest) -> None:
         self._active[req.request_id] = req
+        # record the engine's numeric config on the task at admission time:
+        # samples produced from this request carry the quantization mode
+        # their tokens were actually generated under, so buffer consumers /
+        # StepStats can report mixed-precision batches after a mid-run
+        # set_quant_mode change (stamped per leg — the LAST engine to
+        # touch a resumed request wins, which is the engine that decoded
+        # its reported tokens).
+        task = req.task
+        if task is not None and isinstance(getattr(task, "meta", None), dict):
+            task.meta["quant_mode"] = self.quant_mode
+            kv = getattr(self.engine, "kv_quant", "off")
+            if kv != "off":
+                task.meta["kv_quant"] = kv
         if self._slo is not None:
             req.last_progress = self._slo.clock()
         if req.stream_cb is not None:
@@ -845,6 +858,11 @@ class LLMProxy:
             except RuntimeError:     # loop thread resized _active mid-copy
                 continue
         return min(versions) if versions else None
+
+    @property
+    def quant_mode(self) -> str:
+        """The engine's weight-quantization mode ("off" when unsupported)."""
+        return getattr(self.engine, "quant_mode", "off")
 
     @property
     def cache_hit_tokens(self) -> int:

@@ -25,9 +25,17 @@ from jax.experimental.pallas import tpu as pltpu
 _NEG_INF = -1e30
 
 
-def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *,
-                  page_size: int, pages_per_seq: int, softcap):
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                  page_size: int, pages_per_seq: int, softcap,
+                  quantized: bool = False):
+    if quantized:
+        # int8 KV pages: dequantize in-kernel from the per-(slot, kv-head)
+        # fp32 scales riding in as two extra page-indexed operands (the
+        # MaxText AQT kv_quant idiom — codes and scales DMA together from
+        # the same physical page the block table points at).
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     bi = pl.program_id(0)
     pj = pl.program_id(2)
 
@@ -40,6 +48,9 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32)          # (G, d)
     k = k_ref[0, 0].astype(jnp.float32)          # (page_size, d)
     v = v_ref[0, 0].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0, 0][:, None]            # (page_size,) scales
+        v = v * vs_ref[0, 0][:, None]
     d = q.shape[-1]
     length = len_ref[bi]
     assigned = bt_ref[bi * pages_per_seq + pj] >= 0
@@ -68,15 +79,21 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           k_scales=None, v_scales=None,
                            softcap=None, interpret: bool = False):
     """q: (B, H, D); k_pages/v_pages: (N, page_size, KV, D);
     block_tables: (B, P) int32 physical page ids (-1 = unassigned);
-    lengths: (B,) int32 tokens written so far.  Returns (B, H, D)."""
+    lengths: (B,) int32 tokens written so far.  Returns (B, H, D).
+
+    ``k_scales``/``v_scales`` (both or neither): (N, page_size, KV) fp32
+    per-(slot, kv-head) scales for int8 pages — the kernel dequantizes
+    each page tile in VMEM right after the DMA (``kv_quant="int8"``)."""
     b, h, d = q.shape
     n, page_size, kv = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
     p_seq = block_tables.shape[1]
     g = h // kv
     g_pad = max(8, g)  # sublane minimum
+    quantized = k_scales is not None
 
     qg = q.reshape(b, kv, g, d)
     if g_pad != g:
@@ -92,14 +109,29 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
         idx = jnp.maximum(bt[bb * p_seq + pj], 0)  # -1 -> garbage page 0
         return (idx, hh, 0, 0)
 
+    def scale_map(bb, hh, pj, bt, ln):
+        del ln
+        idx = jnp.maximum(bt[bb * p_seq + pj], 0)
+        return (idx, hh, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g_pad, d), lambda bb, hh, pj, bt, ln: (bb, hh, 0, 0)),
+        pl.BlockSpec((1, 1, page_size, d), page_map),
+        pl.BlockSpec((1, 1, page_size, d), page_map),
+    ]
+    operands = [qg, kt, vt]
+    if quantized:
+        # (N, page, KV) -> (N, KV, page): same physical-page indexing as
+        # the code tiles, one (1, 1, page_size) fp32 block per grid step.
+        in_specs += [pl.BlockSpec((1, 1, page_size), scale_map),
+                     pl.BlockSpec((1, 1, page_size), scale_map)]
+        operands += [k_scales.transpose(0, 2, 1).astype(jnp.float32),
+                     v_scales.transpose(0, 2, 1).astype(jnp.float32)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, kv, p_seq),
-        in_specs=[
-            pl.BlockSpec((1, 1, g_pad, d), lambda bb, hh, pj, bt, ln: (bb, hh, 0, 0)),
-            pl.BlockSpec((1, 1, page_size, d), page_map),
-            pl.BlockSpec((1, 1, page_size, d), page_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g_pad, d),
                                lambda bb, hh, pj, bt, ln: (bb, hh, 0, 0)),
         scratch_shapes=[
@@ -109,11 +141,12 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
         ],
     )
     kernel = functools.partial(_paged_kernel, page_size=page_size,
-                               pages_per_seq=p_seq, softcap=softcap)
+                               pages_per_seq=p_seq, softcap=softcap,
+                               quantized=quantized)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kv, g_pad, d), q.dtype),
         interpret=interpret,
-    )(bt_flat, lengths.astype(jnp.int32), qg, kt, vt)
+    )(bt_flat, lengths.astype(jnp.int32), *operands)
     return out[:, :, :g, :].reshape(b, h, d)

@@ -48,17 +48,22 @@ def decode_attention_ref(q, k, v, lengths, *, window=None):
 
 
 def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
-                               softcap=None):
+                               k_scales=None, v_scales=None, softcap=None):
     """Paged single-token GQA decode. q: (B, H, D);
     k_pages/v_pages: (N, page_size, KV, D); block_tables: (B, P) int32
     physical page ids (-1 = unassigned); lengths: (B,) tokens written.
-    Returns (B, H, D)."""
+    ``k_scales``/``v_scales``: (N, page_size, KV) fp32 per-(slot, kv-head)
+    scales for int8 pages (kv_quant) — the gathered view is dequantized
+    before attention.  Returns (B, H, D)."""
     b, h, d = q.shape
     page_size, kv = k_pages.shape[1], k_pages.shape[2]
     g = h // kv
     idx = jnp.maximum(block_tables, 0)
     k = k_pages[idx].reshape(b, -1, kv, d)      # (B, P*page, KV, D)
     v = v_pages[idx].reshape(b, -1, kv, d)
+    if k_scales is not None:
+        k = k.astype(jnp.float32) * k_scales[idx].reshape(b, -1, kv)[..., None]
+        v = v.astype(jnp.float32) * v_scales[idx].reshape(b, -1, kv)[..., None]
     s = k.shape[1]
     qf = q.astype(jnp.float32).reshape(b, kv, g, d) * (d ** -0.5)
     logits = jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32))

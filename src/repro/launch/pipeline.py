@@ -110,6 +110,15 @@ class PipelineSettings:
     # default SLO class stamped on produced rollout tasks
     rollout_priority: int = PRIORITY_NORMAL
     rollout_deadline_ms: float = 0.0       # 0 = no deadline
+    # --- quantized rollouts (FlashRL recipe) ---
+    # rollout_quant quantizes rollout-engine WEIGHTS at every weight sync
+    # (trainer stays full precision); kv_quant stores KV pages as int8 with
+    # per-(page,slot,kv-head) scales (paged engine only).  tis_clip > 0
+    # tightens the eq. 12 truncated-IS cap to absorb the resulting
+    # train/rollout engine mismatch (0 = off).
+    rollout_quant: str = "off"             # off | int8 | fp8
+    kv_quant: str = "off"                  # off | int8
+    tis_clip: float = 0.0                  # 0 = off; typical quantized: 2.0
 
 
 def make_slo_config(s: PipelineSettings) -> Optional[SLOConfig]:
@@ -139,12 +148,18 @@ def make_rollout_engine(api, params, s: PipelineSettings) -> RolloutEngine:
             api, params, num_slots=s.num_slots, max_total_len=s.max_seq_len,
             page_size=s.page_size, prefill_chunk=s.prefill_chunk,
             num_pages=s.num_pages, eos_id=EOS, seed=s.seed,
-            attn_impl=s.attn_impl, prefix_cache=s.prefix_cache != "off")
+            attn_impl=s.attn_impl, prefix_cache=s.prefix_cache != "off",
+            quant_mode=s.rollout_quant, kv_quant=s.kv_quant)
     if choice != "slot":
         raise ValueError(f"unknown rollout_engine {s.rollout_engine!r} "
                          "(expected auto | paged | slot)")
+    if s.kv_quant != "off":
+        raise ValueError("kv_quant requires the paged engine (the slot "
+                         "engine has no page pool to quantize); set "
+                         "rollout_engine='paged' or kv_quant='off'")
     return DecodeEngine(api, params, num_slots=s.num_slots,
-                        max_total_len=s.max_seq_len, eos_id=EOS, seed=s.seed)
+                        max_total_len=s.max_seq_len, eos_id=EOS, seed=s.seed,
+                        quant_mode=s.rollout_quant)
 
 
 def make_rollout_fleet(api, params, s: PipelineSettings,
@@ -263,7 +278,8 @@ def build_rlvr_pipeline(model_cfg: ModelConfig, s: PipelineSettings,
     reward_fn = reward_fn or ArithmeticVerifier(task)
     api = get_api(model_cfg)
 
-    loss_cfg = LossConfig(pg_variant=s.pg_variant, kl_beta=s.kl_beta)
+    loss_cfg = LossConfig(pg_variant=s.pg_variant, kl_beta=s.kl_beta,
+                          tis_clip=s.tis_clip or None)
     opt_cfg = OptConfig(learning_rate=s.learning_rate, warmup_steps=5)
     tcfg = TrainerConfig(max_seq_len=s.max_seq_len,
                          group_size=s.num_return_sequences_in_group,
@@ -356,7 +372,8 @@ def build_agentic_pipeline(model_cfg: ModelConfig, s: PipelineSettings, *,
                            make_env: Callable, num_env_groups: int,
                            group_size: int, max_env_steps: int = 8) -> AgenticPipeline:
     api = get_api(model_cfg)
-    loss_cfg = LossConfig(pg_variant=s.pg_variant, kl_beta=s.kl_beta)
+    loss_cfg = LossConfig(pg_variant=s.pg_variant, kl_beta=s.kl_beta,
+                          tis_clip=s.tis_clip or None)
     opt_cfg = OptConfig(learning_rate=s.learning_rate, warmup_steps=5)
     tcfg = TrainerConfig(max_seq_len=s.max_seq_len, group_size=group_size,
                          minibatches=s.minibatches, ppo_epochs=s.ppo_epochs,

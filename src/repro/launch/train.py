@@ -79,6 +79,19 @@ def main() -> None:
                     help="long-tail watchdog: park a decode that reached "
                          "this many tokens while work queues, so tails "
                          "never block batch completion (0 = off)")
+    ap.add_argument("--rollout-quant", default="off",
+                    choices=["off", "int8", "fp8"],
+                    help="quantize rollout-engine weights at every weight "
+                         "sync (trainer stays full precision); pair with "
+                         "--tis-clip to absorb the engine mismatch")
+    ap.add_argument("--kv-quant", default="off", choices=["off", "int8"],
+                    help="store paged-engine KV pages as int8 with "
+                         "per-(page,slot,kv-head) scales (~1.8x effective "
+                         "KV capacity)")
+    ap.add_argument("--tis-clip", type=float, default=0.0,
+                    help="truncated-IS cap on the train/rollout engine "
+                         "mismatch ratio (FlashRL); 0 = off, typical "
+                         "quantized setting: 2.0")
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--seed", type=int, default=0)
@@ -99,6 +112,9 @@ def main() -> None:
         slo_queue_limit_per_class=args.slo_queue_limit,
         slo_stall_timeout=args.slo_stall_timeout,
         slo_defer_after_tokens=args.slo_defer_after,
+        rollout_quant=args.rollout_quant,
+        kv_quant=args.kv_quant,
+        tis_clip=args.tis_clip,
         max_new_tokens=args.max_new_tokens,
         max_seq_len=32,
         learning_rate=args.lr,
@@ -109,6 +125,9 @@ def main() -> None:
     print(f"[train] arch={args.arch} preset={args.preset} {mode} "
           f"variant={args.pg_variant} B={args.rollout_batch_size} "
           f"G={args.group_size}")
+    if args.rollout_quant != "off" or args.kv_quant != "off":
+        print(f"[train] quant: rollout={args.rollout_quant} "
+              f"kv={args.kv_quant} tis_clip={args.tis_clip or 'off'}")
 
     t0 = time.time()
     stats = pipe.run(args.steps)

@@ -40,7 +40,7 @@ class ModelAPI:
     decode_step: Callable[..., Any]  # (params, token, pos, cache) -> (logits, cache)
     init_cache: Callable[..., Any]   # (batch, max_len) -> cache
     # paged-KV views (None for families without positional KV caches)
-    init_paged_cache: Optional[Callable[..., Any]] = None  # (num_pages, page_size) -> PagedKVCache
+    init_paged_cache: Optional[Callable[..., Any]] = None  # (num_pages, page_size, kv_quant=) -> PagedKVCache
     prefill_chunk: Optional[Callable[..., Any]] = None     # (params, tokens, valid, start, block_row, cache) -> (logits, cache)
     decode_paged: Optional[Callable[..., Any]] = None      # (params, token, pos, cache, block_tables, attn_impl=) -> (logits, cache)
     cache_view: Optional[Callable[..., Any]] = None        # (layer_pages, block_row) -> (k, v, valid) dense per-request view
@@ -97,8 +97,9 @@ def get_api(cfg: ModelConfig) -> ModelAPI:
     if not paged.supports_paged(cfg):
         return ModelAPI(cfg, init, apply, prefill, decode_step, init_cache)
 
-    def init_paged_cache(num_pages, page_size):
-        return paged.init_paged_cache(cfg, num_pages, page_size)
+    def init_paged_cache(num_pages, page_size, kv_quant="off"):
+        return paged.init_paged_cache(cfg, num_pages, page_size,
+                                      kv_quant=kv_quant)
 
     def prefill_chunk(params, tokens, valid, start, block_row, cache, *,
                       moe_mode="ep"):

@@ -43,9 +43,50 @@ from repro.models.config import ModelConfig
 class PagedKVCache(NamedTuple):
     k_pages: jax.Array  # (num_layers, num_pages, page_size, n_kv, head_dim)
     v_pages: jax.Array
+    # int8 KV quantization (kv_quant="int8"): pages hold int8 codes and the
+    # per-(page, slot, kv-head) fp32 scales live beside the pool —
+    # (num_layers, num_pages, page_size, n_kv).  None = full precision.
+    # Scales are indexed by PHYSICAL page exactly like the pages, so every
+    # pool mechanism (COW fork, radix prefix cache, abort→resume retention)
+    # carries them for free: aliasing a page through a block table aliases
+    # its scales.
+    k_scales: Optional[jax.Array] = None
+    v_scales: Optional[jax.Array] = None
+
+    @property
+    def layer_pages(self):
+        """Per-layer scan operands: (k, v) or (k, v, k_scales, v_scales)."""
+        if self.k_scales is None:
+            return (self.k_pages, self.v_pages)
+        return (self.k_pages, self.v_pages, self.k_scales, self.v_scales)
+
+
+def _cache_from_layers(pages) -> PagedKVCache:
+    """Rebuild a cache from scanned per-layer operands (2- or 4-tuple)."""
+    if len(pages) == 2:
+        return PagedKVCache(k_pages=pages[0], v_pages=pages[1])
+    return PagedKVCache(k_pages=pages[0], v_pages=pages[1],
+                        k_scales=pages[2], v_scales=pages[3])
 
 
 GARBAGE_PAGE = 0  # physical page 0 is never allocated to a request
+
+_KV_SCALE_EPS = 1e-12  # zero-row guard for per-token absmax scales
+
+
+def quantize_kv(x):
+    """Symmetric int8 per-(token, kv-head) quantization of a K/V tensor.
+
+    x: (..., n_kv, head_dim) -> (int8 codes same shape, fp32 scales
+    (..., n_kv)).  One scale per token per KV head — fine enough that
+    greedy decode survives (the head_dim absmax sets the grid), and small
+    enough (4 bytes per 32+ stored) that int8 pages still roughly halve
+    bf16 page memory."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, _KV_SCALE_EPS) / 127.0
+    codes = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return codes.astype(jnp.int8), scale
 
 
 class PagePool:
@@ -358,13 +399,23 @@ def supports_paged(cfg: ModelConfig) -> bool:
     return cfg.family in ("dense", "moe")
 
 
-def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int) -> PagedKVCache:
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     kv_quant: str = "off") -> PagedKVCache:
     if not supports_paged(cfg):
         raise ValueError(f"paged KV cache requires an attention family, got {cfg.family}")
     hd = cfg.resolved_head_dim
-    dt = jnp.dtype(cfg.dtype)
     shape = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads, hd)
-    return PagedKVCache(k_pages=jnp.zeros(shape, dt), v_pages=jnp.zeros(shape, dt))
+    if kv_quant == "off":
+        dt = jnp.dtype(cfg.dtype)
+        return PagedKVCache(k_pages=jnp.zeros(shape, dt),
+                            v_pages=jnp.zeros(shape, dt))
+    if kv_quant != "int8":
+        raise ValueError(f"unknown kv_quant {kv_quant!r} (expected off | int8)")
+    sshape = shape[:-1]
+    return PagedKVCache(k_pages=jnp.zeros(shape, jnp.int8),
+                        v_pages=jnp.zeros(shape, jnp.int8),
+                        k_scales=jnp.zeros(sshape, jnp.float32),
+                        v_scales=jnp.zeros(sshape, jnp.float32))
 
 
 def pages_per_seq(max_total_len: int, page_size: int) -> int:
@@ -375,17 +426,25 @@ def pages_per_seq(max_total_len: int, page_size: int) -> int:
 # per-request dense view (debug / tests / reference attention)
 # ---------------------------------------------------------------------------
 
-def gather_request_view(layer_pages: Tuple[jax.Array, jax.Array], block_row):
+def gather_request_view(layer_pages, block_row):
     """Dense (S_view, n_kv, hd) K/V view of one request's table row.
 
-    ``S_view = pages_per_seq * page_size``; positions beyond the request's
-    written length hold stale pool contents — callers must mask by length."""
-    k_pages, v_pages = layer_pages
+    ``layer_pages`` is one layer's ``(k_pages, v_pages)`` — or the 4-tuple
+    with per-page scales under ``kv_quant="int8"``, in which case the view
+    is dequantized to fp32.  ``S_view = pages_per_seq * page_size``;
+    positions beyond the request's written length hold stale pool contents
+    — callers must mask by length."""
+    k_pages, v_pages = layer_pages[0], layer_pages[1]
+    k_scales = layer_pages[2] if len(layer_pages) > 2 else None
+    v_scales = layer_pages[3] if len(layer_pages) > 2 else None
     page_size = k_pages.shape[1]
     idx = jnp.maximum(block_row, 0)
     nkv, hd = k_pages.shape[2], k_pages.shape[3]
     k = k_pages[idx].reshape(-1, nkv, hd)
     v = v_pages[idx].reshape(-1, nkv, hd)
+    if k_scales is not None:
+        k = k.astype(jnp.float32) * k_scales[idx].reshape(-1, nkv)[..., None]
+        v = v.astype(jnp.float32) * v_scales[idx].reshape(-1, nkv)[..., None]
     valid = jnp.repeat(block_row >= 0, page_size)
     return k, v, valid
 
@@ -396,10 +455,16 @@ def copy_pages(cache: PagedKVCache, src, dst) -> PagedKVCache:
     The device half of a COW fork: the group's partial prompt-tail page is
     duplicated into each forked lane's privately owned page (src/dst: (N,)
     int32 page ids).  Everything else in the fork is pure block-table /
-    refcount bookkeeping — the attention kernels never change."""
+    refcount bookkeeping — the attention kernels never change.  Quantized
+    pools copy the per-page scales alongside the int8 codes — a forked
+    page dequantizes identically to its source."""
     k = cache.k_pages.at[:, dst].set(cache.k_pages[:, src])
     v = cache.v_pages.at[:, dst].set(cache.v_pages[:, src])
-    return PagedKVCache(k_pages=k, v_pages=v)
+    if cache.k_scales is None:
+        return PagedKVCache(k_pages=k, v_pages=v)
+    ks = cache.k_scales.at[:, dst].set(cache.k_scales[:, src])
+    vs = cache.v_scales.at[:, dst].set(cache.v_scales[:, src])
+    return PagedKVCache(k_pages=k, v_pages=v, k_scales=ks, v_scales=vs)
 
 
 # ---------------------------------------------------------------------------
@@ -415,7 +480,8 @@ def _paged_attn_prefill(p, cfg: ModelConfig, x, positions, valid, layer_pages,
     — earlier chunks included."""
     q = attention._project_q(p, cfg, x, positions)
     k, v = attention._project_kv(p, cfg, x, positions)
-    k_pages, v_pages = layer_pages
+    k_pages, v_pages = layer_pages[0], layer_pages[1]
+    quantized = len(layer_pages) > 2
     page_size = k_pages.shape[1]
 
     logical = positions[0] // page_size                      # (C,)
@@ -423,10 +489,23 @@ def _paged_attn_prefill(p, cfg: ModelConfig, x, positions, valid, layer_pages,
     phys = jnp.where(valid[0], block_row[logical], GARBAGE_PAGE)
     phys = jnp.maximum(phys, GARBAGE_PAGE)                   # -1 -> garbage
     off = positions[0] % page_size
-    k_pages = k_pages.at[phys, off].set(k[0].astype(k_pages.dtype))
-    v_pages = v_pages.at[phys, off].set(v[0].astype(v_pages.dtype))
+    if quantized:
+        k_scales, v_scales = layer_pages[2], layer_pages[3]
+        kq, ks = quantize_kv(k[0])
+        vq, vs = quantize_kv(v[0])
+        k_pages = k_pages.at[phys, off].set(kq)
+        v_pages = v_pages.at[phys, off].set(vq)
+        k_scales = k_scales.at[phys, off].set(ks)
+        v_scales = v_scales.at[phys, off].set(vs)
+        layer_pages = (k_pages, v_pages, k_scales, v_scales)
+    else:
+        k_pages = k_pages.at[phys, off].set(k[0].astype(k_pages.dtype))
+        v_pages = v_pages.at[phys, off].set(v[0].astype(v_pages.dtype))
+        layer_pages = (k_pages, v_pages)
 
-    kd, vd, page_valid = gather_request_view((k_pages, v_pages), block_row)
+    # in-chunk queries read their own K/V back through the (possibly
+    # quantized) pool — prefill attends to exactly what decode will see.
+    kd, vd, page_valid = gather_request_view(layer_pages, block_row)
     s_view = kd.shape[0]
     kv_pos = jnp.arange(s_view, dtype=jnp.int32)[None, :]
     kv_valid = page_valid[None, :]
@@ -438,7 +517,9 @@ def _paged_attn_prefill(p, cfg: ModelConfig, x, positions, valid, layer_pages,
                            window=cfg.sliding_window,
                            softcap=cfg.attn_logit_softcap)
     c = x.shape[1]
-    return out.reshape(1, c, cfg.q_dim) @ p["wo"], (k_pages, v_pages)
+    # the dequantized fp32 view promotes the attention output; cast back to
+    # the residual dtype (identity when unquantized — same jaxpr as before)
+    return out.reshape(1, c, cfg.q_dim).astype(x.dtype) @ p["wo"], layer_pages
 
 
 def _paged_block_prefill(p, cfg: ModelConfig, x, positions, valid, layer_pages,
@@ -472,11 +553,10 @@ def paged_prefill_chunk(params, cfg: ModelConfig, tokens, valid, start,
                                           block_row, moe_mode=moe_mode)
         return h2, pages2
 
-    x, pages = jax.lax.scan(body, x, (params["blocks"],
-                                      (cache.k_pages, cache.v_pages)))
+    x, pages = jax.lax.scan(body, x, (params["blocks"], cache.layer_pages))
     from repro.models.transformer import _last_position_logits
     return (_last_position_logits(params, cfg, x, valid),
-            PagedKVCache(k_pages=pages[0], v_pages=pages[1]))
+            _cache_from_layers(pages))
 
 
 # ---------------------------------------------------------------------------
@@ -490,15 +570,28 @@ def _paged_attn_decode(p, cfg: ModelConfig, x, pos, layer_pages, block_tables,
     positions = pos[:, None]
     q = attention._project_q(p, cfg, x, positions)           # (B,1,KV,G,hd)
     k_new, v_new = attention._project_kv(p, cfg, x, positions)
-    k_pages, v_pages = layer_pages
+    k_pages, v_pages = layer_pages[0], layer_pages[1]
+    quantized = len(layer_pages) > 2
+    k_scales = layer_pages[2] if quantized else None
+    v_scales = layer_pages[3] if quantized else None
     page_size = k_pages.shape[1]
 
     logical = jnp.clip(pos // page_size, 0, block_tables.shape[1] - 1)
     phys = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
     phys = jnp.maximum(phys, GARBAGE_PAGE)                   # masked -> garbage
     off = pos % page_size
-    k_pages = k_pages.at[phys, off].set(k_new[:, 0].astype(k_pages.dtype))
-    v_pages = v_pages.at[phys, off].set(v_new[:, 0].astype(v_pages.dtype))
+    if quantized:
+        kq, ks = quantize_kv(k_new[:, 0])
+        vq, vs = quantize_kv(v_new[:, 0])
+        k_pages = k_pages.at[phys, off].set(kq)
+        v_pages = v_pages.at[phys, off].set(vq)
+        k_scales = k_scales.at[phys, off].set(ks)
+        v_scales = v_scales.at[phys, off].set(vs)
+        out_pages = (k_pages, v_pages, k_scales, v_scales)
+    else:
+        k_pages = k_pages.at[phys, off].set(k_new[:, 0].astype(k_pages.dtype))
+        v_pages = v_pages.at[phys, off].set(v_new[:, 0].astype(v_pages.dtype))
+        out_pages = (k_pages, v_pages)
 
     if attn_impl in ("kernel", "kernel_interpret"):
         from repro.kernels.paged_decode_attention import paged_decode_attention
@@ -506,6 +599,7 @@ def _paged_attn_decode(p, cfg: ModelConfig, x, pos, layer_pages, block_tables,
         qh = q.reshape(b, cfg.num_heads, hd)
         out = paged_decode_attention(
             qh, k_pages, v_pages, block_tables, pos + 1,
+            k_scales=k_scales, v_scales=v_scales,
             softcap=cfg.attn_logit_softcap,
             interpret=(attn_impl == "kernel_interpret"))
         out = out.reshape(b, 1, cfg.q_dim)
@@ -514,6 +608,11 @@ def _paged_attn_decode(p, cfg: ModelConfig, x, pos, layer_pages, block_tables,
         idx = jnp.maximum(block_tables, 0)
         kd = k_pages[idx].reshape(b, -1, nkv, hd)
         vd = v_pages[idx].reshape(b, -1, nkv, hd)
+        if quantized:
+            kd = (kd.astype(jnp.float32)
+                  * k_scales[idx].reshape(b, -1, nkv)[..., None])
+            vd = (vd.astype(jnp.float32)
+                  * v_scales[idx].reshape(b, -1, nkv)[..., None])
         s_view = kd.shape[1]
         kv_pos = jnp.broadcast_to(jnp.arange(s_view, dtype=jnp.int32)[None, :],
                                   (b, s_view))
@@ -522,7 +621,8 @@ def _paged_attn_decode(p, cfg: ModelConfig, x, pos, layer_pages, block_tables,
                                        window=cfg.sliding_window,
                                        softcap=cfg.attn_logit_softcap)
         out = out.reshape(b, 1, cfg.q_dim)
-    return out @ p["wo"], (k_pages, v_pages)
+    # cast back to the residual dtype (identity when unquantized)
+    return out.astype(x.dtype) @ p["wo"], out_pages
 
 
 def _paged_block_decode(p, cfg: ModelConfig, x, pos, layer_pages, block_tables,
@@ -553,8 +653,7 @@ def paged_decode_step(params, cfg: ModelConfig, token, pos, cache: PagedKVCache,
                                          moe_mode=moe_mode, attn_impl=attn_impl)
         return h2, pages2
 
-    x, pages = jax.lax.scan(body, x, (params["blocks"],
-                                      (cache.k_pages, cache.v_pages)))
+    x, pages = jax.lax.scan(body, x, (params["blocks"], cache.layer_pages))
     from repro.models.transformer import _unembed
     return (_unembed(params, cfg, x)[:, 0, :],
-            PagedKVCache(k_pages=pages[0], v_pages=pages[1]))
+            _cache_from_layers(pages))

@@ -1,0 +1,28 @@
+"""Quantized rollout subsystem (FlashRL recipe over the paged engine).
+
+Rollout replicas hold INT8/FP8 weights (quantized at weight-sync time)
+and optionally int8 KV pages while the trainer stays full-precision; the
+resulting engine mismatch is absorbed by the truncated importance-sampling
+correction in `repro.algos.off_policy` (``tis_clip``).
+"""
+from repro.quant.core import (
+    KV_MODES,
+    MODES,
+    QuantLeaf,
+    dequantize_array,
+    dequantize_params,
+    is_quantized_tree,
+    quantize_array,
+    quantize_params,
+)
+
+__all__ = [
+    "KV_MODES",
+    "MODES",
+    "QuantLeaf",
+    "dequantize_array",
+    "dequantize_params",
+    "is_quantized_tree",
+    "quantize_array",
+    "quantize_params",
+]

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.types import GenerationResult
 from repro.models.api import ModelAPI
+from repro.quant import core as quant
 from repro.rollout.sampler import sample_tokens
 
 
@@ -64,10 +65,17 @@ class DecodeEngine:
                  max_total_len: int = 128, eos_id: int = 2,
                  temperature: float = 1.0, top_k: int = 0,
                  pad_id: int = 0, seed: int = 0,
-                 prefill_bucket: Optional[int] = 16):
+                 prefill_bucket: Optional[int] = 16,
+                 quant_mode: str = "off"):
         cfg = api.cfg
+        if quant_mode not in quant.MODES:
+            raise ValueError(f"unknown quant_mode {quant_mode!r} "
+                             f"(expected {' | '.join(quant.MODES)})")
         self.api = api
-        self.params = params
+        # quantize-on-sync (same scheme as the paged engine): the slot
+        # engine holds int8/fp8 codes and dequantizes inside its jits.
+        self.quant_mode = quant_mode
+        self.params = quant.quantize_params(params, quant_mode)
         self.num_slots = num_slots
         self.max_total_len = max_total_len
         self.eos_id = eos_id
@@ -94,12 +102,14 @@ class DecodeEngine:
 
     # ----------------------------------------------------------- jit bodies
     def _decode_impl(self, params, cache, cur_token, pos, key):
+        params = quant.dequantize_params(params)  # identity when "off"
         logits, cache = self.api.decode_step(params, cur_token, pos, cache)
         tok, lp = sample_tokens(key, logits, temperature=self.temperature,
                                 top_k=self.top_k)
         return tok.astype(jnp.int32), lp, cache
 
     def _prefill_impl(self, params, tokens, valid):
+        params = quant.dequantize_params(params)  # identity when "off"
         cache = self.api.init_cache(1, self.max_total_len)
         logits, cache = self.api.prefill(
             params, {"tokens": tokens, "valid": valid}, cache)
@@ -114,8 +124,16 @@ class DecodeEngine:
     def active_request_ids(self) -> List[int]:
         return list(self.req_to_slot)
 
+    def set_quant_mode(self, mode: str) -> None:
+        """Change quantization mid-run; applies at the next update_weights
+        (the held tree is already lossily quantized)."""
+        if mode not in quant.MODES:
+            raise ValueError(f"unknown quant_mode {mode!r} "
+                             f"(expected {' | '.join(quant.MODES)})")
+        self.quant_mode = mode
+
     def update_weights(self, params) -> None:
-        self.params = params
+        self.params = quant.quantize_params(params, self.quant_mode)
 
     def add_request(self, request_id: int, prompt_tokens, max_new_tokens: int) -> None:
         assert self.num_free_slots > 0, "no free slot"

@@ -57,6 +57,7 @@ import numpy as np
 from repro.core.types import GenerationResult
 from repro.models import paged
 from repro.models.api import ModelAPI
+from repro.quant import core as quant
 from repro.rollout.sampler import sample_tokens
 
 _PREFILL = "prefill"
@@ -120,7 +121,8 @@ class PagedDecodeEngine:
                  prefill_chunk: int = 16, num_pages: Optional[int] = None,
                  eos_id: int = 2, temperature: float = 1.0, top_k: int = 0,
                  pad_id: int = 0, seed: int = 0, attn_impl: str = "ref",
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, quant_mode: str = "off",
+                 kv_quant: str = "off"):
         cfg = api.cfg
         if api.init_paged_cache is None:
             raise ValueError(f"family {cfg.family} has no paged-KV support "
@@ -128,8 +130,20 @@ class PagedDecodeEngine:
         if cfg.sliding_window is not None and cfg.sliding_window < max_total_len:
             raise ValueError("engine requires cache >= max_total_len "
                              "(enlarge window or shorten sequences)")
+        if quant_mode not in quant.MODES:
+            raise ValueError(f"unknown quant_mode {quant_mode!r} "
+                             f"(expected {' | '.join(quant.MODES)})")
+        if kv_quant not in quant.KV_MODES:
+            raise ValueError(f"unknown kv_quant {kv_quant!r} "
+                             f"(expected {' | '.join(quant.KV_MODES)})")
         self.api = api
-        self.params = params
+        # quantize-on-sync: replicas hold int8/fp8 codes on device (the
+        # trainer's tree is quantized HERE, at construction and on every
+        # update_weights) and the jitted step dequantizes at trace time.
+        self.quant_mode = quant_mode
+        self.kv_quant = kv_quant
+        self.params = quant.quantize_params(params, quant_mode)
+        self.total_weight_syncs_quantized = 0
         self.num_slots = num_slots
         self.max_total_len = max_total_len
         self.page_size = page_size
@@ -145,7 +159,8 @@ class PagedDecodeEngine:
         self.attn_impl = attn_impl
         self._key = jax.random.PRNGKey(seed)
 
-        self.cache = api.init_paged_cache(num_pages, page_size)
+        self.cache = api.init_paged_cache(num_pages, page_size,
+                                          kv_quant=kv_quant)
         self.block_tables = jnp.full((num_slots, self.pages_per_seq), -1,
                                      jnp.int32)
         self.cur_token = jnp.full((num_slots,), pad_id, jnp.int32)
@@ -179,6 +194,11 @@ class PagedDecodeEngine:
         plus a decode token for every unmasked slot.  All shapes static."""
         cfg = self.api.cfg
         vocab = cfg.vocab_size
+        # dequantize quantize-on-sync weights at trace time: the multiply
+        # fuses into each matmul consumer (W8A16), and for an unquantized
+        # tree this is an identity traversal — the jaxpr is unchanged, so
+        # quant_mode="off" stays byte-identical.
+        params = quant.dequantize_params(params)
 
         def run_prefill(c):
             return self.api.prefill_chunk(params, chunk_tokens, chunk_valid,
@@ -267,8 +287,20 @@ class PagedDecodeEngine:
     def cache_pages_held(self) -> int:
         return len(self.prefix_cache.held_pages()) if self.prefix_cache else 0
 
+    def set_quant_mode(self, mode: str) -> None:
+        """Change the weight-quantization mode mid-run.  Takes effect at the
+        NEXT ``update_weights`` — the current tree is already (lossily)
+        quantized, so re-quantizing in place would compound error; the next
+        sync ships fresh full-precision weights to quantize."""
+        if mode not in quant.MODES:
+            raise ValueError(f"unknown quant_mode {mode!r} "
+                             f"(expected {' | '.join(quant.MODES)})")
+        self.quant_mode = mode
+
     def update_weights(self, params) -> None:
-        self.params = params
+        self.params = quant.quantize_params(params, self.quant_mode)
+        if self.quant_mode != "off":
+            self.total_weight_syncs_quantized += 1
         # bump the epoch even with the cache off: slot/retained records
         # stamped with an older epoch must never publish their (now
         # stale-policy) KV if the cache is enabled later.

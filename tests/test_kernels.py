@@ -141,6 +141,67 @@ def test_paged_decode_attention_softcap():
                                rtol=2e-5, atol=2e-5)
 
 
+def _quantize_pages(x):
+    """Per-(token, kv-head) symmetric int8 pages + fp32 scales, the same
+    scheme ``paged.quantize_kv`` writes (scales laid out (N, page, kv))."""
+    xf = np.asarray(x, np.float32)
+    amax = np.abs(xf).max(-1)
+    scale = np.maximum(amax, 1e-12) / 127.0
+    codes = np.clip(np.round(xf / scale[..., None]), -127, 127).astype(np.int8)
+    return jnp.asarray(codes), jnp.asarray(scale, jnp.float32)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("b,h,kv,d,page_size,pages_per_seq", [
+    (2, 8, 2, 64, 16, 4),    # GQA
+    (3, 4, 4, 64, 32, 2),    # MHA
+    (1, 8, 1, 128, 16, 6),   # MQA
+])
+def test_paged_decode_attention_int8_sweep(b, h, kv, d, page_size,
+                                           pages_per_seq):
+    """Quantized kernel (dequant-in-kernel) vs the quantized jnp oracle."""
+    num_pages = 1 + b * pages_per_seq
+    q = jax.random.normal(KEY, (b, h, d))
+    kp_f = jax.random.normal(jax.random.fold_in(KEY, 1),
+                             (num_pages, page_size, kv, d))
+    vp_f = jax.random.normal(jax.random.fold_in(KEY, 2),
+                             (num_pages, page_size, kv, d))
+    kp, ks = _quantize_pages(kp_f)
+    vp, vs = _quantize_pages(vp_f)
+    bt, lengths = _random_block_tables(np.random.default_rng(0), b,
+                                       pages_per_seq, num_pages, page_size)
+    out = paged_decode_attention(q, kp, vp, bt, lengths,
+                                 k_scales=ks, v_scales=vs, interpret=True)
+    expected = ref.paged_decode_attention_ref(q, kp, vp, bt, lengths,
+                                              k_scales=ks, v_scales=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+    # and the whole quantized path must track the fp oracle within int8 error
+    fp = ref.paged_decode_attention_ref(q, kp_f, vp_f, bt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(fp),
+                               rtol=0.05, atol=0.05)
+
+
+@pytest.mark.slow
+def test_paged_decode_attention_int8_softcap():
+    b, h, kv, d, page_size, pages_per_seq = 2, 4, 2, 64, 16, 3
+    num_pages = 1 + b * pages_per_seq
+    q = jax.random.normal(KEY, (b, h, d))
+    kp, ks = _quantize_pages(jax.random.normal(
+        jax.random.fold_in(KEY, 1), (num_pages, page_size, kv, d)))
+    vp, vs = _quantize_pages(jax.random.normal(
+        jax.random.fold_in(KEY, 2), (num_pages, page_size, kv, d)))
+    bt, lengths = _random_block_tables(np.random.default_rng(1), b,
+                                       pages_per_seq, num_pages, page_size)
+    out = paged_decode_attention(q, kp, vp, bt, lengths, k_scales=ks,
+                                 v_scales=vs, softcap=30.0, interpret=True)
+    expected = ref.paged_decode_attention_ref(q, kp, vp, bt, lengths,
+                                              k_scales=ks, v_scales=vs,
+                                              softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_decode_attention_window():
     b, h, kv, s, d = 2, 4, 2, 512, 64
     q = jax.random.normal(KEY, (b, h, d))

@@ -1,0 +1,393 @@
+"""Quantized rollout subsystem: quantize-on-sync weights, int8 KV pages,
+TIS engine-mismatch cap, and the mixed-precision batch accounting.
+
+The paged-engine tests all run greedy (temperature=0) so byte-identity is a
+meaningful check: under kv_quant=int8 every KV position is quantized exactly
+once at write time, so abort→resume, COW group forks, and prefix-cache hits
+must reproduce an uninterrupted run exactly — both paths read the same
+quantized pages through the same per-page scales.
+"""
+import dataclasses
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.algos.grpo import rl_loss
+from repro.algos.off_policy import LossConfig, engine_mismatch_weight
+from repro.core.async_controller import AsyncController
+from repro.core.llm_proxy import LLMProxy
+from repro.core.types import RolloutTask, next_uid
+from repro.kernels import ref as kref
+from repro.kernels.paged_decode_attention import paged_decode_attention
+from repro.models import get_api, paged
+from repro.quant import core as quant
+from repro.rollout.engine import DecodeEngine
+from repro.rollout.paged_engine import PagedDecodeEngine
+
+CFG = tiny("qwen3-4b")
+
+
+@pytest.fixture(scope="module")
+def api_params():
+    api = get_api(CFG)
+    return api, api.init(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------- primitives
+
+def test_quantize_params_structure_and_skip_set(api_params):
+    _, params = api_params
+    q = quant.quantize_params(params, "int8")
+    assert quant.is_quantized_tree(q)
+    # embeddings / norm gains stay full precision (outliers + cheap)
+    assert not isinstance(q["embed"], quant.QuantLeaf)
+    assert q["embed"].dtype == params["embed"].dtype
+    blk = q["blocks"]
+    assert isinstance(blk["attn"]["wq"], quant.QuantLeaf)
+    assert blk["attn"]["wq"].codes.dtype == jnp.int8
+    assert not isinstance(blk["ln1"]["scale"], quant.QuantLeaf)
+
+
+@pytest.mark.parametrize("mode,tol", [("int8", 0.02), ("fp8", 0.08)])
+def test_quantize_roundtrip_error(api_params, mode, tol):
+    _, params = api_params
+    deq = quant.dequantize_params(quant.quantize_params(params, mode))
+    w = params["blocks"]["attn"]["wq"]
+    w2 = deq["blocks"]["attn"]["wq"]
+    assert w2.dtype == w.dtype
+    err = np.abs(np.asarray(w2, np.float32) - np.asarray(w, np.float32))
+    assert err.max() <= tol * np.abs(np.asarray(w, np.float32)).max()
+
+
+def test_quantize_off_is_identity(api_params):
+    _, params = api_params
+    assert quant.quantize_params(params, "off") is params
+    assert not quant.is_quantized_tree(params)
+    # dequantizing a plain tree is a leaf-identity traversal
+    deq = quant.dequantize_params(params)
+    assert all(a is b for a, b in zip(jax.tree_util.tree_leaves(deq),
+                                      jax.tree_util.tree_leaves(params)))
+
+
+def test_quant_leaf_is_jit_transparent(api_params):
+    _, params = api_params
+    q = quant.quantize_params(params, "int8")
+
+    @jax.jit
+    def f(p):
+        return quant.dequantize_params(p)["blocks"]["attn"]["wq"].sum()
+
+    assert np.isfinite(float(f(q)))
+
+
+def test_quantize_kv_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 3, 2, 16), jnp.bfloat16)
+    codes, scale = paged.quantize_kv(x)
+    assert codes.dtype == jnp.int8 and scale.shape == (5, 3, 2)
+    deq = codes.astype(jnp.float32) * scale[..., None]
+    err = np.abs(deq - np.asarray(x, np.float32))
+    assert err.max() <= np.abs(np.asarray(x, np.float32)).max() / 100
+
+
+def test_unknown_modes_rejected(api_params):
+    api, params = api_params
+    with pytest.raises(ValueError):
+        quant.quantize_params(params, "int4")
+    with pytest.raises(ValueError):
+        PagedDecodeEngine(api, params, quant_mode="int4")
+    with pytest.raises(ValueError):
+        PagedDecodeEngine(api, params, kv_quant="fp8")
+    with pytest.raises(ValueError):
+        DecodeEngine(api, params, quant_mode="nope")
+
+
+# ------------------------------------------------------------ paged engine
+
+def _drain(eng, out):
+    for _ in range(500):
+        for rid, toks, _ in eng.step():
+            out[rid] = toks.tolist()
+        if not eng.slots:
+            return out
+    raise AssertionError("engine did not drain")
+
+
+def _make_engine(api, params, **kw):
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("max_total_len", 64)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("temperature", 0.0)
+    return PagedDecodeEngine(api, params, **kw)
+
+
+PROMPT = (np.arange(1, 19) % 13 + 3).astype(np.int32)
+
+
+def test_engine_quant_matches_fake_quantized_params(api_params):
+    """Dequant-inside-jit == running the off engine on an explicitly
+    fake-quantized (quantize→dequantize on host) parameter tree."""
+    api, params = api_params
+    e_q = _make_engine(api, params, quant_mode="int8")
+    fake = quant.dequantize_params(quant.quantize_params(params, "int8"))
+    e_f = _make_engine(api, fake)
+    for e in (e_q, e_f):
+        e.add_request(1, PROMPT, 10)
+    a = _drain(e_q, {})
+    b = _drain(e_f, {})
+    assert a == b
+
+
+@pytest.mark.parametrize("kw", [
+    {"kv_quant": "int8"},
+    {"quant_mode": "int8", "kv_quant": "int8"},
+])
+def test_abort_resume_byte_identical(api_params, kw):
+    api, params = api_params
+
+    def plain():
+        eng = _make_engine(api, params, prefix_cache=True, **kw)
+        eng.add_request(1, PROMPT, 12)
+        return _drain(eng, {})[1]
+
+    def interrupted():
+        eng = _make_engine(api, params, prefix_cache=True, **kw)
+        eng.add_request(1, PROMPT, 12)
+        for _ in range(8):
+            eng.step()
+        r = eng.abort(1, retain=True)
+        assert r.resumable
+        eng.audit_pages()
+        pre = r.tokens.tolist()
+        eng.resume_request(1, 2, 12 - len(pre))
+        out = _drain(eng, {})
+        eng.audit_pages()
+        return pre + out[2]
+
+    assert plain() == interrupted()
+
+
+def test_group_fork_parity_kv_int8(api_params):
+    """COW followers under int8 KV pages: forked tail pages carry their
+    scales, so greedy followers reproduce the leader exactly."""
+    api, params = api_params
+    eng = _make_engine(api, params, kv_quant="int8")
+    eng.submit_group([1, 2, 3], PROMPT, 12)
+    out = _drain(eng, {})
+    eng.audit_pages()
+    assert out[1] == out[2] == out[3]
+    single = _make_engine(api, params, kv_quant="int8")
+    single.add_request(9, PROMPT, 12)
+    assert _drain(single, {})[9] == out[1]
+
+
+def test_prefix_cache_hit_dequantizes_retained_scales(api_params):
+    """A cache-hit admission aliases previously written int8 pages; their
+    per-page scales must come along — greedy output matches a cold engine."""
+    api, params = api_params
+    warm = _make_engine(api, params, kv_quant="int8", prefix_cache=True)
+    warm.add_request(1, PROMPT, 10)
+    first = _drain(warm, {})[1]
+    warm.add_request(2, PROMPT, 10)        # same prompt: page-aligned hit
+    second = _drain(warm, {})[2]
+    assert warm.cache_hits >= 1 and warm.cache_hit_tokens > 0
+    warm.audit_pages()
+    cold = _make_engine(api, params, kv_quant="int8", prefix_cache=False)
+    cold.add_request(3, PROMPT, 10)
+    assert _drain(cold, {})[3] == second == first
+
+
+def test_audit_clean_under_churn_kv_int8(api_params):
+    """fork + evict-under-pressure + retain/release churn with int8 pages:
+    the refcount/scale bookkeeping must stay exact."""
+    api, params = api_params
+    eng = _make_engine(api, params, kv_quant="int8", prefix_cache=True,
+                       num_slots=6, num_pages=24)
+    rng = np.random.default_rng(0)
+    rid = 0
+    for round_ in range(4):
+        rid += 10
+        eng.submit_group([rid, rid + 1, rid + 2], PROMPT, 8)
+        solo = rid + 3
+        eng.add_request(solo, rng.integers(1, 60, 11).astype(np.int32), 8)
+        for _ in range(6):
+            eng.step()
+        eng.audit_pages()
+        r = eng.abort(solo, retain=True)
+        eng.audit_pages()
+        if r.resumable and round_ % 2 == 0:
+            eng.resume_request(solo, solo + 5, 4)
+        elif r.resumable:
+            eng.release_retained(solo)
+        _drain(eng, {})
+        eng.audit_pages()
+    assert eng.cache_evicted_pages >= 0   # churn may or may not evict
+    eng.audit_pages()
+
+
+def test_kernel_interpret_matches_ref_kv_int8(api_params):
+    """The quantized Pallas decode kernel (interpret mode) drives the engine
+    to the same greedy tokens as the pure-JAX gather path."""
+    api, params = api_params
+    outs = []
+    for impl in ("ref", "kernel_interpret"):
+        eng = _make_engine(api, params, kv_quant="int8", attn_impl=impl)
+        eng.add_request(1, PROMPT, 8)
+        outs.append(_drain(eng, {})[1])
+    assert outs[0] == outs[1]
+
+
+def test_paged_decode_attention_int8_parity_fast():
+    """Tier-1 kernel/oracle parity at one small shape (the full sweep is
+    slow-tier in test_kernels.py)."""
+    b, h, kv, d, page_size, pages_per_seq = 2, 4, 2, 32, 16, 2
+    num_pages = 1 + b * pages_per_seq
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (b, h, d))
+    kf = jax.random.normal(jax.random.fold_in(key, 1),
+                           (num_pages, page_size, kv, d))
+    vf = jax.random.normal(jax.random.fold_in(key, 2),
+                           (num_pages, page_size, kv, d))
+    kp, ks = paged.quantize_kv(kf)
+    vp, vs = paged.quantize_kv(vf)
+    bt = jnp.arange(1, 1 + b * pages_per_seq, dtype=jnp.int32).reshape(b, -1)
+    lengths = jnp.asarray([page_size * pages_per_seq, 19], jnp.int32)
+    out = paged_decode_attention(q, kp, vp, bt, lengths,
+                                 k_scales=ks, v_scales=vs, interpret=True)
+    expected = kref.paged_decode_attention_ref(q, kp, vp, bt, lengths,
+                                               k_scales=ks, v_scales=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+    fp = kref.paged_decode_attention_ref(q, kf, vf, bt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(fp),
+                               rtol=0.05, atol=0.05)
+
+
+# -------------------------------------------------- quantize-on-sync + meta
+
+def test_update_weights_requantizes(api_params):
+    api, params = api_params
+    eng = _make_engine(api, params, quant_mode="int8")
+    assert quant.is_quantized_tree(eng.params)
+    eng.update_weights(params)
+    assert quant.is_quantized_tree(eng.params)
+    assert eng.total_weight_syncs_quantized == 1
+    # mode change applies at the NEXT sync, with full-precision source
+    eng.set_quant_mode("off")
+    assert quant.is_quantized_tree(eng.params)   # unchanged until sync
+    eng.update_weights(params)
+    assert not quant.is_quantized_tree(eng.params)
+    assert eng.total_weight_syncs_quantized == 1
+
+
+def test_slot_engine_quantize_on_sync(api_params):
+    api, params = api_params
+    eng = DecodeEngine(api, params, num_slots=2, max_total_len=32,
+                       temperature=0.0, quant_mode="int8")
+    assert quant.is_quantized_tree(eng.params)
+    eng.add_request(1, PROMPT[:8], 6)
+    out = {}
+    for _ in range(50):
+        for rid, toks, _ in eng.step():
+            out[rid] = toks.tolist()
+        if not eng.slots:
+            break
+    assert len(out[1]) == 6
+    eng.set_quant_mode("fp8")
+    eng.update_weights(params)
+    assert quant.is_quantized_tree(eng.params)
+
+
+def test_proxy_stamps_quant_mode_and_stepstats_mix(api_params):
+    """Samples record the engine's quant_mode at admission; after a mid-run
+    set_quant_mode change StepStats reports the mixed-precision batch."""
+    api, params = api_params
+    eng = _make_engine(api, params, num_slots=2)
+    proxy = LLMProxy(eng).start()
+    results, lock = [], threading.Lock()
+
+    def submit():
+        t = RolloutTask(task_id=next_uid(), prompt_id=0, replica_idx=0,
+                        prompt_tokens=PROMPT[:6], max_new_tokens=3)
+        proxy.generate(t, version=0,
+                       callback=lambda r: (lock.acquire(), results.append(r),
+                                           lock.release()))
+        return t
+
+    t1 = submit()
+    deadline = time.monotonic() + 10
+    while len(results) < 1 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    eng.set_quant_mode("int8")     # engine-side knob; applies to stamps now
+    ev = proxy.update_weights_async(params)  # requantizes under the new mode
+    assert ev.wait(timeout=10)
+    t2 = submit()
+    while len(results) < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    proxy.stop()
+    assert len(results) == 2
+    stamps = {r.task.task_id: r.task.meta["quant_mode"] for r in results}
+    assert stamps[t1.task_id] == "off" and stamps[t2.task_id] == "int8"
+
+    # the controller surfaces the batch's precision mix
+    class _S:
+        def __init__(self, meta):
+            self.meta = meta
+    mix = AsyncController._quant_mix(
+        [_S({"quant_mode": "off"}), _S({"quant_mode": "int8"}),
+         _S({"quant_mode": "int8"}), _S({})])
+    assert mix == {"off": 2, "int8": 2}
+
+
+# --------------------------------------------------------------------- TIS
+
+def test_tis_clip_tightens_cap():
+    lp_t = jnp.array([[0.0, -1.0, -2.0]])
+    lp_r = jnp.array([[-3.0, -1.0, -0.5]])
+    base = engine_mismatch_weight(lp_t, lp_r, 5.0)
+    assert float(base[0, 0]) == 5.0
+    for w in (engine_mismatch_weight(lp_t, lp_r, 5.0, tis_clip=2.0),
+              engine_mismatch_weight(lp_t, lp_r, None, tis_clip=2.0)):
+        assert float(w.max()) <= 2.0
+        # below the cap the ratio passes through unchanged
+        np.testing.assert_allclose(np.asarray(w[0, 1:]),
+                                   np.asarray(base[0, 1:]), rtol=1e-6)
+    # a tis_clip looser than the cap defers to the cap
+    loose = engine_mismatch_weight(lp_t, lp_r, 5.0, tis_clip=10.0)
+    np.testing.assert_allclose(np.asarray(loose), np.asarray(base))
+
+
+def test_rl_loss_applies_tis_clip():
+    lp_t = jnp.array([[0.0, -1.0, -2.0]])
+    lp_r = jnp.array([[-3.0, -1.0, -0.5]])
+    batch = {"old_logprobs": lp_r, "prox_logprobs": lp_r,
+             "ref_logprobs": lp_r, "advantages": jnp.ones((1, 3)),
+             "mask": jnp.ones((1, 3)), "is_positive": jnp.ones((1,))}
+    l_cap, _ = rl_loss(lp_t, batch, LossConfig())
+    l_tis, _ = rl_loss(lp_t, batch, LossConfig(tis_clip=2.0))
+    # cap=None + tis_clip still applies the correction
+    l_only, _ = rl_loss(lp_t, batch,
+                        LossConfig(engine_mismatch_cap=None, tis_clip=2.0))
+    l_off, _ = rl_loss(lp_t, batch, LossConfig(engine_mismatch_cap=None))
+    assert float(l_tis) == float(l_only) != float(l_cap)
+    assert float(l_off) != float(l_only)
+
+
+def test_pipeline_threads_quant_knobs(api_params):
+    from repro.launch.pipeline import PipelineSettings, make_rollout_engine
+    api, params = api_params
+    s = PipelineSettings(rollout_quant="int8", kv_quant="int8", tis_clip=2.0,
+                         max_seq_len=64)
+    eng = make_rollout_engine(api, params, s)
+    assert eng.quant_mode == "int8" and eng.kv_quant == "int8"
+    with pytest.raises(ValueError, match="paged engine"):
+        make_rollout_engine(api, params,
+                            dataclasses.replace(s, rollout_engine="slot"))
+    slot = make_rollout_engine(api, params, dataclasses.replace(
+        s, rollout_engine="slot", kv_quant="off"))
+    assert slot.quant_mode == "int8"
