@@ -1,0 +1,251 @@
+"""Cross-replica KV page transfer + fleet-global cache-aware routing.
+
+Three deterministic measurements on the real rollout fleet (lockstep
+``step_once`` driving — makespan and prefill counts are placement facts,
+never wall clock):
+
+* **cache-aware vs load-only routing** — N=4 replicas, shared-preamble
+  traffic (one 48-token system prompt, unique suffixes).  Load-only
+  spreads the burst least-loaded, so every replica cold-prefills the
+  preamble once; the fleet-global prefix index instead routes follow-ups
+  to the replica already holding the preamble while loads allow, and
+  PULLS the preamble's pages across before admission when they don't.
+  Metric: total prefill tokens, load-only / cache-aware (≥ 1.15 required).
+  Greedy outputs must be byte-identical — routing is never semantic.
+* **migrated resume** — a decode parked by abort-with-retain on a
+  draining replica resumes on the other replica via the page-transfer
+  fast path: ZERO re-prefilled tokens, one batched device op per side
+  (no per-page dispatch), output byte-identical to uninterrupted.
+* **fork batching micro-check** — a COW group fork issues at most one
+  batched tail-copy device op per fork (``total_copy_ops`` ≤ forks) while
+  moving ≥ 1 page per op.
+
+Emits BENCH_page_transfer.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, flush_json
+from repro.configs import REGISTRY
+from repro.core.llm_proxy import LLMProxy
+from repro.core.router import ProxyRouter
+from repro.core.rollout_client import RolloutClient
+from repro.core.scheduler import expand_tasks
+from repro.core.types import RolloutTask, next_uid
+from repro.models import get_api
+from repro.rollout.paged_engine import PagedDecodeEngine
+
+NUM_REPLICAS = 4
+SLOTS_PER_REPLICA = 2
+PAGE_SIZE = 8
+PREFILL_CHUNK = 8
+MAX_TOTAL_LEN = 96
+NUM_REQUESTS = 32
+PRE_LEN = 48            # shared preamble (6 pages)
+SFX_LEN = 8             # distinct per-request suffix
+BUDGET = 6
+# load band: small enough that the preamble holder saturates and the miss
+# tier (least-loaded + pull) engages — both routing tiers are exercised
+AFFINITY_SLACK = 64
+
+
+def _fleet(api, params, n, **kw):
+    base = dict(num_slots=SLOTS_PER_REPLICA, max_total_len=MAX_TOTAL_LEN,
+                page_size=PAGE_SIZE, prefill_chunk=PREFILL_CHUNK,
+                eos_id=9999, temperature=0.0, prefix_cache=True)
+    base.update(kw)
+    engines = [PagedDecodeEngine(api, params, **base) for _ in range(n)]
+    return engines, [LLMProxy(e, name=f"pt_bench_{i}")
+                     for i, e in enumerate(engines)]
+
+
+def _task(prompt, budget):
+    return RolloutTask(task_id=next_uid(), prompt_id=0, replica_idx=0,
+                       prompt_tokens=np.asarray(prompt, np.int32),
+                       max_new_tokens=budget)
+
+
+def _workload(rng):
+    pre = rng.integers(1, 60, PRE_LEN).astype(np.int32)
+    return [np.concatenate([pre, rng.integers(1, 60, SFX_LEN)
+                            .astype(np.int32)]) for _ in range(NUM_REQUESTS)]
+
+
+def _pump(proxies, handles):
+    rounds = 0
+    while not all(h.done() for h in handles.values()):
+        if not any(p.step_once() for p in proxies):
+            raise AssertionError("fleet idle with undone handles")
+        rounds += 1
+    return rounds
+
+
+def _cache_routing(api, params, prompts, *, cache_aware: bool):
+    """Warm one replica with the first request, then dispatch the rest
+    gated on fleet slots (each placement sees live loads)."""
+    engines, proxies = _fleet(api, params, NUM_REPLICAS)
+    router = ProxyRouter(proxies, cache_aware=cache_aware,
+                         cache_affinity_slack=AFFINITY_SLACK)
+    client = RolloutClient(router)
+    handles = {0: client.submit(_task(prompts[0], BUDGET))}
+    rounds = _pump(proxies, handles)
+    todo = list(enumerate(prompts))[1:]
+    while todo or not all(h.done() for h in handles.values()):
+        submitted = False
+        while todo and (sum(not h.done() for h in handles.values())
+                        < NUM_REPLICAS * SLOTS_PER_REPLICA):
+            i, prompt = todo.pop(0)
+            handles[i] = client.submit(_task(prompt, BUDGET))
+            submitted = True
+        stepped = any(p.step_once() for p in proxies)
+        assert stepped or submitted, "fleet idle with undone handles"
+        rounds += 1
+    for e in engines:
+        e.audit_pages()
+    router.fleet_audit()
+    outputs = {i: list(h.result(0).tokens) for i, h in handles.items()}
+    return {
+        "makespan_rounds": rounds,
+        "prefill_tokens": sum(e.total_prefill_tokens for e in engines),
+        "cache_hit_tokens": sum(e.cache_hit_tokens for e in engines),
+        "cache_routed": router.cache_routed,
+        "cache_pulls": router.cache_pulls,
+        "pages_transferred": router.pages_transferred,
+        "transfer_bytes": router.transfer_bytes,
+        "transfer_device_ops": sum(e.transfer_device_ops for e in engines),
+    }, outputs
+
+
+def _migrated_resume(api, params):
+    """Drain the home replica mid-decode, abort-with-retain, and let the
+    client continuation migrate the parked pages to the other replica."""
+    prompt = np.asarray([2, 9, 4, 3, 7, 11, 5, 8, 6, 1], np.int32)
+    budget = 24
+
+    ref = PagedDecodeEngine(api, params, num_slots=1,
+                            max_total_len=MAX_TOTAL_LEN, page_size=PAGE_SIZE,
+                            prefill_chunk=PREFILL_CHUNK, eos_id=9999,
+                            temperature=0.0)
+    ref.add_request(0, prompt, budget)
+    base = None
+    while base is None:
+        for _rid, toks, _ in ref.step():
+            base = list(toks)
+
+    engines, proxies = _fleet(api, params, 2, prefix_cache=False)
+    router = ProxyRouter(proxies)
+    versions = [0]
+    client = RolloutClient(router, version_fn=lambda: versions[0])
+    h = client.submit(_task(prompt, budget), version=0)
+    while sum(e.total_tokens_decoded for e in engines) < 4:
+        any(p.step_once() for p in proxies)
+    home = 0 if engines[0].slots else 1
+    other = 1 - home
+    prefill_before = engines[other].total_prefill_tokens
+    versions[0] = 1
+    router.drain(home)
+    router.abort_stale(min_version=1, retain=True)
+    while not h.done():
+        if not any(p.step_once() for p in proxies):
+            raise AssertionError("fleet idle with migration pending")
+    res = h.result(0)
+    for e in engines:
+        e.audit_pages()
+    assert list(res.tokens) == base, "migrated resume changed greedy output"
+    reprefill = engines[other].total_prefill_tokens - prefill_before
+    return {
+        "reprefill_tokens": int(reprefill),
+        "pages_moved": engines[other].pages_transferred_in,
+        "transfer_bytes": engines[other].transfer_bytes_in,
+        "export_device_ops": engines[home].transfer_device_ops,
+        "import_device_ops": engines[other].transfer_device_ops,
+        "output_identical": list(res.tokens) == base,
+        "migrations": router.migrations,
+    }
+
+
+def _fork_batching(api, params):
+    """One COW group: the tail copy must be a single batched device op per
+    fork, never one dispatch per page."""
+    engines, proxies = _fleet(api, params, 1, num_slots=4,
+                              prefix_cache=False)
+    client = RolloutClient(ProxyRouter(proxies))
+    prompt = np.asarray([3, 1, 4, 1, 5, 9, 2, 6, 5, 3], np.int32)
+    gh = client.submit_group(expand_tasks(0, prompt, 4, 16, replicate=True))
+    handles = dict(enumerate(gh.handles))
+    _pump(proxies, handles)
+    e = engines[0]
+    e.audit_pages()
+    return {
+        "groups_forked": e.total_groups_forked,
+        "copy_ops": e.total_copy_ops,
+        "pages_copied": e.total_pages_copied,
+    }
+
+
+def run() -> None:
+    cfg = dataclasses.replace(
+        REGISTRY["qwen3-4b"].smoke(), num_layers=2, d_model=128, num_heads=4,
+        head_dim=32, num_kv_heads=2, d_ff=256, vocab_size=64)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    prompts = _workload(np.random.default_rng(0))
+
+    aware, out_aware = _cache_routing(api, params, prompts, cache_aware=True)
+    load, out_load = _cache_routing(api, params, prompts, cache_aware=False)
+    identical = out_aware == out_load
+    ratio = load["prefill_tokens"] / aware["prefill_tokens"]
+    results = {"cache_routing": {
+        "cache_aware": aware, "load_only": load,
+        "prefill_tokens_ratio": ratio,
+        "outputs_identical": bool(identical),
+    }}
+    emit("page_transfer.routing.prefill_tokens_ratio", ratio,
+         f"aware={aware['prefill_tokens']} load={load['prefill_tokens']} "
+         f"routed={aware['cache_routed']} pulls={aware['cache_pulls']} "
+         f"identical={identical}")
+    assert identical, "cache-aware routing changed greedy outputs"
+    assert ratio >= 1.15, \
+        f"cache-aware prefill reduction below 1.15x: {ratio:.3f}"
+    assert aware["cache_routed"] >= 1 and aware["cache_pulls"] >= 1, \
+        "both routing tiers must engage on this workload"
+    # no per-page dispatch: each pull is one export op + one import op
+    assert aware["transfer_device_ops"] <= 2 * aware["cache_pulls"]
+    assert aware["pages_transferred"] > aware["cache_pulls"], \
+        "pulls must batch multiple pages per device op"
+    assert load["cache_routed"] == 0 and load["pages_transferred"] == 0
+
+    mig = _migrated_resume(api, params)
+    results["migrated_resume"] = mig
+    emit("page_transfer.migrated_resume.reprefill_tokens",
+         mig["reprefill_tokens"],
+         f"pages={mig['pages_moved']} identical={mig['output_identical']}")
+    assert mig["reprefill_tokens"] == 0, \
+        "cross-replica migrated resume must re-prefill nothing"
+    assert mig["pages_moved"] > 1
+    assert mig["export_device_ops"] == 1 and mig["import_device_ops"] == 1, \
+        "retained transfer must be one batched device op per side"
+
+    fork = _fork_batching(api, params)
+    results["fork_batching"] = fork
+    emit("page_transfer.fork.copy_ops", fork["copy_ops"],
+         f"groups={fork['groups_forked']} pages={fork['pages_copied']}")
+    assert fork["copy_ops"] <= fork["groups_forked"], \
+        "fork tail copy must batch into one device op per fork"
+    assert fork["pages_copied"] >= fork["copy_ops"]
+
+    results["workload"] = {
+        "num_replicas": NUM_REPLICAS, "slots_per_replica": SLOTS_PER_REPLICA,
+        "num_requests": NUM_REQUESTS, "preamble_len": PRE_LEN,
+        "suffix_len": SFX_LEN, "budget": BUDGET, "page_size": PAGE_SIZE,
+        "cache_affinity_slack": AFFINITY_SLACK,
+    }
+    flush_json("BENCH_page_transfer.json", results)
+
+
+if __name__ == "__main__":
+    run()

@@ -11,6 +11,10 @@ metrics against the committed baselines:
                                     p99 latency, preemptive SLO vs FIFO)
 * ``BENCH_quant.json``            → ``effective_kv_capacity_ratio`` (int8 KV
                                     pages per byte vs bf16; pure dtype math)
+* ``BENCH_page_transfer.json``    → ``cache_routing.prefill_tokens_ratio``
+                                    (fleet-global cache-aware routing vs
+                                    load-only; migrated-resume re-prefill
+                                    must stay exactly zero)
 
 All these metrics are DETERMINISTIC (lockstep makespan rounds / prefill
 token counts — never wall clock), so a fresh run should reproduce the
@@ -30,6 +34,7 @@ import sys
 import jax
 import numpy as np
 
+from benchmarks import bench_page_transfer as pt
 from benchmarks import bench_prefix_cache as pc
 from benchmarks import bench_quant as bq
 from benchmarks import bench_queue_scheduling as qs
@@ -99,6 +104,22 @@ def fresh_kv_capacity_ratio() -> float:
     return w(ps, nkv, hd, "off") / w(ps, nkv, hd, "int8")
 
 
+def fresh_page_transfer_ratio() -> float:
+    """bench_page_transfer's routing comparison; the migrated-resume leg is
+    a hard invariant (exactly zero re-prefilled tokens), asserted here."""
+    api, params = _api_params()
+    prompts = pt._workload(np.random.default_rng(0))
+    aware, out_aware = pt._cache_routing(api, params, prompts,
+                                         cache_aware=True)
+    load, out_load = pt._cache_routing(api, params, prompts,
+                                       cache_aware=False)
+    assert out_aware == out_load, "cache-aware routing changed greedy outputs"
+    mig = pt._migrated_resume(api, params)
+    assert mig["reprefill_tokens"] == 0 and mig["output_identical"], \
+        "migrated resume must stay zero-re-prefill and byte-identical"
+    return load["prefill_tokens"] / aware["prefill_tokens"]
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--threshold", type=float, default=0.15,
@@ -113,11 +134,14 @@ def main() -> int:
         base_slo = json.load(f)
     with open("BENCH_quant.json") as f:
         base_quant = json.load(f)
+    with open("BENCH_page_transfer.json") as f:
+        base_pt = json.load(f)
 
     queue_speedup = fresh_queue_speedup()
     preamble_ratio, agentic_ratio = fresh_prefix_ratios()
     slo_ratio = fresh_slo_ratio()
     kv_capacity = fresh_kv_capacity_ratio()
+    page_transfer_ratio = fresh_page_transfer_ratio()
     checks = [
         ("queue_scheduling.replicas_2.queue_over_static_speedup",
          queue_speedup, base_qs["replicas_2"]["queue_over_static_speedup"]),
@@ -129,6 +153,9 @@ def main() -> int:
          slo_ratio, base_slo["p99_high_speedup_mean"]),
         ("quant.effective_kv_capacity_ratio",
          kv_capacity, base_quant["effective_kv_capacity_ratio"]),
+        ("page_transfer.cache_routing.prefill_tokens_ratio",
+         page_transfer_ratio,
+         base_pt["cache_routing"]["prefill_tokens_ratio"]),
     ]
 
     failed = False

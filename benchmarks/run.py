@@ -11,7 +11,8 @@ import argparse
 import time
 
 from benchmarks import (bench_engine, bench_fault_tolerance,
-                        bench_paged_engine, bench_prefix_cache,
+                        bench_page_transfer, bench_paged_engine,
+                        bench_prefix_cache,
                         bench_prefix_sharing, bench_quant,
                         bench_queue_scheduling,
                         bench_slo, fig1b_throughput_scaling,
@@ -36,6 +37,7 @@ MODULES = [
     ("prefix_sharing", bench_prefix_sharing),
     ("prefix_cache", bench_prefix_cache),
     ("queue_scheduling", bench_queue_scheduling),
+    ("page_transfer", bench_page_transfer),
     ("fault_tolerance", bench_fault_tolerance),
     ("slo", bench_slo),
     ("quant", bench_quant),

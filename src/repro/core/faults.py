@@ -253,6 +253,25 @@ class FaultyProxy:
         self._check()
         self.inner.release_retained(request_id)
 
+    def export_retained(self, request_id):
+        self._check()
+        return self.inner.export_retained(request_id)
+
+    def generate_transferred(self, task, version, callback, record,
+                             resume_from, **kw):
+        self._check()
+        return self.inner.generate_transferred(
+            task, version, self._guard(callback), record=record,
+            resume_from=resume_from, **kw)
+
+    def export_prefix(self, tokens, deliver):
+        self._check()
+        self.inner.export_prefix(tokens, deliver)
+
+    def import_prefix(self, record):
+        self._check()
+        self.inner.import_prefix(record)
+
     def suspend(self):
         self._check()
         self.inner.suspend()

@@ -245,6 +245,99 @@ class LLMProxy:
         self._commands.put(("ADD", req))
         return req.request_id
 
+    # ------------------------------------------- cross-replica page transfer
+    def export_retained(self, request_id: int) -> Optional[dict]:
+        """Host-side snapshot of a retained request's KV pages (for a
+        router-directed migration to another replica).  The engine is only
+        safe to touch from its own loop thread, so this degrades to None —
+        and the caller to the concat re-prefill path — when invoked from
+        anywhere else while the loop is running.  In practice migration runs
+        either on this proxy's loop thread (the abort callback chain) or on
+        the single driver thread of a lockstep fleet, so the fast path is
+        the common case."""
+        t = self._thread
+        if (t is not None and t.is_alive()
+                and threading.current_thread() is not t):
+            return None
+        export = getattr(self.engine, "export_retained", None)
+        return None if export is None else export(request_id)
+
+    def generate_transferred(self, task: RolloutTask, version: int,
+                             callback: Callable[[GenerationResult], None],
+                             record: dict, resume_from: int,
+                             stream_cb: Optional[Callable] = None) -> int:
+        """Submit a migrated continuation together with its exported KV
+        record as ONE command: the loop imports the pages and queues the
+        request as a resume — or, if the import is rejected at processing
+        time (pool pressure, quant mismatch), degrades it in place to a
+        plain re-prefill of ``task`` (which carries the full concatenated
+        prompt).  Either way the request is admitted exactly once and can
+        never hang on pages that failed to land."""
+        if self._slo is not None:
+            stamp_deadline(task, self._slo.clock())
+        req = GenerationRequest(request_id=task.task_id, task=task,
+                                version_started=version, callback=callback,
+                                resume_from=resume_from, stream_cb=stream_cb)
+        # charged as a resume (no prefill); _do_transfer adds the prompt
+        # back if the import fails and the request degrades to re-prefill.
+        self._load_add(req.request_id, task.max_new_tokens)
+        if self._thread is None or not self._thread.is_alive():
+            self._do_transfer(req, record)
+        else:
+            self._commands.put(("TRANSFER", (req, record)))
+        return req.request_id
+
+    def _do_transfer(self, req: GenerationRequest, record: dict) -> None:
+        imp = getattr(self.engine, "import_retained", None)
+        if imp is None or not imp(req.resume_from, record):
+            # degrade: the task already carries the concatenated prompt —
+            # admit it as a plain re-prefill and re-charge the prompt work.
+            req.resume_from = None
+            with self._load_lock:
+                extra = len(req.task.prompt_tokens)
+                self._load_by_rid[req.request_id] = \
+                    self._load_by_rid.get(req.request_id, 0) + extra
+                self._outstanding_tokens += extra
+        self._enqueue_pending(req)
+
+    def export_prefix(self, tokens, deliver: Callable[[Optional[dict]],
+                                                      None]) -> None:
+        """Snapshot this replica's cached prefix pages for ``tokens`` and
+        hand the record to ``deliver`` (which typically forwards it to
+        another proxy's ``import_prefix``).  Runs on the loop thread; fires
+        inline when the loop isn't started (lockstep fleets)."""
+        if self._thread is None or not self._thread.is_alive():
+            self._do_export_prefix(tokens, deliver)
+        else:
+            self._commands.put(("EXPORT_PREFIX", (tokens, deliver)))
+
+    def _do_export_prefix(self, tokens, deliver) -> None:
+        export = getattr(self.engine, "export_prefix", None)
+        deliver(None if export is None else export(tokens))
+
+    def import_prefix(self, record: dict) -> None:
+        """Admit a pulled prefix record into this replica's radix cache
+        (best-effort: the engine skips it under page pressure or across a
+        weight-epoch boundary)."""
+        if self._thread is None or not self._thread.is_alive():
+            imp = getattr(self.engine, "import_prefix", None)
+            if imp is not None:
+                imp(record)
+        else:
+            self._commands.put(("IMPORT_PREFIX", record))
+
+    @property
+    def pages_transferred(self) -> int:
+        eng = self.engine
+        return int(getattr(eng, "pages_transferred_in", 0)
+                   + getattr(eng, "pages_transferred_out", 0))
+
+    @property
+    def transfer_bytes(self) -> int:
+        eng = self.engine
+        return int(getattr(eng, "transfer_bytes_in", 0)
+                   + getattr(eng, "transfer_bytes_out", 0))
+
     def abort(self, request_id: int, retain: bool = False) -> None:
         self._commands.put(("ABORT", (request_id, retain)))
 
@@ -462,6 +555,16 @@ class LLMProxy:
                 release = getattr(self.engine, "release_retained", None)
                 if release is not None:
                     release(arg)
+            elif op == "TRANSFER":
+                req, record = arg
+                self._do_transfer(req, record)
+            elif op == "EXPORT_PREFIX":
+                tokens, deliver = arg
+                self._do_export_prefix(tokens, deliver)
+            elif op == "IMPORT_PREFIX":
+                imp = getattr(self.engine, "import_prefix", None)
+                if imp is not None:
+                    imp(arg)
             elif op == "UPDATE":
                 params, done = arg
                 self.engine.update_weights(params)

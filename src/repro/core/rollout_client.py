@@ -25,7 +25,9 @@ transparently re-admitted by the client: paged engines re-attach the
 retained KV pages (zero prefix re-prefill), slot engines re-prefill the
 concatenated prefix.  Behind a ``ProxyRouter`` fleet, a retained request
 whose home replica is draining or overloaded migrates to another replica
-instead (pages are released, the concatenated prefix re-prefills there).
+instead — the router TRANSFERS the parked pages to the target, which
+resumes at zero re-prefill too (only when the transfer can't run does the
+concatenated prefix re-prefill there).
 The handle resolves EXACTLY once, with the
 budget-clamped, logprob-stitched final result; ``result.legs`` tags each
 leg with the policy version it was decoded under (what IS-based off-policy
@@ -546,9 +548,12 @@ class RolloutClient:
         engines re-attach the retained pages (zero prefix re-prefill);
         others re-prefill the concatenated prefix.  Behind a fleet router,
         a resumable request whose home replica is draining or overloaded
-        (``prefer_resume`` → False) MIGRATES instead: its parked pages are
-        released and the concatenated prefix re-admits on another replica
-        (incremental there wherever the radix cache has seen it)."""
+        (``prefer_resume`` → False) MIGRATES instead: the router transfers
+        the parked pages to the target replica, which resumes at zero
+        re-prefill.  The concatenated task built here is the transfer's
+        fallback — when the pages can't move (crashed home, page pressure
+        on the target) the target re-prefills it, incremental wherever its
+        radix cache has seen the prefix."""
         new_rid = next_uid()
         version = self._version_fn()
         h._cur_rid = new_rid

@@ -17,14 +17,26 @@ replicas behind one object that speaks the exact ``LLMProxy`` protocol, so
   (COW prefix sharing is per-replica), and every turn of an agentic
   ``Session`` follows its predecessors (the radix prefix cache holding the
   conversation history is per-replica too).  Placement pins are LRU-capped.
-* **Cross-replica abort→resume migration** — retained KV pages cannot move
-  between replicas.  ``prefer_resume`` tells the RolloutClient whether an
-  aborted-with-retain request should re-attach in place (the cheap default)
-  or migrate; ``generate_migrated`` frees the parked pages on the home
-  replica and routes the client-built concatenated re-prefill to a
-  less-loaded one.  Migration triggers when the home replica is draining
-  (``drain()``), overloaded past ``migrate_factor``/``migrate_margin``, or
-  DEAD (its parked pages died with it).
+* **Cross-replica abort→resume migration** — ``prefer_resume`` tells the
+  RolloutClient whether an aborted-with-retain request should re-attach in
+  place (the cheap default) or migrate.  ``generate_migrated`` moves the
+  parked KV pages themselves: the home replica exports them to a host-side
+  record (``export_retained``), the target imports them and resumes with
+  ZERO re-prefill (``generate_transferred``), and only when the transfer
+  can't run (dead home, page pressure on the target, quant mismatch) does
+  it degrade to the client-built concatenated re-prefill.  Migration
+  triggers when the home replica is draining (``drain()``), overloaded
+  past ``migrate_factor``/``migrate_margin``, or DEAD (its parked pages
+  died with it — a crash is the one case that still re-prefills).
+* **Cache-aware routing** (``cache_aware=True``) — a router-owned
+  ``FleetRadixIndex`` mirrors every replica's radix prefix cache
+  (maintained push-style from insert/evict/clear events), making placement
+  two-tier: a request routes to the replica holding its longest cached
+  prefix when that replica's load is within ``cache_affinity_slack``
+  tokens of the fleet minimum, otherwise it routes least-loaded and the
+  prefix pages are PULLED across (``export_prefix``/``import_prefix``)
+  before admission.  ``fleet_audit`` cross-checks the index against every
+  live replica's local tree.
 * **Replica lifecycle & crash failover** — every replica carries a state
   (``healthy``/``draining``/``dead``/``retired``).  Death is detected by
   the ``healthy()`` heartbeat probe (``probe_health`` — poll it, or run
@@ -59,7 +71,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
-from repro.analysis.sanitizer import new_condition, new_rlock
+from repro.analysis.sanitizer import new_condition, new_lock, new_rlock
 from repro.core.faults import ReplicaDeadError
 from repro.core.llm_proxy import LLMProxy
 from repro.core.slo import SLOConfig, stamp_deadline
@@ -73,6 +85,10 @@ from repro.core.types import (PRIORITY_NORMAL, GenerationResult, Rejected,
 #   reverse never happens — the router notifies sync waiters OUTSIDE _lock)
 # lock-order: ProxyRouter._lock -> LLMProxy._load_lock
 #   (_place queries replica load()/can_accept() while holding the router lock)
+# lock-order: ProxyRouter._lock -> FleetRadixIndex._lock
+#   (_place queries best_prefix under the router lock; index listeners fire
+#   from replica loop threads holding no other lock, and the index never
+#   calls out while holding its own lock)
 
 # group/session placement memory; old pins evict LRU (a group whose pin
 # evicted mid-flight merely loses co-location for later members, never
@@ -179,6 +195,148 @@ class AutoscalePolicy:
     cooldown: int = 2            # ticks after any action with no new action
 
 
+class _IndexNode:
+    """One page-granular node of the fleet index: which replicas cache the
+    page whose content address is the path to this node."""
+    __slots__ = ("children", "replicas")
+
+    def __init__(self):
+        self.children: Dict[tuple, "_IndexNode"] = {}
+        self.replicas: set = set()
+
+
+class _ReplicaCacheListener:
+    """Adapter bound to one replica: forwards its ``RadixCache``
+    insert/evict/clear events into the router's fleet index.  Fires on the
+    replica's loop thread; the index does its own locking."""
+    __slots__ = ("index", "idx")
+
+    def __init__(self, index: "FleetRadixIndex", idx: int):
+        self.index = index
+        self.idx = idx
+
+    def on_insert(self, path: tuple) -> None:
+        self.index.on_insert(self.idx, path)
+
+    def on_evict(self, path: tuple) -> None:
+        self.index.on_evict(self.idx, path)
+
+    def on_clear(self) -> None:
+        self.index.on_clear(self.idx)
+
+
+class FleetRadixIndex:
+    """Router-owned map of token-content prefixes → the replicas caching
+    them: the fleet-global view of every replica's local radix prefix
+    cache, maintained push-style from insert/evict/clear events.
+
+    Content-addressed exactly like ``RadixCache``: one node per full page,
+    keyed by that page's token tuple, so ``best_prefix`` answers "who holds
+    the longest cached prefix of this prompt" in one walk.  Placement uses
+    it for the cache-affinity tier and for picking pull sources.  The index
+    holds NO page references — it is purely a map, kept honest against the
+    local trees by ``fleet_audit``.
+
+    Every method takes only the index's own lock and never calls out under
+    it; see the declared ``ProxyRouter._lock -> FleetRadixIndex._lock``
+    edge for how it composes with placement."""
+
+    def __init__(self):
+        self._lock = new_lock("FleetRadixIndex._lock")
+        self._root = _IndexNode()          # guarded-by: _lock
+        # all replicas of a fleet share one page size; recorded at attach
+        self.page_size: Optional[int] = None
+        self.inserts = 0                   # guarded-by: _lock
+        self.evictions = 0                 # guarded-by: _lock
+        self.clears = 0                    # guarded-by: _lock
+
+    # ------------------------------------------------------ event ingestion
+    def on_insert(self, replica: int, path: tuple) -> None:
+        with self._lock:
+            node = self._root
+            for key in path:
+                child = node.children.get(key)
+                if child is None:
+                    child = _IndexNode()
+                    node.children[key] = child
+                node = child
+            node.replicas.add(replica)
+            self.inserts += 1
+
+    def on_evict(self, replica: int, path: tuple) -> None:
+        with self._lock:
+            chain = [self._root]
+            node = self._root
+            for key in path:
+                node = node.children.get(key)
+                if node is None:
+                    return
+                chain.append(node)
+            node.replicas.discard(replica)
+            self.evictions += 1
+            # prune replica-less childless tails: the index tracks the
+            # union of live caches, not their history
+            for i in range(len(chain) - 1, 0, -1):
+                n = chain[i]
+                if n.children or n.replicas:
+                    break
+                del chain[i - 1].children[path[i - 1]]
+
+    def on_clear(self, replica: int) -> None:
+        with self._lock:
+            self._scrub(self._root, replica)
+            self.clears += 1
+
+    def drop_replica(self, replica: int) -> None:
+        """Forget everything a dead/retired replica cached."""
+        with self._lock:
+            self._scrub(self._root, replica)
+
+    def _scrub(self, node: _IndexNode, replica: int) -> None:
+        # holds: _lock
+        for key in list(node.children):
+            child = node.children[key]
+            child.replicas.discard(replica)
+            self._scrub(child, replica)
+            if not child.replicas and not child.children:
+                del node.children[key]
+
+    # -------------------------------------------------------------- queries
+    def best_prefix(self, tokens) -> Dict[int, int]:
+        """replica → cached prefix length in TOKENS (page-aligned) for this
+        prompt.  Each replica reports the deepest node it holds along the
+        walk; replicas caching nothing of the prompt are absent."""
+        ps = self.page_size
+        if ps is None:
+            return {}
+        out: Dict[int, int] = {}
+        with self._lock:
+            node = self._root
+            for i in range(len(tokens) // ps):
+                key = tuple(int(t) for t in tokens[i * ps:(i + 1) * ps])
+                node = node.children.get(key)
+                if node is None:
+                    break
+                for r in node.replicas:
+                    out[r] = (i + 1) * ps
+        return out
+
+    def paths_for(self, replica: int) -> set:
+        """Every content path the index attributes to ``replica`` — the
+        ``fleet_audit`` cross-check against the replica's local tree."""
+        out: set = set()
+        with self._lock:
+            stack: List[tuple] = [(self._root, ())]
+            while stack:
+                node, prefix = stack.pop()
+                for key, child in node.children.items():
+                    p = prefix + (key,)
+                    if replica in child.replicas:
+                        out.add(p)
+                    stack.append((child, p))
+        return out
+
+
 @dataclasses.dataclass
 class _Home:
     """Per-request routing record: where it lives, and everything needed
@@ -209,13 +367,27 @@ class ProxyRouter:
                  migrate_margin_tokens: int = 128,
                  replica_factory: Optional[Callable[[], LLMProxy]] = None,
                  autoscale: Optional[AutoscalePolicy] = None,
-                 slo: Optional[SLOConfig] = None):
+                 slo: Optional[SLOConfig] = None,
+                 cache_aware: bool = False,
+                 cache_affinity_slack: int = 256,
+                 cache_pull: bool = True,
+                 page_transfer: bool = True):
         assert proxies, "router needs at least one replica"
         self.proxies = list(proxies)
         self.migrate_factor = migrate_factor
         self.migrate_margin_tokens = migrate_margin_tokens
         self.replica_factory = replica_factory
         self.autoscale = autoscale
+        # cache-aware routing: a fleet-global prefix index makes placement
+        # two-tier (affinity within the slack band, else least-loaded with
+        # an optional prefix pull); page_transfer moves retained pages on
+        # migration instead of re-prefilling the concatenated prompt.
+        self.cache_aware = cache_aware
+        self.cache_affinity_slack = cache_affinity_slack
+        self.cache_pull = cache_pull
+        self.page_transfer = page_transfer
+        self.fleet_index: Optional[FleetRadixIndex] = \
+            FleetRadixIndex() if cache_aware else None
         # SLO front door: queue bounds are enforced HERE fleet-wide (the
         # replicas behind a router carry an admission-stripped copy — see
         # slo.without_admission); preemption/watchdog run on the replicas.
@@ -263,6 +435,26 @@ class ProxyRouter:
         self.replicas_added = 0                # guarded-by: _lock
         self.scale_ups = 0                     # guarded-by: _lock
         self.scale_downs = 0                   # guarded-by: _lock
+        self.cache_routed = 0                  # guarded-by: _lock — affinity-tier placements
+        self.cache_pulls = 0                   # guarded-by: _lock — prefix pulls initiated
+        self.pages_transferred = 0             # guarded-by: _lock — cross-replica pages moved
+        self.transfer_bytes = 0                # guarded-by: _lock
+        if self.fleet_index is not None:
+            for i, p in enumerate(self.proxies):
+                self._attach_index(i, p)
+
+    def _attach_index(self, idx: int, proxy) -> None:
+        """Subscribe the fleet index to a replica's radix-cache events —
+        and seed it with anything already cached (warm ``add_replica``)."""
+        if self.fleet_index is None:
+            return
+        cache = getattr(getattr(proxy, "engine", None), "prefix_cache", None)
+        if cache is None or not hasattr(cache, "paths"):
+            return
+        self.fleet_index.page_size = cache.page_size
+        cache.listener = _ReplicaCacheListener(self.fleet_index, idx)
+        for path in cache.paths():
+            self.fleet_index.on_insert(idx, path)
 
     # ---------------------------------------------------------- lifecycle
     def _down(self) -> set:
@@ -381,6 +573,8 @@ class ProxyRouter:
             self._draining.discard(idx)
             self._scaledown_pending.discard(idx)
             self.replicas_failed += 1
+            if self.fleet_index is not None:
+                self.fleet_index.drop_replica(idx)
             fail: List[tuple] = []
             for rid, rec in list(self._home.items()):
                 if rec.idx != idx:
@@ -433,6 +627,7 @@ class ProxyRouter:
             self.proxies.append(proxy)
             self.replicas_added += 1
             started = self._started
+        self._attach_index(idx, proxy)
         if started:
             proxy.start()
         return idx
@@ -447,6 +642,8 @@ class ProxyRouter:
             self._draining.discard(idx)
             self._scaledown_pending.discard(idx)
             self.scale_downs += 1
+            if self.fleet_index is not None:
+                self.fleet_index.drop_replica(idx)
         self.proxies[idx].stop()
         self._notify_sync_waiters()     # retired == down for sync waivers
 
@@ -540,12 +737,23 @@ class ProxyRouter:
 
     def _place(self, task: RolloutTask, *,
                exclude: Optional[int] = None) -> int:
+        return self._place_with_pull(task, exclude=exclude)[0]
+
+    def _place_with_pull(self, task: RolloutTask, *,
+                         exclude: Optional[int] = None) -> tuple:
         """Pick the replica for a new submission: sessions stay where
         their radix-cached history lives, GRPO groups stay co-located,
         everything else goes least-outstanding-tokens.  A pin is honored
         only while the pinned replica can still EVER take the request —
         a session whose conversation outgrew its home's capacity (or whose
-        home died) re-places (and re-pins) instead of queueing there."""
+        home died) re-places (and re-pins) instead of queueing there.
+
+        With ``cache_aware``, unpinned placement is two-tier: the replica
+        holding the request's longest indexed prefix wins while its load
+        is within ``cache_affinity_slack`` tokens of the fleet minimum;
+        otherwise least-loaded wins and the second element of the returned
+        ``(idx, pull_src)`` names a replica whose cached prefix should be
+        pulled to ``idx`` before admission (None = no pull)."""
         plen = len(task.prompt_tokens)
         with self._lock:
             down = self._dead | self._retired
@@ -557,7 +765,7 @@ class ProxyRouter:
                         and self.proxies[idx].can_accept(
                             plen, task.max_new_tokens):
                     self.routed += 1
-                    return idx
+                    return idx, None
             gid = task.group_id
             if gid is not None and gid >= 0:
                 idx = self._group_home.get(gid)
@@ -566,7 +774,7 @@ class ProxyRouter:
                         and self.proxies[idx].can_accept(
                             plen, task.max_new_tokens):
                     self.routed += 1
-                    return idx
+                    return idx, None
             cands = [i for i in self._alive()
                      if self.proxies[i].can_accept(plen,
                                                    task.max_new_tokens)]
@@ -577,13 +785,40 @@ class ProxyRouter:
                     f"no replica can accept prompt_len={plen} "
                     f"max_new_tokens={task.max_new_tokens} (fleet of "
                     f"{len(self.proxies)}; shard capacity too small?)")
-            idx = min(cands, key=lambda i: (self.proxies[i].load(), i))
+            pull_src: Optional[int] = None
+            prefix: Dict[int, int] = {}
+            if self.fleet_index is not None and plen > 1:
+                # admission matches at most plen-1 tokens (the final token
+                # always prefills for first logits) — query the same span
+                prefix = self.fleet_index.best_prefix(
+                    task.prompt_tokens[:plen - 1])
+            if prefix:
+                min_load = min(self.proxies[i].load() for i in cands)
+                band = min_load + self.cache_affinity_slack
+                affine = [i for i in cands if prefix.get(i, 0) > 0
+                          and self.proxies[i].load() <= band]
+                if affine:
+                    # longest cached prefix wins inside the slack band
+                    idx = max(affine, key=lambda i: (
+                        prefix[i], -self.proxies[i].load(), -i))
+                    self.cache_routed += 1
+                else:
+                    idx = min(cands, key=lambda i: (self.proxies[i].load(), i))
+                    if self.cache_pull:
+                        have = prefix.get(idx, 0)
+                        srcs = [(n, -i) for i, n in prefix.items()
+                                if i != idx and i not in down and n > have]
+                        if srcs:
+                            pull_src = -max(srcs)[1]
+                            self.cache_pulls += 1
+            else:
+                idx = min(cands, key=lambda i: (self.proxies[i].load(), i))
             if sid is not None:
                 self._pin(self._session_home, sid, idx)
             if gid is not None and gid >= 0:
                 self._pin(self._group_home, gid, idx)
             self.routed += 1
-            return idx
+            return idx, pull_src
 
     def _register(self, idx: int, rids, callback: Callable,
                   version: int) -> None:
@@ -711,7 +946,9 @@ class ProxyRouter:
             return rejected_ids if n > 1 else rejected_ids[0]
         kw = {"stream_cb": stream_cb} if stream_cb is not None else {}
         while True:
-            idx = self._place(task)
+            idx, pull_src = self._place_with_pull(task)
+            if pull_src is not None:
+                self._execute_pull(pull_src, idx, task.prompt_tokens)
             try:
                 rids = self.proxies[idx].generate(
                     task, version, self._tracked(idx, callback, version),
@@ -721,6 +958,37 @@ class ProxyRouter:
                 continue
             self._register(idx, rids, callback, version)
             return rids
+
+    def _execute_pull(self, src: int, dst: int, tokens) -> None:
+        """Pull ``src``'s cached prefix pages for ``tokens`` into ``dst``'s
+        radix cache ahead of the request's admission there.  Best-effort on
+        both sides: the source exports whatever it still caches and the
+        target skips the import under page pressure or across a weight
+        epoch — and with threaded loops a pull landing mid-prefill is still
+        adopted at the next page boundary (the engine's cached-prefix
+        extension probe).  Runs OUTSIDE the router lock; ``deliver`` fires
+        on the source's loop thread."""
+        export = getattr(self.proxies[src], "export_prefix", None)
+        imp = getattr(self.proxies[dst], "import_prefix", None)
+        if export is None or imp is None:
+            return
+
+        def deliver(record: Optional[dict]) -> None:
+            if record is None:
+                return
+            try:
+                imp(record)
+            except ReplicaDeadError:
+                return
+            t = record["transfer"]
+            with self._lock:
+                self.pages_transferred += t.num_pages
+                self.transfer_bytes += t.nbytes
+
+        try:
+            export(tokens, deliver)
+        except ReplicaDeadError:
+            self.mark_dead(src)
 
     def generate_group(self, tasks: List[RolloutTask], version: int,
                        callback: Callable[[GenerationResult], None]) -> List[int]:
@@ -821,21 +1089,40 @@ class ProxyRouter:
                           callback: Callable[[GenerationResult], None],
                           release_from: int,
                           stream_cb: Optional[Callable] = None) -> int:
-        """Cross-replica abort→resume migration.  Retained KV pages cannot
-        move between replicas: free them on the home replica and route the
-        client-built concatenated re-prefill (original prompt + decoded
-        prefix) to a less-loaded one.  The target's radix cache makes any
-        prefix it has seen before incremental.  A migrated session re-pins
-        to the target so its later turns find the freshly cached context.
+        """Cross-replica abort→resume migration, zero-re-prefill where
+        possible.  The home replica's parked pages are exported to a
+        host-side record, the target imports them and resumes the request
+        in place — no token of the decoded prefix is recomputed.  When the
+        transfer can't run (home dead/lost, loop-thread ownership, or the
+        target rejects the import under page pressure / quant mismatch)
+        the flow degrades to the previous behavior: route the client-built
+        concatenated re-prefill (``task`` carries it in full) and let the
+        target's radix cache make any previously seen prefix incremental.
+        A migrated session re-pins to the target so its later turns find
+        the freshly cached context.
 
         Placement is confirmed BEFORE the parked pages are released: when
         no replica can take the (grown) concatenated prompt this raises
         with the pages still retained, and the RolloutClient falls back to
-        resuming in place.  Pages that died with a crashed replica
-        (``_lost_retained``) have nothing left to release."""
+        resuming in place.  The export is a host-side COPY, so releasing
+        home's pages right after placement is safe regardless of when the
+        target processes the import.  Pages that died with a crashed
+        replica (``_lost_retained``) have nothing left to export or
+        release."""
         with self._lock:
             rec = self._home.get(release_from)
             home = rec.idx if rec is not None else None
+            lost_now = release_from in self._lost_retained
+        record = None
+        if (self.page_transfer and home is not None and not lost_now
+                and home not in self._down()):
+            export = getattr(self.proxies[home], "export_retained", None)
+            if export is not None:
+                try:
+                    record = export(release_from)
+                except ReplicaDeadError:
+                    self.mark_dead(home)
+                    record = None
         idx = self._place(task, exclude=home)     # may raise: nothing freed
         with self._lock:
             self._home.pop(release_from, None)
@@ -857,9 +1144,20 @@ class ProxyRouter:
         kw = {"stream_cb": stream_cb} if stream_cb is not None else {}
         while True:
             try:
-                rid = self.proxies[idx].generate(
-                    task, version, self._tracked(idx, callback, version),
-                    **kw)
+                transferred = getattr(self.proxies[idx],
+                                      "generate_transferred", None)
+                if record is not None and transferred is not None:
+                    rid = transferred(
+                        task, version, self._tracked(idx, callback, version),
+                        record=record, resume_from=release_from, **kw)
+                    t = record["transfer"]
+                    with self._lock:
+                        self.pages_transferred += t.num_pages
+                        self.transfer_bytes += t.nbytes
+                else:
+                    rid = self.proxies[idx].generate(
+                        task, version, self._tracked(idx, callback, version),
+                        **kw)
             except ReplicaDeadError:
                 self.mark_dead(idx)
                 idx = self._place(task, exclude=home)
@@ -996,6 +1294,20 @@ class ProxyRouter:
             audit = getattr(self.proxies[i].engine, "audit_pages", None)
             if audit is not None:
                 audit()
+        # fleet index ↔ local radix trees: the index must attribute to each
+        # live replica EXACTLY the content paths its local cache holds — no
+        # stale entries surviving evictions or weight-sync flushes, nothing
+        # cached that placement can't see.
+        if self.fleet_index is not None:
+            for i in self._live():
+                cache = getattr(self.proxies[i].engine, "prefix_cache", None)
+                if cache is None or not hasattr(cache, "paths"):
+                    continue
+                local = set(cache.paths())
+                indexed = self.fleet_index.paths_for(i)
+                assert local == indexed, (
+                    f"fleet index out of sync for replica {i}: "
+                    f"missing={local - indexed} stale={indexed - local}")
 
     # -------------------------------------------------------------- metrics
     def load(self) -> int:
@@ -1112,5 +1424,7 @@ class ProxyRouter:
             "aborted": p.requests_aborted,
             "oldest_active_version": p.oldest_active_version,
             "cache_hit_tokens": p.cache_hit_tokens,
+            "pages_transferred": int(getattr(p, "pages_transferred", 0)),
+            "transfer_bytes": int(getattr(p, "transfer_bytes", 0)),
             "draining": self.replica_state(i) == "draining",
         } for i, p in enumerate(self.proxies)]

@@ -95,6 +95,16 @@ class PipelineSettings:
     # in-flight work failed over without waiting for a dispatch to hit
     # them.  0 (default) relies on dispatch-time detection only.
     health_probe_interval: float = 0.0
+    # fleet-global prefix cache (N >= 2 fleets with a prefix cache):
+    # cache_aware_routing arms the router's FleetRadixIndex — placement
+    # routes to the replica holding a prompt's longest cached prefix when
+    # its load is within cache_affinity_slack tokens of the fleet minimum,
+    # otherwise least-loaded wins and the prefix pages are pulled across
+    # before admission (cache_pull).  Cross-replica migration always moves
+    # retained pages when it can (page-transfer fast path).
+    cache_aware_routing: bool = True
+    cache_affinity_slack: int = 256
+    cache_pull: bool = True
     # --- SLO layer (admission control / preemption / watchdog) ---
     # slo_enabled arms the layer; all numeric knobs use 0 = off/unbounded.
     # Queue bounds are enforced fleet-wide at the router front door (replicas
@@ -209,8 +219,11 @@ def make_rollout_fleet(api, params, s: PipelineSettings,
     policy = AutoscalePolicy(
         min_replicas=max(1, s.autoscale_min_replicas),
         max_replicas=s.autoscale_max_replicas) if elastic else None
-    return engines, proxies, ProxyRouter(proxies, replica_factory=factory,
-                                         autoscale=policy, slo=slo)
+    return engines, proxies, ProxyRouter(
+        proxies, replica_factory=factory, autoscale=policy, slo=slo,
+        cache_aware=s.cache_aware_routing and s.prefix_cache != "off",
+        cache_affinity_slack=s.cache_affinity_slack,
+        cache_pull=s.cache_pull)
 
 
 @dataclasses.dataclass

@@ -92,6 +92,17 @@ def main() -> None:
                     help="truncated-IS cap on the train/rollout engine "
                          "mismatch ratio (FlashRL); 0 = off, typical "
                          "quantized setting: 2.0")
+    ap.add_argument("--cache-aware", dest="cache_aware", default=True,
+                    action="store_true",
+                    help="fleet-global prefix index: route to the replica "
+                         "holding a prompt's longest cached prefix when "
+                         "loads allow, pull pages across otherwise (default)")
+    ap.add_argument("--no-cache-aware", dest="cache_aware",
+                    action="store_false",
+                    help="disable cache-aware routing (pure least-loaded)")
+    ap.add_argument("--cache-affinity-slack", type=int, default=256,
+                    help="load band (tokens over the fleet minimum) within "
+                         "which the prefix-holding replica wins placement")
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--seed", type=int, default=0)
@@ -115,6 +126,8 @@ def main() -> None:
         rollout_quant=args.rollout_quant,
         kv_quant=args.kv_quant,
         tis_clip=args.tis_clip,
+        cache_aware_routing=args.cache_aware,
+        cache_affinity_slack=args.cache_affinity_slack,
         max_new_tokens=args.max_new_tokens,
         max_seq_len=32,
         learning_rate=args.lr,
@@ -148,6 +161,10 @@ def main() -> None:
               f"alive={r.replicas_alive} added={r.replicas_added} "
               f"failed={r.replicas_failed} failovers={r.failovers} "
               f"lost_tokens={r.lost_tokens} migrations={r.migrations}")
+        print(f"[train] fleet cache: cache_routed={r.cache_routed} "
+              f"cache_pulls={r.cache_pulls} "
+              f"pages_transferred={r.pages_transferred} "
+              f"transfer_bytes={r.transfer_bytes}")
     if args.slo and stats:
         last = stats[-1]
         print(f"[train] slo: deadline_misses={last.deadline_misses} "

@@ -217,6 +217,13 @@ class RadixCache:
         self.pool = pool
         self.page_size = pool.page_size
         self.root = _RadixNode(key=None, page=-1, parent=None, last_used=0)
+        # Optional observer of tree mutations (duck-typed: ``on_insert(path)``
+        # per new node, ``on_evict(path)`` per dropped node, ``on_clear()``
+        # on flush; ``path`` = tuple of page keys root→node).  The fleet
+        # router hangs its global prefix index here.  Callbacks fire on the
+        # replica's own loop thread with no cache-side lock held — the
+        # listener does its own synchronization.
+        self.listener = None
         self._clock = 0
         self.lookups = 0          # admission-time matches
         self.hits = 0             # admission-time matches that returned pages
@@ -292,8 +299,10 @@ class RadixCache:
         node = self.root
         stamp = self._tick()
         new = 0
+        path: List[tuple] = []
         for i, page in enumerate(pages):
             key = self._page_key(tokens, i)
+            path.append(key)
             child = node.children.get(key)
             if child is None:
                 child = _RadixNode(key=key, page=int(page), parent=node,
@@ -302,6 +311,8 @@ class RadixCache:
                 self.pool.share([int(page)])
                 self.inserted_pages += 1
                 new += 1
+                if self.listener is not None:
+                    self.listener.on_insert(tuple(path))
             else:
                 child.last_used = stamp
             node = child
@@ -328,6 +339,8 @@ class RadixCache:
         while freed < want_pages and heap:
             _, _, leaf = heapq.heappop(heap)
             parent = leaf.parent
+            if self.listener is not None:
+                self.listener.on_evict(self._node_path(leaf))
             del parent.children[leaf.key]
             self.pool.release([leaf.page])
             self.evicted_pages += 1
@@ -350,6 +363,31 @@ class RadixCache:
                 self.pool.release([c.page])
         self.root.children = {}
         self.flushes += 1
+        if self.listener is not None:
+            self.listener.on_clear()
+
+    # ---------------------------------------------------------- enumeration
+    @staticmethod
+    def _node_path(node: _RadixNode) -> tuple:
+        """Tuple of page keys root→``node`` (the node's content address)."""
+        keys = []
+        while node is not None and node.parent is not None:
+            keys.append(node.key)
+            node = node.parent
+        return tuple(reversed(keys))
+
+    def paths(self) -> List[tuple]:
+        """Every node's root path — the cache's full content listing, used
+        by ``fleet_audit`` to cross-check the router's global index."""
+        out: List[tuple] = []
+        stack: List[Tuple[_RadixNode, tuple]] = [(self.root, ())]
+        while stack:
+            n, prefix = stack.pop()
+            for c in n.children.values():
+                p = prefix + (c.key,)
+                out.append(p)
+                stack.append((c, p))
+        return out
 
     # ------------------------------------------------------------ counters
     @property
@@ -447,6 +485,85 @@ def gather_request_view(layer_pages, block_row):
         v = v.astype(jnp.float32) * v_scales[idx].reshape(-1, nkv)[..., None]
     valid = jnp.repeat(block_row >= 0, page_size)
     return k, v, valid
+
+
+class PageTransfer(NamedTuple):
+    """Host-side buffer of extracted physical pages — the unit of
+    cross-replica KV movement.
+
+    Holds the raw page contents for every layer (int8 codes under
+    ``kv_quant="int8"``, the residual dtype otherwise) **plus the
+    per-(page, slot, kv-head) fp32 scales** when quantized: a page without
+    its scales dequantizes to garbage, so the scales travel in the same
+    buffer and re-admit in the same scatter.  Shapes mirror the pool with
+    the page axis narrowed to the extracted set::
+
+        k / v           : (num_layers, n, page_size, n_kv, head_dim)
+        k/v_scales      : (num_layers, n, page_size, n_kv)   (int8 only)
+    """
+
+    k: np.ndarray
+    v: np.ndarray
+    k_scales: Optional[np.ndarray] = None
+    v_scales: Optional[np.ndarray] = None
+
+    @property
+    def num_pages(self) -> int:
+        return int(self.k.shape[1])
+
+    @property
+    def nbytes(self) -> int:
+        n = self.k.nbytes + self.v.nbytes
+        if self.k_scales is not None:
+            n += self.k_scales.nbytes + self.v_scales.nbytes
+        return n
+
+
+def export_pages(cache: PagedKVCache, pages) -> PageTransfer:
+    """Extract physical pages into one host-side ``PageTransfer``.
+
+    One batched gather per tensor (``cache.k_pages[:, idx]``) followed by a
+    single ``jax.device_get`` of the whole bundle — never a per-page
+    dispatch.  Device→host→device is the portable route today; on
+    multi-device topologies the same buffers can ride ``jax.device_put``
+    P2P without changing callers."""
+    idx = jnp.asarray(pages, jnp.int32)
+    if cache.k_scales is None:
+        k, v = jax.device_get((cache.k_pages[:, idx], cache.v_pages[:, idx]))
+        return PageTransfer(k=np.asarray(k), v=np.asarray(v))
+    k, v, ks, vs = jax.device_get(
+        (cache.k_pages[:, idx], cache.v_pages[:, idx],
+         cache.k_scales[:, idx], cache.v_scales[:, idx]))
+    return PageTransfer(k=np.asarray(k), v=np.asarray(v),
+                        k_scales=np.asarray(ks), v_scales=np.asarray(vs))
+
+
+def import_pages(cache: PagedKVCache, dst_pages,
+                 transfer: PageTransfer) -> PagedKVCache:
+    """Re-admit an exported buffer into this pool's ``dst_pages``.
+
+    The mirror of :func:`export_pages`: one batched scatter per tensor
+    (the ``copy_pages`` idiom with a host-side source), scales included —
+    an imported page dequantizes byte-identically to its source pool's
+    copy.  ``len(dst_pages)`` must equal ``transfer.num_pages``; the
+    source and destination pools must agree on quantization mode."""
+    dst = jnp.asarray(dst_pages, jnp.int32)
+    if dst.shape[0] != transfer.num_pages:
+        raise ValueError(
+            f"import of {transfer.num_pages} pages into {dst.shape[0]} slots")
+    if (cache.k_scales is None) != (transfer.k_scales is None):
+        raise ValueError("kv_quant mismatch between transfer and pool")
+    k = cache.k_pages.at[:, dst].set(
+        jnp.asarray(transfer.k, cache.k_pages.dtype))
+    v = cache.v_pages.at[:, dst].set(
+        jnp.asarray(transfer.v, cache.v_pages.dtype))
+    if cache.k_scales is None:
+        return PagedKVCache(k_pages=k, v_pages=v)
+    ks = cache.k_scales.at[:, dst].set(
+        jnp.asarray(transfer.k_scales, jnp.float32))
+    vs = cache.v_scales.at[:, dst].set(
+        jnp.asarray(transfer.v_scales, jnp.float32))
+    return PagedKVCache(k_pages=k, v_pages=v, k_scales=ks, v_scales=vs)
 
 
 def copy_pages(cache: PagedKVCache, src, dst) -> PagedKVCache:

@@ -182,9 +182,20 @@ class PagedDecodeEngine:
         self.total_prefill_chunks = 0
         self.total_prefill_tokens = 0
         self.total_groups_forked = 0
+        # batched-dispatch accounting: fork tail copies and cross-replica
+        # transfers each issue ONE gather/scatter device call per request —
+        # ops counters stay O(requests) while page counters grow O(pages).
+        self.total_copy_ops = 0          # batched fork-tail device copies
+        self.total_pages_copied = 0      # pages moved by those copies
+        self.pages_transferred_in = 0    # cross-replica pages imported
+        self.pages_transferred_out = 0   # cross-replica pages exported
+        self.transfer_bytes_in = 0
+        self.transfer_bytes_out = 0
+        self.transfer_device_ops = 0     # batched export/import dispatches
 
         self._step = jax.jit(self._step_impl, donate_argnums=(1,))
         self._copy_pages = jax.jit(paged.copy_pages, donate_argnums=(0,))
+        self._import_pages = jax.jit(paged.import_pages, donate_argnums=(0,))
 
     # ----------------------------------------------------------- jit body
     def _step_impl(self, params, cache, cur_token, pos, decode_tables,
@@ -502,6 +513,8 @@ class PagedDecodeEngine:
         if srcs:
             self.cache = self._copy_pages(self.cache, jnp.asarray(srcs),
                                           jnp.asarray(dsts))
+            self.total_copy_ops += 1
+            self.total_pages_copied += len(srcs)
 
     def _promote_follower(self, st: _SlotState, leader_pages: List[int]) -> None:
         """The group's prefill leader was aborted before the fork: hand its
@@ -646,6 +659,117 @@ class PagedDecodeEngine:
             written = ret.length if ret.phase == _DECODE else ret.prefill_done
             content = ret.content if ret.content is not None else ret.prompt
             self._release_pages(ret.pages, content, written, ret.epoch)
+
+    # ------------------------------------------- cross-replica page transfer
+    def export_retained(self, request_id: int) -> Optional[dict]:
+        """Extract a retained request's pages into a host-side record another
+        replica can ``import_retained``.  One batched gather + one device_get
+        — no per-page dispatch.  The local record is NOT released: the caller
+        releases it only after the import landed, so a failed transfer leaves
+        in-place resume intact."""
+        ret = self.retained.get(request_id)
+        if ret is None:
+            return None
+        t = paged.export_pages(self.cache, ret.pages)
+        self.pages_transferred_out += t.num_pages
+        self.transfer_bytes_out += t.nbytes
+        self.transfer_device_ops += 1
+        return {
+            "transfer": t, "phase": ret.phase, "prompt": ret.prompt,
+            "prefill_done": ret.prefill_done, "length": ret.length,
+            "last_token": ret.last_token, "content": ret.content,
+            "epoch": ret.epoch, "home_epoch": self._weight_epoch,
+            "kv_quant": self.kv_quant,
+        }
+
+    def import_retained(self, request_id: int, record: dict) -> bool:
+        """Re-admit an exported retained record into THIS replica's pool via
+        one batched scatter, recreating the ``retained`` entry so the normal
+        ``can_resume``/``resume_request`` path picks it up — the migrated
+        request resumes with zero re-prefill.  Returns False (and imports
+        nothing) when the record can't land here: quant-mode mismatch, rid
+        collision, or the pool can't cover the pages."""
+        t: paged.PageTransfer = record["transfer"]
+        if (record.get("kv_quant", "off") != self.kv_quant
+                or request_id in self.retained
+                or not self._can_cover(t.num_pages)):
+            return False
+        pages = self._alloc(t.num_pages)
+        self.cache = self._import_pages(
+            self.cache, jnp.asarray(pages, jnp.int32), t)
+        self.pages_transferred_in += t.num_pages
+        self.transfer_bytes_in += t.nbytes
+        self.transfer_device_ops += 1
+        # Epoch translation: the KV is current-policy only if it was current
+        # at home AND home and here sit at the same weight epoch.  A stale
+        # stamp (never equal to a future epoch) keeps old-policy KV out of
+        # the prefix cache on release — it never affects decode itself, so
+        # greedy byte-identity is preserved either way.
+        current = (record["epoch"] == record["home_epoch"]
+                   and record["home_epoch"] == self._weight_epoch)
+        self.retained[request_id] = _Retained(
+            pages=pages, phase=record["phase"], prompt=record["prompt"],
+            prefill_done=record["prefill_done"], length=record["length"],
+            last_token=record["last_token"], content=record["content"],
+            epoch=self._weight_epoch if current else self._weight_epoch - 1)
+        return True
+
+    def export_prefix(self, tokens) -> Optional[dict]:
+        """Extract this replica's cached prefix pages for ``tokens`` into a
+        host-side record (for a router-directed pull to another replica).
+        Like admission, the match is capped at ``len(tokens) - 1`` — the
+        final prompt token always prefills to produce first logits."""
+        if self.prefix_cache is None or len(tokens) < 2:
+            return None
+        tokens = np.asarray(tokens, np.int32).ravel()
+        path = self.prefix_cache._walk(tokens[:len(tokens) - 1])
+        if not path:
+            return None
+        pages = [n.page for n in path]
+        t = paged.export_pages(self.cache, pages)
+        self.pages_transferred_out += t.num_pages
+        self.transfer_bytes_out += t.nbytes
+        self.transfer_device_ops += 1
+        covered = tokens[:len(pages) * self.page_size].copy()
+        return {"transfer": t, "tokens": covered,
+                "home_epoch": self._weight_epoch, "kv_quant": self.kv_quant}
+
+    def import_prefix(self, record: dict) -> int:
+        """Admit a pulled prefix record into this replica's radix cache so an
+        incoming request prefills only its uncached tail.  Conservative by
+        design: a pull never evicts (plain free-page check), never imports
+        cross-epoch KV, and dedups against pages already cached here.
+        Returns the number of pages imported (0 = skipped, perf-only)."""
+        if (self.prefix_cache is None
+                or record.get("kv_quant", "off") != self.kv_quant
+                or record["home_epoch"] != self._weight_epoch):
+            return 0
+        t: paged.PageTransfer = record["transfer"]
+        tokens = record["tokens"]
+        have_nodes = self.prefix_cache._walk(tokens)
+        have = len(have_nodes)
+        if have >= t.num_pages:
+            return 0
+        need = t.num_pages - have
+        if need > self.pool.pages_free:
+            return 0
+        sub = paged.PageTransfer(
+            k=t.k[:, have:], v=t.v[:, have:],
+            k_scales=None if t.k_scales is None else t.k_scales[:, have:],
+            v_scales=None if t.v_scales is None else t.v_scales[:, have:])
+        pages = self._alloc(need)
+        self.cache = self._import_pages(
+            self.cache, jnp.asarray(pages, jnp.int32), sub)
+        self.pages_transferred_in += need
+        self.transfer_bytes_in += sub.nbytes
+        self.transfer_device_ops += 1
+        # insert() takes the cache's own ref on each new page: the shared
+        # prefix [0, have) dedups onto existing nodes and only the tail
+        # binds the freshly imported pages.
+        full = [n.page for n in have_nodes] + pages
+        self.prefix_cache.insert(tokens, full)
+        self.pool.release(pages)
+        return need
 
     # ------------------------------------------------------------ auditing
     def audit_pages(self) -> None:

@@ -1,0 +1,377 @@
+"""Cross-replica KV page transfer + fleet-global cache-aware routing.
+
+Covers the transfer primitive (``export_pages``/``import_pages`` round
+trips, scales carried under ``kv_quant=int8``), the engine-level retained
+export/import (zero-re-prefill migrated resume, byte-identical greedy
+output), the prefix pull path, the router-owned ``FleetRadixIndex``
+(consistency with every replica's local tree across insert/evict/flush,
+verified by ``fleet_audit``), two-tier cache-aware placement, and a churn
+sweep with kill/drain under cache-aware routing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import tiny
+
+from repro.core.llm_proxy import LLMProxy
+from repro.core.rollout_client import RolloutClient
+from repro.core.router import FleetRadixIndex, ProxyRouter
+from repro.core.types import RolloutTask, next_uid
+from repro.models import get_api
+from repro.models import paged
+from repro.rollout.paged_engine import PagedDecodeEngine
+
+
+@pytest.fixture(scope="module")
+def paged_setup():
+    cfg = tiny("qwen3-4b", vocab_size=32)
+    api = get_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _paged(api, params, **kw):
+    base = dict(num_slots=4, max_total_len=64, page_size=8, prefill_chunk=8,
+                eos_id=99, temperature=0.0)
+    base.update(kw)
+    return PagedDecodeEngine(api, params, **base)
+
+
+def _fleet(api, params, n, **kw):
+    engines = [_paged(api, params, **kw) for _ in range(n)]
+    proxies = [LLMProxy(e, name=f"pt_proxy_{i}")
+               for i, e in enumerate(engines)]
+    return engines, proxies
+
+
+def _task(budget, prompt, **meta):
+    return RolloutTask(task_id=next_uid(), prompt_id=0, replica_idx=0,
+                       prompt_tokens=np.asarray(prompt, np.int32),
+                       max_new_tokens=budget, meta=dict(meta))
+
+
+def _drain(engine):
+    out = {}
+    while engine.req_to_slot:
+        for rid, toks, _ in engine.step():
+            out[rid] = list(toks)
+    return out
+
+
+def _pump(proxies, router=None, max_steps=3000):
+    """Lockstep drive until the fleet quiesces."""
+    for _ in range(max_steps):
+        if not any(p.step_once() for p in proxies):
+            if all(p.num_active == 0 and p.num_pending == 0
+                   for p in proxies):
+                return
+    raise AssertionError("fleet did not quiesce")
+
+
+# ------------------------------------------------------ transfer primitive
+@pytest.mark.parametrize("kv_quant", ["off", "int8"])
+def test_export_import_pages_roundtrip(paged_setup, kv_quant):
+    """export_pages → import_pages into fresh physical slots must preserve
+    page contents bit-for-bit, scales included under int8."""
+    cfg, api, params = paged_setup
+    key = jax.random.PRNGKey(1)
+    cache = paged.init_paged_cache(cfg, num_pages=8, page_size=4,
+                                   kv_quant=kv_quant)
+    fill = jax.random.normal(key, cache.k_pages.shape).astype(
+        cache.k_pages.dtype)
+    fill2 = jax.random.normal(jax.random.PRNGKey(2),
+                              cache.v_pages.shape).astype(cache.v_pages.dtype)
+    cache = cache._replace(k_pages=fill, v_pages=fill2)
+    if kv_quant == "int8":
+        ks = jax.random.uniform(key, cache.k_scales.shape, jnp.float32)
+        vs = jax.random.uniform(key, cache.v_scales.shape, jnp.float32)
+        cache = cache._replace(k_scales=ks, v_scales=vs)
+    src, dst = [1, 3, 5], [2, 4, 6]
+    t = paged.export_pages(cache, src)
+    assert t.num_pages == 3 and t.nbytes > 0
+    assert (t.k_scales is not None) == (kv_quant == "int8")
+    out = paged.import_pages(cache, dst, t)
+    np.testing.assert_array_equal(np.asarray(out.k_pages[:, dst]), t.k)
+    np.testing.assert_array_equal(np.asarray(out.v_pages[:, dst]), t.v)
+    if kv_quant == "int8":
+        np.testing.assert_array_equal(np.asarray(out.k_scales[:, dst]),
+                                      t.k_scales)
+        np.testing.assert_array_equal(np.asarray(out.v_scales[:, dst]),
+                                      t.v_scales)
+    # untouched pages stay untouched
+    np.testing.assert_array_equal(np.asarray(out.k_pages[:, src]),
+                                  np.asarray(cache.k_pages[:, src]))
+
+
+def test_import_pages_validates(paged_setup):
+    cfg, api, params = paged_setup
+    cache = paged.init_paged_cache(cfg, num_pages=4, page_size=2)
+    t = paged.export_pages(cache, [1, 2])
+    with pytest.raises(ValueError):
+        paged.import_pages(cache, [1], t)          # count mismatch
+    qcache = paged.init_paged_cache(cfg, num_pages=4, page_size=2,
+                                    kv_quant="int8")
+    with pytest.raises(ValueError):
+        paged.import_pages(qcache, [1, 2], t)      # quant-mode mismatch
+
+
+# -------------------------------------------- engine-level retained moves
+@pytest.mark.parametrize("kv_quant", ["off", "int8"])
+def test_migrate_then_decode_byte_identical(paged_setup, kv_quant):
+    """The satellite bugfix contract: pages moved mid-decode carry their
+    k/v scales, so migrate-then-decode is byte-identical to the
+    uninterrupted run — under quantized KV too."""
+    cfg, api, params = paged_setup
+    prompt = np.asarray([3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5], np.int32)
+    budget = 24
+
+    ref = _paged(api, params, kv_quant=kv_quant)
+    ref.add_request(0, prompt, budget)
+    base = _drain(ref)[0]
+
+    a = _paged(api, params, kv_quant=kv_quant)
+    b = _paged(api, params, kv_quant=kv_quant)
+    a.add_request(1, prompt, budget)
+    for _ in range(7):
+        a.step()
+    res = a.abort(1, retain=True)
+    assert res.resumable
+    record = a.export_retained(1)
+    assert record is not None and record["kv_quant"] == kv_quant
+    assert b.import_retained(1, record)
+    a.release_retained(1)
+    done = list(res.tokens)
+    b.resume_request(1, 2, budget - len(done))
+    got = done + _drain(b)[2]
+    assert got == base, "migrated decode diverged from uninterrupted run"
+    assert b.total_prefill_tokens == 0, "transfer must re-prefill nothing"
+    assert a.pages_transferred_out == b.pages_transferred_in > 0
+    assert a.transfer_bytes_out == b.transfer_bytes_in > 0
+    # one batched device op per export/import — no per-page dispatch
+    assert a.transfer_device_ops == 1 and b.transfer_device_ops == 1
+    a.audit_pages()
+    b.audit_pages()
+
+
+def test_import_retained_rejects_mismatch_and_pressure(paged_setup):
+    cfg, api, params = paged_setup
+    prompt = np.arange(1, 10, dtype=np.int32)
+    a = _paged(api, params)
+    a.add_request(1, prompt, 16)
+    for _ in range(4):
+        a.step()
+    a.abort(1, retain=True)
+    record = a.export_retained(1)
+    # quant-mode mismatch
+    q = _paged(api, params, kv_quant="int8")
+    assert not q.import_retained(1, record)
+    # rid collision
+    b = _paged(api, params)
+    assert b.import_retained(1, record)
+    assert not b.import_retained(1, record)
+    # pool pressure: a tiny pool that cannot cover the pages
+    small = _paged(api, params, num_pages=3)
+    assert not small.import_retained(2, record)
+    a.release_retained(1)
+    b.release_retained(1)
+    a.audit_pages()
+    b.audit_pages()
+    small.audit_pages()
+
+
+def test_prefix_export_import_pull(paged_setup):
+    """A pulled prefix lands in the target's radix cache and the next
+    admission of the same prompt prefills only the uncached tail —
+    byte-identical output to a cold engine."""
+    cfg, api, params = paged_setup
+    prompt = np.arange(1, 21, dtype=np.int32)   # 20 tokens, page_size 8
+    a = _paged(api, params, prefix_cache=True)
+    b = _paged(api, params, prefix_cache=True)
+    a.add_request(1, prompt, 8)
+    _drain(a)
+    rec = a.export_prefix(prompt)
+    assert rec is not None
+    # match cap: 19 matchable tokens → 2 full pages of 8
+    assert rec["transfer"].num_pages == 2
+    pulled = b.import_prefix(rec)
+    assert pulled == 2
+    # re-import dedups against what is already cached
+    assert b.import_prefix(rec) == 0
+    b.add_request(5, prompt, 8)
+    out_warm = _drain(b)[5]
+    cold = _paged(api, params, prefix_cache=True)
+    cold.add_request(9, prompt, 8)
+    assert out_warm == _drain(cold)[9]
+    assert b.total_prefill_tokens == len(prompt) - 16, \
+        "pulled pages must shrink prefill to the uncached tail"
+    a.audit_pages()
+    b.audit_pages()
+
+
+def test_import_prefix_skips_cross_epoch(paged_setup):
+    cfg, api, params = paged_setup
+    prompt = np.arange(1, 21, dtype=np.int32)
+    a = _paged(api, params, prefix_cache=True)
+    b = _paged(api, params, prefix_cache=True)
+    a.add_request(1, prompt, 8)
+    _drain(a)
+    rec = a.export_prefix(prompt)
+    b.update_weights(params)        # b now one epoch ahead of the record
+    assert b.import_prefix(rec) == 0
+    b.audit_pages()
+
+
+# ------------------------------------------------------- fleet radix index
+def test_fleet_index_tracks_insert_evict_clear(paged_setup):
+    cfg, api, params = paged_setup
+    engines, proxies = _fleet(api, params, 2, prefix_cache=True)
+    router = ProxyRouter(proxies, cache_aware=True)
+    idx = router.fleet_index
+    assert idx is not None and idx.page_size == 8
+    prompt = np.arange(1, 21, dtype=np.int32)
+    router.generate(_task(6, prompt), 0, lambda r: None)
+    _pump(proxies)
+    assert idx.inserts > 0
+    router.fleet_audit()            # index == local trees
+    # weight sync flushes every cache; the index must follow
+    # (async staging applies inline on un-started lockstep proxies)
+    assert router.update_weights_async(params).wait(30)
+    assert all(not e.prefix_cache.paths() for e in engines)
+    assert all(not idx.paths_for(i) for i in range(2))
+    router.fleet_audit()
+    # repopulate, then evict under pressure on the owning replica
+    router.generate(_task(6, prompt), 1, lambda r: None)
+    _pump(proxies)
+    router.fleet_audit()
+    for e in engines:
+        if e.prefix_cache.paths():
+            e.prefix_cache.evict(10 ** 6)
+    router.fleet_audit()
+
+
+def test_fleet_index_best_prefix_and_drop():
+    idx = FleetRadixIndex()
+    idx.page_size = 2
+    idx.on_insert(0, ((1, 2),))
+    idx.on_insert(0, ((1, 2), (3, 4)))
+    idx.on_insert(1, ((1, 2),))
+    best = idx.best_prefix([1, 2, 3, 4, 5])
+    assert best == {0: 4, 1: 2}
+    idx.on_evict(0, ((1, 2), (3, 4)))
+    assert idx.best_prefix([1, 2, 3, 4]) == {0: 2, 1: 2}
+    idx.drop_replica(0)
+    assert idx.best_prefix([1, 2, 3, 4]) == {1: 2}
+    assert idx.paths_for(0) == set()
+    idx.on_clear(1)
+    assert idx.best_prefix([1, 2]) == {}
+
+
+# --------------------------------------------------- cache-aware placement
+def test_cache_affinity_routes_to_prefix_holder(paged_setup):
+    """Within the slack band the replica holding the longest cached prefix
+    wins placement even when it is not least-loaded."""
+    cfg, api, params = paged_setup
+    engines, proxies = _fleet(api, params, 2, prefix_cache=True)
+    router = ProxyRouter(proxies, cache_aware=True,
+                         cache_affinity_slack=10 ** 6)
+    shared = np.arange(1, 21, dtype=np.int32)
+    router.generate(_task(6, shared), 0, lambda r: None)
+    _pump(proxies)
+    holder = next(i for i, e in enumerate(engines)
+                  if e.prefix_cache.paths())
+    # the same preamble again: must land on the holder despite its load
+    hits_before = engines[holder].prefix_cache.hits
+    router.generate(_task(6, shared), 0, lambda r: None)
+    _pump(proxies)
+    assert router.cache_routed >= 1
+    assert engines[holder].prefix_cache.hits > hits_before
+    router.fleet_audit()
+
+
+def test_zero_slack_pulls_prefix_to_least_loaded(paged_setup):
+    """Outside the band (slack=0 and the holder loaded) placement goes
+    least-loaded and the prefix pages are pulled across first."""
+    cfg, api, params = paged_setup
+    engines, proxies = _fleet(api, params, 2, prefix_cache=True)
+    router = ProxyRouter(proxies, cache_aware=True, cache_affinity_slack=0)
+    shared = np.arange(1, 21, dtype=np.int32)
+    router.generate(_task(6, shared), 0, lambda r: None)
+    _pump(proxies)
+    holder = next(i for i, e in enumerate(engines)
+                  if e.prefix_cache.paths())
+    other = 1 - holder
+    # load the holder so the band test fails for it
+    busy = _task(20, np.asarray([9, 8, 7], np.int32))
+    router.generate(busy, 0, lambda r: None)
+    router.generate(_task(6, shared), 0, lambda r: None)
+    _pump(proxies)
+    assert router.cache_pulls >= 1
+    assert engines[other].pages_transferred_in > 0
+    assert router.pages_transferred > 0 and router.transfer_bytes > 0
+    # the pull shrank the second admission's prefill on the target
+    assert engines[other].cache_hit_tokens > 0
+    router.fleet_audit()
+
+
+def test_cache_aware_off_is_least_loaded(paged_setup):
+    cfg, api, params = paged_setup
+    engines, proxies = _fleet(api, params, 2, prefix_cache=True)
+    router = ProxyRouter(proxies)          # cache_aware defaults off
+    assert router.fleet_index is None
+    shared = np.arange(1, 21, dtype=np.int32)
+    for _ in range(3):
+        router.generate(_task(6, shared), 0, lambda r: None)
+        _pump(proxies)
+    assert router.cache_routed == 0 and router.cache_pulls == 0
+    router.fleet_audit()
+
+
+# ------------------------------------------------- churn under cache-aware
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_churn_kill_drain_under_cache_aware(paged_setup):
+    """Kill + drain churn with cache-aware routing on: every handle
+    resolves, no page leaks, and the fleet index never drifts from the
+    local trees (dead replicas dropped, flushes propagated)."""
+    from repro.core.faults import wrap_fleet
+    cfg, api, params = paged_setup
+    engines = [_paged(api, params, prefix_cache=True, num_slots=2)
+               for _ in range(3)]
+    proxies = wrap_fleet([LLMProxy(e, name=f"churn_{i}")
+                          for i, e in enumerate(engines)])
+    router = ProxyRouter(proxies, cache_aware=True, cache_affinity_slack=64)
+    client = RolloutClient(router, version_fn=lambda: 0)
+    shared = np.arange(1, 17, dtype=np.int32)
+    handles = []
+
+    def submit(n):
+        for k in range(n):
+            suffix = np.asarray([22 + (k % 7)], np.int32)
+            handles.append(client.submit(
+                _task(6, np.concatenate([shared, suffix])), version=0))
+
+    submit(6)
+    for _ in range(40):
+        any(p.step_once() for p in proxies)
+    router.drain(0)
+    submit(4)
+    for _ in range(40):
+        any(p.step_once() for p in proxies)
+    proxies[2].kill()
+    router.probe_health()
+    submit(4)
+    for _ in range(4000):
+        # step BEFORE checking: freshly submitted work sits in command
+        # queues where num_active/num_pending cannot see it yet
+        stepped = any(p.step_once() for p in proxies
+                      if not p._dead.is_set())
+        if not stepped and not router.num_active and not router.num_pending:
+            break
+    else:
+        raise AssertionError("churned fleet did not quiesce")
+    for h in handles:
+        h.result(timeout=30)
+    for _ in range(20):
+        any(p.step_once() for p in proxies if not p._dead.is_set())
+    router.fleet_audit()

@@ -440,7 +440,9 @@ def test_cross_replica_resume_after_weight_sync(paged_setup):
     """Acceptance: a request aborted-with-retain by a fleet-wide weight
     sync on a DRAINING replica migrates to the other replica and resolves
     exactly once — greedy output identical to the uninterrupted run, legs
-    version-tagged across the sync."""
+    version-tagged across the sync.  The router moves the parked pages
+    across (page-transfer fast path), so the target resumes with ZERO
+    re-prefill — no concatenated prompt is recomputed."""
     cfg, api, params = paged_setup
     prompt = np.asarray([2, 9, 4, 3, 7], np.int32)
     budget = 40
@@ -483,9 +485,15 @@ def test_cross_replica_resume_after_weight_sync(paged_setup):
     assert len(res.legs) >= 2
     assert res.legs[0][0] == 0 and res.legs[-1][0] == 1
     assert sum(n for _, n in res.legs) == budget
-    assert engines[other].total_prefill_tokens > prefill_other_before, \
-        "target replica re-prefilled the concatenated prefix"
+    assert engines[other].total_prefill_tokens == prefill_other_before, \
+        "page transfer must make the migrated resume zero-re-prefill"
+    assert engines[other].pages_transferred_in > 0
+    assert engines[home].pages_transferred_out == \
+        engines[other].pages_transferred_in
+    assert router.pages_transferred == engines[other].pages_transferred_in
+    assert router.transfer_bytes > 0
     assert not engines[home].retained, "home released the parked pages"
+    assert not engines[other].retained, "target consumed the imported record"
     for e in engines:
         e.audit_pages()
     assert proxies[home].load() == 0 and proxies[other].load() == 0
